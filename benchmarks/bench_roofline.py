@@ -1,0 +1,67 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads artifacts/dryrun/<arch>__<shape>__single.json and prints per-cell:
+compute/memory/collective seconds (v5e-class constants), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and the per-device memory fit.
+"""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import List
+
+from .common import BenchRow
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+HBM_PER_CHIP = 16 * 2**30  # v5e-class
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    cells = sorted(ARTIFACTS.glob("*__single.json"))
+    if not cells:
+        return [
+            BenchRow(
+                name="roofline_missing",
+                us_per_call=0.0,
+                derived="run `python -m repro.launch.dryrun --all` first",
+            )
+        ]
+    n_ok = n_skip = n_err = 0
+    for path in cells:
+        rec = json.loads(path.read_text())
+        name = f"roofline_{rec['arch']}_{rec['shape']}"
+        if rec["status"] == "skipped":
+            n_skip += 1
+            rows.append(BenchRow(name=name, us_per_call=0.0, derived=f"N/A: {rec['reason']}"))
+            continue
+        if rec["status"] != "ok" or "roofline" not in rec:
+            n_err += 1
+            rows.append(
+                BenchRow(name=name, us_per_call=0.0, derived=f"ERROR: {rec.get('error', '?')[:80]}")
+            )
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        mem = rec["main"]["memory"]["peak_estimate_bytes"]
+        fits = "fits" if mem <= HBM_PER_CHIP else f"OVER ({mem / 2**30:.1f}GiB)"
+        rows.append(
+            BenchRow(
+                name=name,
+                us_per_call=rec.get("compile_seconds", 0.0) * 1e6,
+                derived=(
+                    f"compute={r['compute_s'] * 1e3:.1f}ms mem={r['memory_s'] * 1e3:.1f}ms "
+                    f"coll={r['collective_s'] * 1e3:.1f}ms bottleneck={r['bottleneck']} "
+                    f"flops_ratio={r['model_flops_ratio']:.2f} hbm={fits}"
+                ),
+            )
+        )
+    rows.append(
+        BenchRow(
+            name="roofline_summary",
+            us_per_call=0.0,
+            derived=f"{n_ok} cells ok, {n_skip} skipped (long_500k full-attn), {n_err} errors",
+        )
+    )
+    return rows

@@ -1,0 +1,53 @@
+"""Benchmark driver: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig14]``
+
+Prints the ``name,us_per_call,derived`` CSV contract.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from .common import HEADER
+
+SUITES = (
+    ("fig8_rtt", "benchmarks.bench_rtt"),
+    ("fig11_12_ecmp", "benchmarks.bench_ecmp"),
+    ("eq3_11_collision", "benchmarks.bench_collision"),
+    ("fig9_13_failover", "benchmarks.bench_failover"),
+    ("table1_tenancy", "benchmarks.bench_tenancy"),
+    ("fig14_training", "benchmarks.bench_training"),
+    ("wan_sync_beyond_paper", "benchmarks.bench_wan_sync"),
+    ("roofline", "benchmarks.bench_roofline"),
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, help="substring filter on suite name")
+    args = ap.parse_args()
+
+    import importlib
+
+    print(HEADER)
+    failures = []
+    for name, module in SUITES:
+        if args.only and args.only not in name:
+            continue
+        try:
+            mod = importlib.import_module(module)
+            for row in mod.run():
+                print(row.csv(), flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, e))
+            print(f"{name},0.0,SUITE FAILED: {e}", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        raise SystemExit(f"{len(failures)} benchmark suites failed: {[f[0] for f in failures]}")
+
+
+if __name__ == "__main__":
+    main()

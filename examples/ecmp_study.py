@@ -1,0 +1,67 @@
+"""ECMP path-diversity study: sweep bin counts and QP correlation models.
+
+Extends the paper's §5.2 experiment: where Figs. 11/12 fix k=4 bins, this
+sweeps k in {1 (=baseline), 2, 4, 8, 16}, both QP-allocation pathologies,
+and both measurement points, printing the full load-factor grid — the
+experiment you'd run to pick k for a new fabric (the paper: "our
+preliminary analysis showed 4 bins provided the most stable improvement").
+
+Run:  PYTHONPATH=src python examples/ecmp_study.py
+"""
+
+import numpy as np
+
+from repro.core.fabric import Fabric
+from repro.core.flows import Flow, route_flows
+from repro.core.metrics import load_factor
+from repro.core.ports import (
+    ALIASING_STRIDE,
+    make_correlated_queue_pairs,
+    make_queue_pairs,
+    qp_aware_ports,
+)
+
+TRIALS = 80
+QPS = (4, 8, 16, 32)
+
+
+def measure(fabric, qps_list, k):
+    """Mean leaf load factor for one allocator config."""
+    out = []
+    for qps in qps_list:
+        ports = qp_aware_ports(qps, k=k) if k > 1 else [
+            # k=1 degenerates to the stock hash over the full range
+            49192 + (p - 49192) % 16384 for p in qp_aware_ports(qps, k=1)
+        ]
+        flows = [Flow("d1h1", "d2h2", 1_000_000, qp, port)
+                 for qp, port in zip(qps, ports)]
+        route_flows(fabric, flows)
+        links = dict(fabric.uplink_bytes("d1l1", toward="spine"))
+        for spine in ("d1s1", "d1s2"):
+            links.setdefault(("d1l1", spine), 0)
+        out.append(load_factor(links, threshold=-1).load_factor)
+    return float(np.mean(out))
+
+
+def main() -> None:
+    fabric = Fabric()
+    rng = np.random.default_rng(7)
+    for model_name, make in (
+        ("correlated (production pathology)", make_correlated_queue_pairs),
+        ("sequential (high entropy)", lambda n, base_number: make_queue_pairs(n, base_number=base_number)),
+    ):
+        print(f"\n=== QP model: {model_name} ===")
+        print(f"{'QPs':>5s} " + " ".join(f"k={k:<6d}" for k in (1, 2, 4, 8, 16)))
+        for n in QPS:
+            qps_list = [make(n, base_number=int(rng.integers(0, 2**31))) for _ in range(TRIALS)]
+            row = [measure(fabric, qps_list, k) for k in (1, 2, 4, 8, 16)]
+            best = min(range(len(row)), key=lambda i: row[i])
+            cells = " ".join(
+                f"{v:.3f}{'*' if i == best else ' '}" for i, v in enumerate(row)
+            )
+            print(f"{n:5d} {cells}")
+    print("\n(* = lowest load factor; paper fixed k=4 as most stable)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,67 @@
+"""Failover drill: WAN link dies mid-training; the job survives.
+
+The paper's §5.3 at the system level: continuous training over the
+emulated fabric, a WAN link failure injected mid-run, BFD-speed detection
+vs BGP-timer detection compared end to end — including what each costs in
+lost training work (runtime/failure.py's recovery economics), and the
+fabric-level proof that traffic rerouted with zero blackholing.
+
+Run:  PYTHONPATH=src python examples/failover_drill.py
+"""
+
+from repro.core.bfd import FailureDetector
+from repro.core.evpn import EvpnControlPlane
+from repro.core.fabric import Fabric
+from repro.runtime.failure import (
+    HeartbeatMonitor,
+    optimal_checkpoint_interval,
+    plan_recovery,
+)
+
+
+def main() -> None:
+    fabric = Fabric()
+    evpn = EvpnControlPlane(fabric)
+    det = FailureDetector(fabric, evpn)
+    wan = tuple(sorted(fabric.wan_links[0]))
+    step_time_s, ckpt_bytes = 8.0, 3 * 328e6  # an 82M fp32 job
+
+    print("=== network layer (paper Figs. 9/13) ===")
+    for mech in ("bfd", "bgp"):
+        tl = det.fail_and_recover(wan, mechanism=mech)
+        det.restore(wan)
+        unit = "ms" if mech == "bfd" else "s"
+        val = tl.recovery_ms if mech == "bfd" else tl.recovery_ms / 1e3
+        print(f"{mech.upper():4s}: link {wan[0]}<->{wan[1]} recovery {val:.0f} {unit}")
+        for t, event in tl.events:
+            print(f"      t={t:10.1f} ms  {event}")
+
+    print("\n=== reroute proof ===")
+    det.fail_and_recover(wan, mechanism="bfd")
+    fabric.reset_counters()
+    for port in range(49192, 49192 + 64):
+        path = fabric.send("d1h1", "d2h1", 1000, src_port=port)
+        assert (wan[0], wan[1]) not in list(zip(path, path[1:]))
+    det.restore(wan)
+    print("64/64 post-failure flows rerouted; 0 blackholed")
+
+    print("\n=== training layer (the BFD insight applied upward) ===")
+    mon = HeartbeatMonitor(["pod0", "pod1"], interval_ms=100, detect_mult=3)
+    for detect_ms, label in ((mon.detect_time_ms(), "heartbeats (BFD-style)"),
+                             (180_000.0, "RPC hold-timeout (BGP-style)")):
+        plan = plan_recovery(
+            step=1000, last_checkpoint_step=985, step_time_s=step_time_s,
+            detect_time_ms=detect_ms, checkpoint_bytes=ckpt_bytes,
+        )
+        print(f"{label:28s}: detect {plan.detection_s:7.2f}s + restore "
+              f"{plan.restore_s:.2f}s + remesh {plan.remesh_s:.0f}s "
+              f"+ lost work {plan.lost_work_s:.0f}s = {plan.total_cost_s:.0f}s")
+
+    interval = optimal_checkpoint_interval(
+        step_time_s=step_time_s, save_overhead_s=1.0, mtbf_s=6 * 3600
+    )
+    print(f"\nYoung/Daly checkpoint cadence for this job: every {interval} steps")
+
+
+if __name__ == "__main__":
+    main()

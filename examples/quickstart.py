@@ -1,0 +1,67 @@
+"""Quickstart: the whole stack in ~60 seconds on CPU.
+
+1. Build the emulated 2-DC EVPN-VXLAN fabric, ping across the WAN.
+2. Allocate queue-pair source ports both ways (Algorithm 1 vs stock RXE).
+3. Cost every WAN gradient-sync strategy for a real model's gradients.
+4. Train a smoke-scale model for a few steps with the geo trainer.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax
+
+from repro.configs import get_smoke_config
+from repro.core import (
+    GeoFabric,
+    SYNC_STRATEGIES,
+    allocate_ports,
+    make_correlated_queue_pairs,
+)
+from repro.launch.mesh import make_host_mesh
+from repro.launch.shapes import params_specs
+from repro.runtime import GeoTrainer, TrainerConfig
+
+
+def main() -> None:
+    # -- 1. fabric -----------------------------------------------------------
+    geo = GeoFabric(num_pods=2, workers_per_pod=2, seed=0)
+    rtt = geo.rtt_ms(count=20)
+    print(f"[fabric] 2 DCs up; inter-DC RTT {rtt.mean():.1f} ms (paper ~22 ms)")
+
+    # -- 2. Algorithm 1 ------------------------------------------------------
+    qps = make_correlated_queue_pairs(8, base_number=1234)
+    base = allocate_ports(qps, scheme="baseline")
+    ours = allocate_ports(qps, scheme="qp_aware")
+    print(f"[ports] stock RXE:   {sorted(base)} ({len(set(base))} distinct)")
+    print(f"[ports] Algorithm 1: {sorted(ours)} ({len(set(ours))} distinct)")
+
+    # -- 3. WAN sync costing --------------------------------------------------
+    cfg = get_smoke_config("distilgpt2-82m")
+    grad_bytes = sum(
+        s.size * 4 for s in jax.tree.leaves(params_specs(cfg))
+    )
+    print(f"[sync]  gradient volume {grad_bytes / 1e6:.1f} MB across the WAN:")
+    for strategy in SYNC_STRATEGIES:
+        c = geo.sync_cost(strategy, grad_bytes, jitter=False)
+        print(f"        {strategy:10s} {c.amortized_seconds * 1e3:8.1f} ms/step "
+              f"({c.wan_bytes / 1e6:6.1f} MB on WAN links)")
+
+    # -- 4. train -------------------------------------------------------------
+    from repro.optim import AdamWConfig
+
+    trainer = GeoTrainer(
+        cfg, make_host_mesh(),
+        trainer_cfg=TrainerConfig(seq_len=64, global_batch=4, steps=20,
+                                  strategy="allreduce", log_every=5,
+                                  opt=AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=400)),
+        checkpoint_dir="/tmp/repro_quickstart_ckpt",
+        geo=geo,
+    )
+    result = trainer.run()
+    losses = [m["loss"] for m in result["metrics"]]
+    print(f"[train] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps "
+          f"(checkpointed at step {result['last_checkpoint']})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from .store import AsyncCheckpointer, CheckpointInfo, CheckpointStore
+
+__all__ = ["AsyncCheckpointer", "CheckpointInfo", "CheckpointStore"]

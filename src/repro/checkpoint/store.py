@@ -1,0 +1,188 @@
+"""Fault-tolerant checkpointing: atomic, checksummed, async, GC'd.
+
+Layout (one directory per step):
+
+    <root>/step_000123/
+        manifest.json     # tree structure, leaf paths, crc32s, metadata
+        arr_00000.npy ... # one file per leaf (host's shard view)
+    <root>/step_000123.COMMITTED   # atomic commit marker
+
+Writes go to ``step_X.tmp-<pid>`` and are renamed into place, then the
+commit marker is written — a crashed writer can never produce a
+checkpoint that ``latest_step`` would pick up.  Every leaf carries a
+crc32; restore verifies and raises on corruption.  ``AsyncCheckpointer``
+snapshots to host memory synchronously (cheap) and writes on a worker
+thread so the train loop never blocks on disk.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+import threading
+import time
+import zlib
+from pathlib import Path
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Tuple[List[Tuple[str, np.ndarray]], Any]:
+    leaves, treedef = jax.tree.flatten(tree)
+    paths = jax.tree_util.tree_flatten_with_path(tree)[0]
+    named = []
+    for (path, leaf) in paths:
+        key = jax.tree_util.keystr(path)
+        named.append((key, np.asarray(leaf)))
+    return named, treedef
+
+
+@dataclasses.dataclass
+class CheckpointInfo:
+    step: int
+    path: Path
+    metadata: Dict[str, Any]
+
+
+class CheckpointStore:
+    def __init__(self, root: str | Path, *, keep: int = 3):
+        self.root = Path(root)
+        self.root.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+
+    # -- paths ---------------------------------------------------------------
+
+    def _dir(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}"
+
+    def _marker(self, step: int) -> Path:
+        return self.root / f"step_{step:08d}.COMMITTED"
+
+    def steps(self) -> List[int]:
+        out = []
+        for p in self.root.glob("step_*.COMMITTED"):
+            try:
+                out.append(int(p.stem.split("_")[1].split(".")[0]))
+            except (IndexError, ValueError):
+                continue
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    # -- save ------------------------------------------------------------------
+
+    def save(self, step: int, tree, metadata: Optional[Dict[str, Any]] = None) -> CheckpointInfo:
+        named, _ = _flatten(tree)
+        tmp = self.root / f"step_{step:08d}.tmp-{os.getpid()}-{threading.get_ident()}"
+        if tmp.exists():
+            shutil.rmtree(tmp)
+        tmp.mkdir(parents=True)
+        manifest: Dict[str, Any] = {
+            "step": step,
+            "metadata": metadata or {},
+            "leaves": [],
+            "written_at": time.time(),
+        }
+        for i, (key, arr) in enumerate(named):
+            fname = f"arr_{i:05d}.npy"
+            np.save(tmp / fname, arr)
+            manifest["leaves"].append(
+                {
+                    "key": key,
+                    "file": fname,
+                    "shape": list(arr.shape),
+                    "dtype": str(arr.dtype),
+                    "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes()),
+                }
+            )
+        (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+        final = self._dir(step)
+        if final.exists():
+            shutil.rmtree(final)
+        tmp.rename(final)
+        self._marker(step).write_text(str(time.time()))
+        self.gc()
+        return CheckpointInfo(step=step, path=final, metadata=manifest["metadata"])
+
+    # -- restore -----------------------------------------------------------------
+
+    def restore(self, step: int, like) -> Tuple[Any, Dict[str, Any]]:
+        """Restore into the structure of ``like`` (a pytree of arrays or
+        ShapeDtypeStructs).  Verifies checksums; raises on mismatch."""
+        d = self._dir(step)
+        if not self._marker(step).exists():
+            raise FileNotFoundError(f"no committed checkpoint at step {step}")
+        manifest = json.loads((d / "manifest.json").read_text())
+        named_like, treedef = _flatten(
+            jax.tree.map(lambda a: np.zeros(a.shape, a.dtype), like)
+        )
+        by_key = {entry["key"]: entry for entry in manifest["leaves"]}
+        leaves = []
+        for key, placeholder in named_like:
+            entry = by_key.get(key)
+            if entry is None:
+                raise KeyError(f"checkpoint missing leaf {key}")
+            arr = np.load(d / entry["file"])
+            crc = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if crc != entry["crc32"]:
+                raise IOError(
+                    f"checksum mismatch for {key}: file corrupt "
+                    f"({crc} != {entry['crc32']})"
+                )
+            if list(arr.shape) != list(placeholder.shape):
+                raise ValueError(
+                    f"shape mismatch for {key}: {arr.shape} vs {placeholder.shape}"
+                )
+            leaves.append(arr)
+        return jax.tree.unflatten(treedef, leaves), manifest["metadata"]
+
+    def restore_latest(self, like):
+        step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.root}")
+        tree, meta = self.restore(step, like)
+        return step, tree, meta
+
+    # -- gc -------------------------------------------------------------------
+
+    def gc(self) -> None:
+        steps = self.steps()
+        for s in steps[: max(len(steps) - self.keep, 0)]:
+            shutil.rmtree(self._dir(s), ignore_errors=True)
+            self._marker(s).unlink(missing_ok=True)
+
+
+class AsyncCheckpointer:
+    """Snapshot-now, write-later checkpointing on a worker thread."""
+
+    def __init__(self, store: CheckpointStore):
+        self.store = store
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree, metadata=None) -> None:
+        self.wait()  # one in flight at a time
+        snapshot = jax.tree.map(lambda a: np.array(a, copy=True), tree)
+
+        def work():
+            try:
+                self.store.save(step, snapshot, metadata)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

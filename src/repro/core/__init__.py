@@ -1,0 +1,99 @@
+"""ScaleAcross core: emulated EVPN-VXLAN geo-distributed training fabric.
+
+The paper's primary contribution — an emulation framework for studying
+geo-distributed AI training over EVPN-VXLAN WAN overlays, plus the
+queue-pair-aware ECMP source-port allocator (Algorithm 1) — lives here.
+"""
+
+from .bfd import BfdSession, BgpHoldTimer, FailureDetector, RecoveryTimeline
+from .collision import (
+    collision_index,
+    collision_reduction,
+    compare_schemes,
+    expected_collisions,
+    monte_carlo_collisions,
+)
+from .evpn import EvpnControlPlane, RouteType2, RouteType3
+from .fabric import Fabric, FabricConfig, FiveTuple, UnreachableError, ecmp_hash
+from .flows import (
+    Flow,
+    hierarchical_flows,
+    parameter_server_flows,
+    ring_allreduce_flows,
+    route_flows,
+)
+from .geo import SYNC_STRATEGIES, GeoFabric, SyncCost
+from .metrics import LoadFactorResult, flow_entropy, load_factor
+from .ports import (
+    ALIASING_STRIDE,
+    ALIASING_STRIDE_STRONG,
+    NUM_PORT_OFFSETS,
+    ROCE_V2_BASE_PORT,
+    QueuePair,
+    allocate_ports,
+    hash_32,
+    make_correlated_queue_pairs,
+    make_queue_pairs,
+    qp_aware_port,
+    rxe_baseline_port,
+)
+from .tenancy import TenancyManager, Tenant
+from .wan import (
+    Netem,
+    NetemProfile,
+    PAPER_LAN,
+    PAPER_WAN,
+    TPU_DCI,
+    WanTimingModel,
+    ping_rtt,
+)
+
+__all__ = [
+    "ALIASING_STRIDE",
+    "BfdSession",
+    "BgpHoldTimer",
+    "EvpnControlPlane",
+    "Fabric",
+    "FabricConfig",
+    "FailureDetector",
+    "FiveTuple",
+    "Flow",
+    "GeoFabric",
+    "LoadFactorResult",
+    "Netem",
+    "NetemProfile",
+    "NUM_PORT_OFFSETS",
+    "PAPER_LAN",
+    "PAPER_WAN",
+    "QueuePair",
+    "RecoveryTimeline",
+    "RouteType2",
+    "RouteType3",
+    "SYNC_STRATEGIES",
+    "SyncCost",
+    "TenancyManager",
+    "Tenant",
+    "TPU_DCI",
+    "UnreachableError",
+    "WanTimingModel",
+    "allocate_ports",
+    "collision_index",
+    "collision_reduction",
+    "compare_schemes",
+    "ecmp_hash",
+    "expected_collisions",
+    "flow_entropy",
+    "hash_32",
+    "hierarchical_flows",
+    "load_factor",
+    "make_correlated_queue_pairs",
+    "make_queue_pairs",
+    "monte_carlo_collisions",
+    "parameter_server_flows",
+    "ping_rtt",
+    "qp_aware_port",
+    "ring_allreduce_flows",
+    "route_flows",
+    "rxe_baseline_port",
+    "ROCE_V2_BASE_PORT",
+]

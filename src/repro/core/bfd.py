@@ -1,0 +1,172 @@
+"""Failure detection and convergence timing (paper §3.4, §5.3).
+
+Two detection regimes, both as explicit state machines over a simulated
+clock so the experiments are deterministic:
+
+* :class:`BfdSession` — Bidirectional Forwarding Detection (RFC 5880)
+  async mode: a failure is declared after ``detect_mult`` consecutive missed
+  control packets, i.e. ``detect_time = detect_mult * interval``.  With the
+  paper's settings (10 ms interval, 3 retries) detection takes ~30 ms and
+  end-to-end recovery — detection + BGP withdrawal propagation + FIB
+  reprogram — lands near the ~110 ms the paper measures (Fig. 9).
+
+* :class:`BgpHoldTimer` — default BGP keepalive/hold timers (60 s / 180 s):
+  the session only drops after the 180 s hold timer expires (Fig. 13).
+
+:class:`FailureDetector` wires either regime to the fabric+EVPN pair and
+reports the recovery timeline; ``runtime/failure.py`` reuses the same state
+machine for training-process heartbeats (the TPU-side adaptation).
+"""
+
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+from .evpn import EvpnControlPlane
+from .fabric import Fabric
+
+
+class BfdState(enum.Enum):
+    ADMIN_DOWN = "AdminDown"
+    DOWN = "Down"
+    INIT = "Init"
+    UP = "Up"
+
+
+@dataclass
+class BfdSession:
+    """RFC 5880 async-mode session between two directly connected peers."""
+
+    local: str
+    remote: str
+    interval_ms: float = 10.0
+    detect_mult: int = 3
+    state: BfdState = BfdState.DOWN
+    last_rx_ms: float = 0.0
+
+    @property
+    def detect_time_ms(self) -> float:
+        return self.interval_ms * self.detect_mult
+
+    def bring_up(self, now_ms: float) -> None:
+        # three-way handshake: Down -> Init -> Up; we collapse the handshake
+        # (sub-interval) and record the session live.
+        self.state = BfdState.UP
+        self.last_rx_ms = now_ms
+
+    def on_rx(self, now_ms: float) -> None:
+        if self.state != BfdState.ADMIN_DOWN:
+            self.state = BfdState.UP
+            self.last_rx_ms = now_ms
+
+    def poll(self, now_ms: float) -> BfdState:
+        """Advance the detection timer; returns the (possibly new) state."""
+        if self.state == BfdState.UP and now_ms - self.last_rx_ms > self.detect_time_ms:
+            self.state = BfdState.DOWN
+        return self.state
+
+    def time_to_detect(self, failure_at_ms: float) -> float:
+        """Absolute time at which this session declares the peer down."""
+        # last control packet arrives just before the failure
+        return failure_at_ms + self.detect_time_ms
+
+
+@dataclass
+class BgpHoldTimer:
+    """Default-timer BGP session: death only via hold-timer expiry."""
+
+    local: str
+    remote: str
+    keepalive_s: float = 60.0
+    hold_s: float = 180.0
+
+    def time_to_detect(self, failure_at_ms: float) -> float:
+        return failure_at_ms + self.hold_s * 1e3
+
+
+#: Empirical constants for the post-detection pipeline, calibrated so that
+#: the default BFD configuration reproduces the paper's ~110 ms recovery:
+#: 30 ms detection + withdrawal propagation + best-path rerun + FIB update.
+WITHDRAWAL_PROPAGATION_MS_PER_HOP = 12.0
+BEST_PATH_RERUN_MS = 25.0
+FIB_UPDATE_MS = 18.0
+
+
+@dataclass
+class RecoveryTimeline:
+    failure_at_ms: float
+    detected_at_ms: float
+    converged_at_ms: float
+    mechanism: str
+    events: List[Tuple[float, str]] = field(default_factory=list)
+
+    @property
+    def recovery_ms(self) -> float:
+        return self.converged_at_ms - self.failure_at_ms
+
+
+class FailureDetector:
+    """Drives link failure -> detection -> EVPN withdrawal -> reroute."""
+
+    def __init__(self, fabric: Fabric, evpn: Optional[EvpnControlPlane] = None):
+        self.fabric = fabric
+        self.evpn = evpn
+
+    def fail_and_recover(
+        self,
+        link: Tuple[str, str],
+        *,
+        mechanism: str = "bfd",
+        failure_at_ms: float = 0.0,
+        bfd_interval_ms: float = 10.0,
+        bfd_detect_mult: int = 3,
+        bgp_hold_s: float = 180.0,
+        propagation_hops: int = 3,
+    ) -> RecoveryTimeline:
+        """Fail ``link`` and compute the convergence timeline.
+
+        ``propagation_hops`` — BGP withdrawal hops to the farthest affected
+        speaker (leaf -> spine -> remote spine -> remote leaf = 3 in the
+        paper's topology).
+        """
+        u, v = link
+        events: List[Tuple[float, str]] = [(failure_at_ms, f"link {u}<->{v} down")]
+        if mechanism == "bfd":
+            session = BfdSession(u, v, interval_ms=bfd_interval_ms, detect_mult=bfd_detect_mult)
+            session.bring_up(failure_at_ms)
+            detected = session.time_to_detect(failure_at_ms)
+            events.append((detected, f"BFD detect ({session.detect_time_ms:.0f} ms timer)"))
+        elif mechanism == "bgp":
+            timer = BgpHoldTimer(u, v, hold_s=bgp_hold_s)
+            detected = timer.time_to_detect(failure_at_ms)
+            events.append((detected, f"BGP hold timer expiry ({bgp_hold_s:.0f} s)"))
+        else:
+            raise ValueError(f"unknown mechanism {mechanism!r}")
+
+        # the routing system reacts identically once the session is down
+        t = detected
+        t += WITHDRAWAL_PROPAGATION_MS_PER_HOP * propagation_hops
+        events.append((t, f"withdrawals propagated ({propagation_hops} hops)"))
+        t += BEST_PATH_RERUN_MS
+        events.append((t, "best-path recomputed"))
+        t += FIB_UPDATE_MS
+        events.append((t, "FIB reprogrammed; traffic rerouted"))
+
+        # apply to the live emulation: traffic now avoids the failed link
+        self.fabric.fail_link(u, v)
+        if self.evpn is not None:
+            self.evpn.resync()
+        return RecoveryTimeline(
+            failure_at_ms=failure_at_ms,
+            detected_at_ms=detected,
+            converged_at_ms=t,
+            mechanism=mechanism,
+            events=events,
+        )
+
+    def restore(self, link: Tuple[str, str]) -> None:
+        self.fabric.restore_link(*link)
+        if self.evpn is not None:
+            self.evpn.resync()

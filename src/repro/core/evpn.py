@@ -1,0 +1,223 @@
+"""MP-BGP EVPN control plane for the emulated VXLAN fabric (paper §3.2, §4.2).
+
+Models the route types the paper exercises:
+
+* **Type-3 IMET** (Inclusive Multicast Ethernet Tag) — a VTEP advertises
+  (VTEP-IP, VNI) membership; builds per-VNI flood lists and enables remote
+  VTEP discovery.
+* **Type-2 MAC/IP** — a leaf that learns a host (via ARP snooping in the
+  paper) advertises (MAC, IP, VNI, VTEP-IP); builds the overlay forwarding
+  tables that make cross-DC hosts mutually reachable.
+
+Routes carry Route Distinguishers and Route Targets; import policy is
+RT-based, which is what enforces multi-tenancy at the control-plane level.
+Propagation follows the paper's BGP session graph: leaves peer with their
+local spines (route reflectors), spines of different DCs peer over the WAN.
+Withdrawal (on BFD-detected failure) removes routes and flood-list entries.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .fabric import Fabric
+
+
+@dataclass(frozen=True)
+class RouteType3:
+    """IMET route: VTEP membership in a VNI."""
+
+    rd: str
+    vni: int
+    vtep_ip: str
+    origin_leaf: str
+
+    @property
+    def rt(self) -> str:
+        return f"target:65000:{self.vni}"
+
+
+@dataclass(frozen=True)
+class RouteType2:
+    """MAC/IP advertisement route."""
+
+    rd: str
+    vni: int
+    mac: str
+    ip: str
+    vtep_ip: str
+    origin_leaf: str
+
+    @property
+    def rt(self) -> str:
+        return f"target:65000:{self.vni}"
+
+
+@dataclass
+class BgpSpeaker:
+    name: str
+    asn: int
+    router_id: str
+    is_route_reflector: bool = False
+    peers: List[str] = field(default_factory=list)
+    rib: Set[object] = field(default_factory=set)
+
+
+class EvpnControlPlane:
+    """BGP session graph + route propagation over a :class:`Fabric`."""
+
+    def __init__(self, fabric: Fabric):
+        self.fabric = fabric
+        self.speakers: Dict[str, BgpSpeaker] = {}
+        # per-leaf derived state
+        self.mac_table: Dict[str, Dict[Tuple[int, str], str]] = {}  # leaf -> (vni, mac) -> vtep
+        self.ip_table: Dict[str, Dict[Tuple[int, str], str]] = {}  # leaf -> (vni, ip) -> vtep
+        self.flood_list: Dict[str, Dict[int, Set[str]]] = {}  # leaf -> vni -> vtep set
+        self.local_vnis: Dict[str, Set[int]] = {}  # leaf -> VNIs configured
+        self._route_log: List[object] = []
+        self._build_sessions()
+
+    # -- session graph -------------------------------------------------------
+
+    def _build_sessions(self) -> None:
+        for i, node in enumerate(sorted(self.fabric.spines + self.fabric.leaves)):
+            dc = int(node[1])
+            self.speakers[node] = BgpSpeaker(
+                name=node,
+                asn=65000 + dc,
+                router_id=f"10.{dc}.0.{i + 1}",
+                is_route_reflector=node in self.fabric.spines,
+            )
+        for leaf in self.fabric.leaves:
+            self.mac_table[leaf] = {}
+            self.ip_table[leaf] = {}
+            self.flood_list[leaf] = {}
+            self.local_vnis[leaf] = set()
+            dc = leaf[:2]
+            for spine in self.fabric.spines:
+                if spine.startswith(dc):
+                    self._peer(leaf, spine)
+        # inter-DC spine peering over WAN links
+        for link in self.fabric.wan_links:
+            u, v = sorted(link)
+            self._peer(u, v)
+
+    def _peer(self, a: str, b: str) -> None:
+        if b not in self.speakers[a].peers:
+            self.speakers[a].peers.append(b)
+        if a not in self.speakers[b].peers:
+            self.speakers[b].peers.append(a)
+
+    def session_up(self, a: str, b: str) -> bool:
+        """A BGP session is up iff the underlay link is up."""
+        return self.fabric.link_up(a, b)
+
+    # -- advertisement -------------------------------------------------------
+
+    def configure_vni(self, leaf: str, vni: int) -> RouteType3:
+        """Configure a VNI on a leaf VTEP -> originate a Type-3 IMET route."""
+        self.local_vnis[leaf].add(vni)
+        self.flood_list[leaf].setdefault(vni, set())
+        route = RouteType3(
+            rd=f"{self.speakers[leaf].router_id}:{vni}",
+            vni=vni,
+            vtep_ip=self.fabric.vtep_ip(leaf),
+            origin_leaf=leaf,
+        )
+        self._propagate(route)
+        return route
+
+    def learn_host(self, host_name: str, vni: int) -> RouteType2:
+        """Leaf snoops the host's ARP -> originate a Type-2 MAC/IP route."""
+        host = self.fabric.hosts[host_name]
+        leaf = host.leaf
+        if vni not in self.local_vnis.get(leaf, set()):
+            self.configure_vni(leaf, vni)
+        host.vni = vni
+        route = RouteType2(
+            rd=f"{self.speakers[leaf].router_id}:{vni}",
+            vni=vni,
+            mac=host.mac,
+            ip=host.ip,
+            vtep_ip=self.fabric.vtep_ip(leaf),
+            origin_leaf=leaf,
+        )
+        self._propagate(route)
+        return route
+
+    def _propagate(self, route: object) -> None:
+        """Flood through the BGP session graph (RR semantics collapsed to a
+        loop-free flood over live sessions), then run import policy."""
+        self._route_log.append(route)
+        origin = route.origin_leaf  # type: ignore[attr-defined]
+        seen = {origin}
+        frontier = [origin]
+        self.speakers[origin].rib.add(route)
+        while frontier:
+            nxt: List[str] = []
+            for node in frontier:
+                for peer in self.speakers[node].peers:
+                    if peer in seen or not self.session_up(node, peer):
+                        continue
+                    seen.add(peer)
+                    self.speakers[peer].rib.add(route)
+                    nxt.append(peer)
+            frontier = nxt
+        self._reimport()
+
+    def _reimport(self) -> None:
+        """Rebuild leaf tables from RIBs with RT import filtering."""
+        for leaf in self.fabric.leaves:
+            mac: Dict[Tuple[int, str], str] = {}
+            ip: Dict[Tuple[int, str], str] = {}
+            flood: Dict[int, Set[str]] = {v: set() for v in self.local_vnis[leaf]}
+            my_vteps = self.fabric.vtep_ip(leaf)
+            for route in self.speakers[leaf].rib:
+                vni = route.vni  # type: ignore[attr-defined]
+                if vni not in self.local_vnis[leaf]:
+                    continue  # RT import policy: only locally configured VNIs
+                if isinstance(route, RouteType3) and route.vtep_ip != my_vteps:
+                    flood[vni].add(route.vtep_ip)
+                elif isinstance(route, RouteType2):
+                    mac[(vni, route.mac)] = route.vtep_ip
+                    ip[(vni, route.ip)] = route.vtep_ip
+            self.mac_table[leaf] = mac
+            self.ip_table[leaf] = ip
+            self.flood_list[leaf] = flood
+
+    # -- withdrawal ----------------------------------------------------------
+
+    def withdraw_leaf(self, leaf: str) -> None:
+        """Withdraw every route originated by ``leaf`` (e.g. leaf isolated)."""
+        for sp in self.speakers.values():
+            sp.rib = {r for r in sp.rib if getattr(r, "origin_leaf", None) != leaf}
+        self._reimport()
+
+    def resync(self) -> None:
+        """Re-flood every logged route (after topology repair)."""
+        routes, self._route_log = self._route_log, []
+        for sp in self.speakers.values():
+            sp.rib.clear()
+        for r in routes:
+            self._propagate(r)
+
+    # -- queries -------------------------------------------------------------
+
+    def reachable(self, src_host: str, dst_host: str) -> bool:
+        """Overlay reachability: same VNI + Type-2 route present at ingress."""
+        src = self.fabric.hosts[src_host]
+        dst = self.fabric.hosts[dst_host]
+        if src.vni is None or dst.vni is None or src.vni != dst.vni:
+            return False
+        entry = self.ip_table.get(src.leaf, {}).get((src.vni, dst.ip))
+        if src.leaf == dst.leaf:
+            return True  # local bridging
+        return entry == self.fabric.vtep_ip(dst.leaf)
+
+    def route_count(self, node: str) -> Dict[str, int]:
+        rib = self.speakers[node].rib
+        return {
+            "type2": sum(isinstance(r, RouteType2) for r in rib),
+            "type3": sum(isinstance(r, RouteType3) for r in rib),
+        }

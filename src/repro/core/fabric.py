@@ -1,0 +1,320 @@
+"""Emulated multi-data-center spine-leaf fabric (ScaleAcross §4).
+
+Pure-Python, byte-accurate (not packet-accurate) model of the topology in
+Fig. 1 of the paper: ``num_dcs`` data centers, each a spine-leaf Clos
+(``spines_per_dc`` × ``leaves_per_dc``), hosts attached to leaves, and
+full-bipartite spine↔spine WAN links between data centers.
+
+Responsibilities:
+
+* underlay graph + equal-cost shortest-path routing with per-hop ECMP
+  (5-tuple CRC hash, per-switch seed — the paper's commodity pipeline);
+* VXLAN data plane: host frames are encapsulated at the ingress leaf (VTEP),
+  routed leaf→leaf through the underlay, decapsulated at the egress leaf —
+  reachability is governed by the EVPN control plane (``evpn.py``);
+* per-directed-link byte counters, from which the load factor (Eq. 12) and
+  path-distribution skew (Eqs. 3–11) are computed.
+
+Node naming follows the paper: ``d{i}s{j}`` spines, ``d{i}l{j}`` leaves,
+``d{i}h{j}`` hosts (1-based, e.g. ``d1l1`` = leaf 1 of DC 1).
+"""
+
+from __future__ import annotations
+
+import zlib
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+
+Link = Tuple[str, str]  # directed (u, v)
+
+
+@dataclass(frozen=True)
+class FiveTuple:
+    """Packet 5-tuple as hashed by commodity ECMP pipelines."""
+
+    src_ip: str
+    dst_ip: str
+    src_port: int
+    dst_port: int
+    proto: int = 17  # UDP (RoCEv2 / VXLAN)
+
+    def key_bytes(self) -> bytes:
+        return f"{self.src_ip}|{self.dst_ip}|{self.src_port}|{self.dst_port}|{self.proto}".encode()
+
+
+def ecmp_hash(tup: FiveTuple, seed: int, num_choices: int) -> int:
+    """CRC-32 5-tuple hash with a per-switch seed, modulo the fan-out.
+
+    Commodity switches hash the same fields but mix in a chip-specific seed
+    so consecutive hops do not make perfectly correlated decisions; we model
+    that with the seed argument.
+    """
+    h = zlib.crc32(tup.key_bytes(), seed & 0xFFFFFFFF)
+    return h % num_choices
+
+
+# VXLAN outer UDP destination port (RFC 7348) and RoCEv2 destination port.
+VXLAN_DST_PORT = 4789
+ROCE_DST_PORT = 4791
+
+
+def vxlan_outer_tuple(inner: FiveTuple, src_vtep_ip: str, dst_vtep_ip: str) -> FiveTuple:
+    """Outer header built by the ingress VTEP.
+
+    Per RFC 7348 the VTEP derives the outer UDP source port from a hash of
+    the inner frame so that inner-flow entropy survives encapsulation; the
+    inner RoCEv2 source port therefore still steers ECMP in the underlay.
+    """
+    entropy = zlib.crc32(inner.key_bytes()) & 0x3FFF
+    return FiveTuple(
+        src_ip=src_vtep_ip,
+        dst_ip=dst_vtep_ip,
+        src_port=0xC000 + entropy,
+        dst_port=VXLAN_DST_PORT,
+    )
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    """Topology knobs.  Defaults mirror the paper's Fig. 1."""
+
+    num_dcs: int = 2
+    spines_per_dc: int = 2
+    leaves_per_dc: int = 3
+    # hosts per leaf, per DC; paper: DC1 = 5 hosts, DC2 = 4 hosts over 3 leaves.
+    hosts_per_leaf: Tuple[Tuple[int, ...], ...] = ((2, 2, 1), (2, 2, 0))
+    link_gbps: float = 10.0
+    wan_gbps: float = 0.8  # paper measured ~800 Mbit/s effective on spine WAN links
+
+    def validate(self) -> None:
+        if len(self.hosts_per_leaf) != self.num_dcs:
+            raise ValueError("hosts_per_leaf must have one tuple per DC")
+        for dc, per_leaf in enumerate(self.hosts_per_leaf):
+            if len(per_leaf) != self.leaves_per_dc:
+                raise ValueError(f"DC{dc + 1}: expected {self.leaves_per_dc} leaf host counts")
+
+
+@dataclass
+class Host:
+    name: str
+    dc: int  # 1-based
+    leaf: str
+    ip: str
+    mac: str
+    vni: Optional[int] = None
+
+
+class Fabric:
+    """The emulated underlay + VXLAN data plane."""
+
+    def __init__(self, config: FabricConfig | None = None):
+        self.config = config or FabricConfig()
+        self.config.validate()
+        self._adj: Dict[str, List[str]] = defaultdict(list)
+        self._links: set[FrozenSet[str]] = set()
+        self._down_links: set[FrozenSet[str]] = set()
+        self.link_bytes: Dict[Link, int] = defaultdict(int)
+        self.hosts: Dict[str, Host] = {}
+        self.leaves: List[str] = []
+        self.spines: List[str] = []
+        self.wan_links: List[FrozenSet[str]] = []
+        self._switch_seed: Dict[str, int] = {}
+        self._dist_cache: Dict[str, Dict[str, int]] = {}
+        self._build()
+
+    # -- construction -------------------------------------------------------
+
+    def _add_link(self, u: str, v: str) -> None:
+        key = frozenset((u, v))
+        if key in self._links:
+            return
+        self._links.add(key)
+        self._adj[u].append(v)
+        self._adj[v].append(u)
+
+    def _build(self) -> None:
+        cfg = self.config
+        for dc in range(1, cfg.num_dcs + 1):
+            spines = [f"d{dc}s{j}" for j in range(1, cfg.spines_per_dc + 1)]
+            leaves = [f"d{dc}l{j}" for j in range(1, cfg.leaves_per_dc + 1)]
+            self.spines.extend(spines)
+            self.leaves.extend(leaves)
+            for leaf in leaves:
+                for spine in spines:  # full bipartite leaf-spine Clos
+                    self._add_link(leaf, spine)
+            host_idx = 1
+            for li, leaf in enumerate(leaves):
+                for _ in range(cfg.hosts_per_leaf[dc - 1][li]):
+                    name = f"d{dc}h{host_idx}"
+                    host = Host(
+                        name=name,
+                        dc=dc,
+                        leaf=leaf,
+                        ip=f"192.168.{dc}.{host_idx}",
+                        mac=f"aa:bb:{dc:02x}:{dc:02x}:{host_idx:02x}:{host_idx:02x}",
+                    )
+                    self.hosts[name] = host
+                    self._add_link(leaf, name)
+                    host_idx += 1
+        # WAN: full bipartite spine<->spine between DC pairs (paper: each spine
+        # has one link to every spine of the remote DC -> 4 WAN links for 2 DCs).
+        for dc_a in range(1, cfg.num_dcs + 1):
+            for dc_b in range(dc_a + 1, cfg.num_dcs + 1):
+                for ja in range(1, cfg.spines_per_dc + 1):
+                    for jb in range(1, cfg.spines_per_dc + 1):
+                        u, v = f"d{dc_a}s{ja}", f"d{dc_b}s{jb}"
+                        self._add_link(u, v)
+                        self.wan_links.append(frozenset((u, v)))
+        for i, node in enumerate(sorted(self._adj)):
+            self._switch_seed[node] = zlib.crc32(node.encode()) ^ (i * 0x9E3779B9)
+
+    # -- link state ---------------------------------------------------------
+
+    def all_links(self) -> List[FrozenSet[str]]:
+        return sorted(self._links, key=sorted)
+
+    def is_wan_link(self, u: str, v: str) -> bool:
+        return frozenset((u, v)) in set(self.wan_links)
+
+    def link_up(self, u: str, v: str) -> bool:
+        return frozenset((u, v)) not in self._down_links
+
+    def fail_link(self, u: str, v: str) -> None:
+        key = frozenset((u, v))
+        if key not in self._links:
+            raise KeyError(f"no such link {u}<->{v}")
+        self._down_links.add(key)
+        self._dist_cache.clear()
+
+    def restore_link(self, u: str, v: str) -> None:
+        self._down_links.discard(frozenset((u, v)))
+        self._dist_cache.clear()
+
+    def neighbors(self, node: str) -> List[str]:
+        return [v for v in self._adj[node] if self.link_up(node, v)]
+
+    # -- routing ------------------------------------------------------------
+
+    def _distances_to(self, dst: str) -> Dict[str, int]:
+        """BFS hop distances toward dst over live links (hosts non-transit)."""
+        cached = self._dist_cache.get(dst)
+        if cached is not None:
+            return cached
+        dist = {dst: 0}
+        frontier = [dst]
+        while frontier:
+            nxt: List[str] = []
+            for node in frontier:
+                # hosts never forward traffic for others
+                if node in self.hosts and node != dst:
+                    continue
+                for nb in self.neighbors(node):
+                    if nb not in dist:
+                        dist[nb] = dist[node] + 1
+                        nxt.append(nb)
+            frontier = nxt
+        self._dist_cache[dst] = dist
+        return dist
+
+    def next_hops(self, node: str, dst: str) -> List[str]:
+        """Equal-cost next hops from ``node`` toward ``dst`` (sorted, stable)."""
+        dist = self._distances_to(dst)
+        if node not in dist:
+            return []
+        return sorted(
+            nb for nb in self.neighbors(node) if dist.get(nb, 1 << 30) == dist[node] - 1
+        )
+
+    def route_flow(self, tup: FiveTuple, src: str, dst: str) -> List[str]:
+        """Hop-by-hop ECMP walk; returns the node path (src..dst)."""
+        path = [src]
+        node = src
+        hops = 0
+        while node != dst:
+            choices = self.next_hops(node, dst)
+            if not choices:
+                raise RuntimeError(f"no route {src}->{dst} at {node} (link failures?)")
+            pick = choices[ecmp_hash(tup, self._switch_seed[node], len(choices))]
+            path.append(pick)
+            node = pick
+            hops += 1
+            if hops > 64:
+                raise RuntimeError("routing loop detected")
+        return path
+
+    # -- data plane ---------------------------------------------------------
+
+    def vtep_ip(self, leaf: str) -> str:
+        # loopback VTEP addressing mirrors the paper (1.1.10.1 style)
+        dc = int(leaf[1])
+        idx = int(leaf[3:])
+        return f"{dc}.{dc}.10.{idx}"
+
+    def send(
+        self,
+        src_host: str,
+        dst_host: str,
+        nbytes: int,
+        src_port: int,
+        dst_port: int = ROCE_DST_PORT,
+        *,
+        check_reachability=None,
+    ) -> List[str]:
+        """Send ``nbytes`` from host to host; updates link byte counters.
+
+        ``check_reachability`` is an optional callable (src, dst) -> bool
+        supplied by the EVPN/tenancy layer; when it returns False the frame
+        is dropped at the ingress VTEP (destination host unreachable).
+        Returns the underlay node path taken.
+        """
+        src, dst = self.hosts[src_host], self.hosts[dst_host]
+        if check_reachability is not None and not check_reachability(src_host, dst_host):
+            raise UnreachableError(f"{dst_host} unreachable from {src_host} (VNI isolation)")
+        inner = FiveTuple(src.ip, dst.ip, src_port, dst_port)
+        self._count(src_host, src.leaf, nbytes)
+        if src.leaf == dst.leaf:
+            self._count(dst.leaf, dst_host, nbytes)
+            return [src_host, src.leaf, dst_host]
+        outer = vxlan_outer_tuple(inner, self.vtep_ip(src.leaf), self.vtep_ip(dst.leaf))
+        path = self.route_flow(outer, src.leaf, dst.leaf)
+        for u, v in zip(path, path[1:]):
+            self._count(u, v, nbytes)
+        self._count(dst.leaf, dst_host, nbytes)
+        return [src_host] + path + [dst_host]
+
+    def _count(self, u: str, v: str, nbytes: int) -> None:
+        self.link_bytes[(u, v)] += nbytes
+
+    def reset_counters(self) -> None:
+        self.link_bytes.clear()
+
+    # -- observability ------------------------------------------------------
+
+    def uplink_bytes(self, node: str, toward: str = "spine") -> Dict[Link, int]:
+        """Byte counters on a node's egress links toward spines or WAN."""
+        out: Dict[Link, int] = {}
+        for (u, v), b in self.link_bytes.items():
+            if u != node:
+                continue
+            if toward == "spine" and v in self.spines and not self.is_wan_link(u, v):
+                out[(u, v)] = b
+            elif toward == "wan" and self.is_wan_link(u, v):
+                out[(u, v)] = b
+        return out
+
+    def rtt_path(self, src_host: str, dst_host: str) -> List[Tuple[str, str, bool]]:
+        """One representative forward path as (u, v, is_wan) link triples."""
+        src, dst = self.hosts[src_host], self.hosts[dst_host]
+        links: List[Tuple[str, str, bool]] = [(src_host, src.leaf, False)]
+        if src.leaf != dst.leaf:
+            tup = FiveTuple(src.ip, dst.ip, 49192, ROCE_DST_PORT)
+            outer = vxlan_outer_tuple(tup, self.vtep_ip(src.leaf), self.vtep_ip(dst.leaf))
+            path = self.route_flow(outer, src.leaf, dst.leaf)
+            links += [(u, v, self.is_wan_link(u, v)) for u, v in zip(path, path[1:])]
+        links.append((dst.leaf, dst_host, False))
+        return links
+
+
+class UnreachableError(RuntimeError):
+    """Destination host unreachable (missing EVPN route or VNI mismatch)."""

@@ -1,0 +1,147 @@
+"""Collective operation -> queue-pair flow synthesis (paper §3.3, §5.5).
+
+NCCL-style collectives chunk a tensor across ``num_channels`` independent
+queue pairs per peer connection ("a 4 GB gradient using four channels is
+divided into four 1 GB chunks, where each chunk is assigned to a separate
+QP" — §3.3).  This module turns a logical collective among fabric hosts
+into the concrete set of (src, dst, bytes, QP) flows the fabric routes:
+
+* :func:`ring_allreduce_flows` — bidirectional ring; each worker ships
+  ``2*(N-1)/N * B`` bytes to its ring successor across the whole op;
+* :func:`parameter_server_flows` — push (worker->PS, B bytes each) and pull
+  (PS->worker, B bytes each);
+* :func:`hierarchical_flows` — the beyond-paper geo schedule: only the
+  1/N_local shard crosses the WAN between DC leaders.
+
+Driving these through :class:`~repro.core.fabric.Fabric` yields link byte
+counters for the load-factor experiments and the Fig. 14 timing model.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .fabric import Fabric, Link
+from .ports import QueuePair, allocate_ports
+
+
+@dataclass(frozen=True)
+class Flow:
+    src: str
+    dst: str
+    nbytes: int
+    qp: QueuePair
+    src_port: int
+
+
+def _qps_for_pair(
+    pair_id: int,
+    num_channels: int,
+    scheme: str,
+    k_bins: int,
+    base_qpn: int,
+    qp_stride: int,
+) -> List[Tuple[QueuePair, int]]:
+    qps = [
+        QueuePair(index=i, number=(base_qpn + pair_id * 131 + i * qp_stride) & 0xFFFFFFFF)
+        for i in range(num_channels)
+    ]
+    ports = allocate_ports(qps, scheme=scheme, k=k_bins)
+    return list(zip(qps, ports))
+
+
+def ring_allreduce_flows(
+    workers: Sequence[str],
+    total_bytes: int,
+    *,
+    num_channels: int = 4,
+    scheme: str = "qp_aware",
+    k_bins: int = 4,
+    base_qpn: int = 0x11,
+    qp_stride: int = 1,
+) -> List[Flow]:
+    """Ring all-reduce: reduce-scatter + all-gather = 2*(N-1)/N * B per hop."""
+    n = len(workers)
+    if n < 2:
+        return []
+    per_link_bytes = int(2 * (n - 1) / n * total_bytes)
+    chunk = per_link_bytes // num_channels
+    flows: List[Flow] = []
+    for i, src in enumerate(workers):
+        dst = workers[(i + 1) % n]
+        for qp, port in _qps_for_pair(i, num_channels, scheme, k_bins, base_qpn, qp_stride):
+            flows.append(Flow(src=src, dst=dst, nbytes=chunk, qp=qp, src_port=port))
+    return flows
+
+
+def parameter_server_flows(
+    server: str,
+    workers: Sequence[str],
+    grad_bytes: int,
+    *,
+    num_channels: int = 4,
+    scheme: str = "qp_aware",
+    k_bins: int = 4,
+    base_qpn: int = 0x11,
+    qp_stride: int = 1,
+) -> List[Flow]:
+    """PS push+pull: every worker sends B to the server and receives B back."""
+    chunk = grad_bytes // num_channels
+    flows: List[Flow] = []
+    for wi, worker in enumerate(workers):
+        pair_qps = _qps_for_pair(wi, num_channels, scheme, k_bins, base_qpn, qp_stride)
+        for qp, port in pair_qps:
+            flows.append(Flow(src=worker, dst=server, nbytes=chunk, qp=qp, src_port=port))
+        pull_qps = _qps_for_pair(
+            1000 + wi, num_channels, scheme, k_bins, base_qpn, qp_stride
+        )
+        for qp, port in pull_qps:
+            flows.append(Flow(src=server, dst=worker, nbytes=chunk, qp=qp, src_port=port))
+    return flows
+
+
+def hierarchical_flows(
+    dc_leaders: Sequence[str],
+    shard_bytes: int,
+    *,
+    num_channels: int = 4,
+    scheme: str = "qp_aware",
+    k_bins: int = 4,
+    base_qpn: int = 0x11,
+    qp_stride: int = 1,
+) -> List[Flow]:
+    """Cross-DC leader ring over the WAN carrying only the local shard.
+
+    Models the geo-hierarchical schedule: intra-DC reduce-scatter happens on
+    the (fast) local fabric; only ``shard_bytes = B / n_local`` per leader
+    crosses the WAN, as a ring among DC leaders.
+    """
+    return ring_allreduce_flows(
+        dc_leaders,
+        shard_bytes,
+        num_channels=num_channels,
+        scheme=scheme,
+        k_bins=k_bins,
+        base_qpn=base_qpn,
+        qp_stride=qp_stride,
+    )
+
+
+def route_flows(
+    fabric: Fabric,
+    flows: Sequence[Flow],
+    *,
+    check_reachability=None,
+) -> Dict[Link, int]:
+    """Route every flow through the fabric; returns the link byte counters."""
+    fabric.reset_counters()
+    for flow in flows:
+        fabric.send(
+            flow.src,
+            flow.dst,
+            flow.nbytes,
+            src_port=flow.src_port,
+            check_reachability=check_reachability,
+        )
+    return dict(fabric.link_bytes)

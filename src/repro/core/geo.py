@@ -1,0 +1,198 @@
+"""GeoFabric — the facade joining the emulated WAN fabric to JAX training.
+
+A :class:`GeoFabric` owns one :class:`~repro.core.fabric.Fabric` (+ EVPN +
+netem) configured for ``num_pods`` data centers and exposes the quantities
+the training runtime and benchmarks need:
+
+* per-sync-strategy communication time for a gradient of ``B`` bytes
+  (``allreduce`` | ``ps`` | ``hier`` | ``hier_int8`` | ``local_sgd``),
+  obtained by synthesizing the QP flows, routing them through the emulated
+  fabric, and applying the fluid timing model — i.e. the Fig. 14 pipeline;
+* RTT and failover numbers for the runtime's failure handling;
+* the WAN roofline term for multi-pod dry-runs (bytes / DCI bandwidth).
+
+The per-host mapping: each emulated host stands for one data-center DCI
+endpoint (in a real pod, the reduction result of the pod's ICI fabric), so
+"worker" below = one pod's egress aggregate, matching how hierarchical
+collectives concentrate WAN traffic on pod leaders.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .bfd import FailureDetector, RecoveryTimeline
+from .evpn import EvpnControlPlane
+from .fabric import Fabric, FabricConfig
+from .flows import (
+    hierarchical_flows,
+    parameter_server_flows,
+    ring_allreduce_flows,
+    route_flows,
+)
+from .metrics import LoadFactorResult, load_factor
+from .tenancy import TenancyManager
+from .wan import Netem, NetemProfile, PAPER_LAN, PAPER_WAN, WanTimingModel, ping_rtt
+
+SYNC_STRATEGIES = ("allreduce", "ps", "hier", "hier_int8", "local_sgd")
+
+
+@dataclass
+class SyncCost:
+    strategy: str
+    wan_seconds: float
+    wan_bytes: int
+    bottleneck_link: Optional[Tuple[str, str]]
+    load: LoadFactorResult
+    sync_every: int = 1  # local_sgd amortization
+
+    @property
+    def amortized_seconds(self) -> float:
+        return self.wan_seconds / self.sync_every
+
+
+class GeoFabric:
+    """Emulated geo-distributed deployment for ``num_pods`` data centers."""
+
+    def __init__(
+        self,
+        num_pods: int = 2,
+        workers_per_pod: int = 2,
+        *,
+        wan: NetemProfile = PAPER_WAN,
+        lan: NetemProfile = PAPER_LAN,
+        num_channels: int = 4,
+        port_scheme: str = "qp_aware",
+        seed: int = 0,
+    ):
+        hosts_per_leaf = tuple(
+            tuple(
+                workers_per_pod // 3 + (1 if i < workers_per_pod % 3 else 0) for i in range(3)
+            )
+            for _ in range(num_pods)
+        )
+        self.config = FabricConfig(num_dcs=num_pods, hosts_per_leaf=hosts_per_leaf)
+        self.fabric = Fabric(self.config)
+        self.evpn = EvpnControlPlane(self.fabric)
+        self.tenancy = TenancyManager(self.fabric, self.evpn)
+        self.netem = Netem(self.fabric, wan=wan, lan=lan, seed=seed)
+        self.timing = WanTimingModel(self.netem)
+        self.detector = FailureDetector(self.fabric, self.evpn)
+        self.num_pods = num_pods
+        self.num_channels = num_channels
+        self.port_scheme = port_scheme
+        # attach every host to the training tenant by default
+        self.tenancy.create_tenant("training", vni=100)
+        for name in sorted(self.fabric.hosts):
+            self.tenancy.attach("training", name)
+
+    # -- host roles ----------------------------------------------------------
+
+    def workers(self, pod: Optional[int] = None) -> List[str]:
+        names = sorted(self.fabric.hosts)
+        if pod is None:
+            return names
+        return [n for n in names if self.fabric.hosts[n].dc == pod]
+
+    def pod_leaders(self) -> List[str]:
+        """First host of each DC acts as the WAN/DCI endpoint."""
+        return [self.workers(pod)[0] for pod in range(1, self.num_pods + 1)]
+
+    # -- paper metrics -------------------------------------------------------
+
+    def rtt_ms(self, count: int = 32) -> np.ndarray:
+        leaders = self.pod_leaders()
+        if len(leaders) < 2:
+            return np.zeros(count)
+        return ping_rtt(self.netem, leaders[0], leaders[1], count=count)
+
+    def failover(self, *, mechanism: str = "bfd", **kw) -> RecoveryTimeline:
+        wan_link = sorted(self.fabric.wan_links[0])
+        return self.detector.fail_and_recover((wan_link[0], wan_link[1]), mechanism=mechanism, **kw)
+
+    # -- sync-strategy costing (Fig. 14 pipeline + beyond-paper schedules) ---
+
+    def sync_cost(
+        self,
+        strategy: str,
+        grad_bytes: int,
+        *,
+        sync_every: int = 8,
+        int8_ratio: float = 0.25,  # fp32 -> int8 + per-block scales
+        jitter: bool = True,
+    ) -> SyncCost:
+        """Cost one gradient synchronization under ``strategy``.
+
+        ``allreduce`` — flat ring over all workers in all DCs (paper M2);
+        ``ps``        — central server in DC1, push+pull (paper M1);
+        ``hier``      — intra-pod reduce-scatter (LAN, overlapped/ignored at
+                        WAN granularity) + leader ring carrying 1/n_local of
+                        the bytes over the WAN + intra-pod all-gather;
+        ``hier_int8`` — ``hier`` with the WAN payload int8-compressed;
+        ``local_sgd`` — ``hier`` executed once every ``sync_every`` steps.
+        """
+        if strategy not in SYNC_STRATEGIES:
+            raise ValueError(f"unknown strategy {strategy!r}; want one of {SYNC_STRATEGIES}")
+        kw = dict(
+            num_channels=self.num_channels,
+            scheme=self.port_scheme,
+        )
+        every = 1
+        if strategy == "allreduce":
+            flows = ring_allreduce_flows(self.workers(), grad_bytes, **kw)
+        elif strategy == "ps":
+            workers = self.workers()
+            flows = parameter_server_flows(workers[0], workers[1:], grad_bytes, **kw)
+        else:
+            n_local = max(len(self.workers(1)), 1)
+            shard = grad_bytes // n_local
+            if strategy == "hier_int8":
+                shard = int(shard * int8_ratio)
+            if strategy == "local_sgd":
+                every = sync_every
+            flows = hierarchical_flows(self.pod_leaders(), shard, **kw)
+        link_bytes = route_flows(self.fabric, flows, check_reachability=self.tenancy.reachable)
+        rtt = self.netem.base_rtt_ms(self.pod_leaders()[0], self.pod_leaders()[-1]) if self.num_pods > 1 else 0.0
+        jit = float(self.netem.rng.uniform(0, 2.0)) if jitter else 0.0
+        result = self.timing.transfer_time(link_bytes, rtt_ms=rtt, jitter_sample_ms=jit)
+        wan_bytes = sum(
+            b for (u, v), b in link_bytes.items() if self.fabric.is_wan_link(u, v)
+        )
+        wan_links = [
+            b for (u, v), b in link_bytes.items() if self.fabric.is_wan_link(u, v)
+        ]
+        return SyncCost(
+            strategy=strategy,
+            wan_seconds=result.seconds,
+            wan_bytes=wan_bytes,
+            bottleneck_link=result.bottleneck_link,
+            load=load_factor({k: v for k, v in link_bytes.items()}),
+            sync_every=every,
+        )
+
+    def step_time(
+        self,
+        strategy: str,
+        grad_bytes: int,
+        compute_seconds: float,
+        *,
+        overlap_fraction: float = 0.0,
+        **kw,
+    ) -> float:
+        """Per-step wall time = compute + (1 - overlap) * amortized comm."""
+        cost = self.sync_cost(strategy, grad_bytes, **kw)
+        comm = cost.amortized_seconds * (1.0 - overlap_fraction)
+        return compute_seconds + comm
+
+    # -- roofline hook --------------------------------------------------------
+
+    def wan_roofline_seconds(self, cross_pod_bytes_per_chip: float, chips_per_pod: int) -> float:
+        """WAN term for the multi-pod roofline: the pod's aggregate cross-pod
+        bytes squeezed through the DC-pair's WAN links."""
+        total_bytes = cross_pod_bytes_per_chip * chips_per_pod
+        wan_bw_bytes = self.netem.wan.bandwidth_gbps * 1e9 / 8.0
+        n_links = max(len(self.fabric.wan_links), 1)
+        return total_bytes / (wan_bw_bytes * n_links)

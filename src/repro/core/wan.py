@@ -1,0 +1,156 @@
+"""WAN link emulation (netem semantics) and deterministic transfer timing.
+
+The paper injects a fixed 5 ms delay + 1 ms jitter per inter-DC link with
+ContainerLab's ``netem`` and measures ~22 ms host-to-host RTT (Fig. 8) and
+~800 Mbit/s effective spine-link throughput during training (§5.5).  This
+module reproduces both:
+
+* :class:`Netem` — per-link-class delay/jitter/bandwidth/loss;
+* :func:`ping_rtt` — RTT samples along a fabric path (Fig. 8);
+* :class:`WanTimingModel` — deterministic per-collective transfer times used
+  by the Fig. 14 reproduction and by the geo-runtime's step-time estimator:
+  ``time = bytes_on_bottleneck / bw + propagation + jitter``.
+
+All randomness flows through a seeded ``numpy`` Generator: runs are
+bit-reproducible.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fabric import Fabric, Link
+
+
+@dataclass(frozen=True)
+class NetemProfile:
+    """netem parameters for one link class.
+
+    As in the paper's ContainerLab setup, ``netem`` qdiscs sit on *both*
+    interfaces of a link, so one link traversal pays the delay (and samples
+    the jitter) twice — this is what turns the paper's "5 ms per link" into
+    the observed ~22 ms host-to-host RTT across a single WAN link (Fig. 8).
+    """
+
+    delay_ms: float = 0.0
+    jitter_ms: float = 0.0
+    bandwidth_gbps: float = 10.0
+    loss: float = 0.0
+
+
+#: Paper defaults: WAN links get 5 ms +/- 1 ms per interface; LAN links are
+#: effectively free at ping granularity; the *effective* WAN throughput
+#: observed during training was ~800 Mbit/s (§5.5).
+PAPER_WAN = NetemProfile(delay_ms=5.0, jitter_ms=1.0, bandwidth_gbps=0.8)
+PAPER_LAN = NetemProfile(delay_ms=0.02, jitter_ms=0.005, bandwidth_gbps=10.0)
+#: A modern DCI profile for the TPU-scale what-if studies (EXPERIMENTS §Perf):
+#: dedicated 9 GB/s/direction per DC pair, ~10 ms one-way.
+TPU_DCI = NetemProfile(delay_ms=10.0, jitter_ms=0.5, bandwidth_gbps=72.0)
+
+#: Store-and-forward + pipeline latency per transit switch (FRR software
+#: forwarding in the emulation; sub-ms, calibrated against Fig. 8).
+SWITCH_FORWARDING_MS = 0.25
+
+
+class Netem:
+    """Link-class -> profile mapping over a :class:`Fabric`."""
+
+    def __init__(
+        self,
+        fabric: Fabric,
+        wan: NetemProfile = PAPER_WAN,
+        lan: NetemProfile = PAPER_LAN,
+        seed: int = 0,
+    ):
+        self.fabric = fabric
+        self.wan = wan
+        self.lan = lan
+        self.rng = np.random.default_rng(seed)
+
+    def profile(self, u: str, v: str) -> NetemProfile:
+        return self.wan if self.fabric.is_wan_link(u, v) else self.lan
+
+    def one_way_delay_ms(self, path_links: Sequence[Tuple[str, str, bool]]) -> float:
+        """One jittered one-way delay sample along (u, v, is_wan) links.
+
+        Each link contributes two netem qdisc passes (one per interface),
+        each transit switch contributes forwarding latency.
+        """
+        total = 0.0
+        for u, v, _ in path_links:
+            p = self.profile(u, v)
+            for _interface in range(2):
+                jitter = self.rng.uniform(-p.jitter_ms, p.jitter_ms) if p.jitter_ms else 0.0
+                total += max(p.delay_ms + jitter, 0.0)
+        n_switches = max(len(path_links) - 1, 0)
+        total += n_switches * SWITCH_FORWARDING_MS
+        return total
+
+    def base_rtt_ms(self, src_host: str, dst_host: str) -> float:
+        """Jitter-free RTT (per-interface delays + forwarding, both ways)."""
+        links = self.fabric.rtt_path(src_host, dst_host)
+        one_way = 2.0 * sum(self.profile(u, v).delay_ms for u, v, _ in links)
+        one_way += max(len(links) - 1, 0) * SWITCH_FORWARDING_MS
+        return 2.0 * one_way
+
+
+def ping_rtt(
+    netem: Netem, src_host: str, dst_host: str, count: int = 100
+) -> np.ndarray:
+    """RTT samples (ms), the Fig. 8 experiment."""
+    links = netem.fabric.rtt_path(src_host, dst_host)
+    out = np.empty(count)
+    for i in range(count):
+        out[i] = netem.one_way_delay_ms(links) + netem.one_way_delay_ms(links)
+    return out
+
+
+@dataclass
+class TransferResult:
+    seconds: float
+    bottleneck_link: Optional[Link]
+    bottleneck_bytes: int
+    per_link_seconds: Dict[Link, float] = field(default_factory=dict)
+
+
+class WanTimingModel:
+    """Deterministic completion-time model for a set of concurrent flows.
+
+    Each flow is routed through the fabric (updating byte counters); the
+    completion time of the whole set is driven by the most-loaded link:
+    ``max_l bytes(l)/bw(l) + 2*propagation + jitter_sample``.  This is the
+    standard fluid approximation; it is what lets the Fig. 14 reproduction
+    produce per-batch times without packet-level simulation.
+    """
+
+    def __init__(self, netem: Netem):
+        self.netem = netem
+        self.fabric = netem.fabric
+
+    def transfer_time(
+        self,
+        flow_bytes: Dict[Link, int],
+        rtt_ms: float = 0.0,
+        jitter_sample_ms: float = 0.0,
+    ) -> TransferResult:
+        per_link: Dict[Link, float] = {}
+        worst: Tuple[float, Optional[Link], int] = (0.0, None, 0)
+        for (u, v), nbytes in flow_bytes.items():
+            if u in self.fabric.hosts or v in self.fabric.hosts:
+                bw = self.netem.lan.bandwidth_gbps
+            else:
+                bw = self.netem.profile(u, v).bandwidth_gbps
+            secs = nbytes * 8.0 / (bw * 1e9)
+            per_link[(u, v)] = secs
+            if secs > worst[0]:
+                worst = (secs, (u, v), nbytes)
+        total = worst[0] + (rtt_ms + jitter_sample_ms) / 1e3
+        return TransferResult(
+            seconds=total,
+            bottleneck_link=worst[1],
+            bottleneck_bytes=worst[2],
+            per_link_seconds=per_link,
+        )

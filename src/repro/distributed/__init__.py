@@ -1,0 +1,59 @@
+"""Distribution layer: sharding rules, WAN sync strategies, step builders."""
+
+from .compression import (
+    Int8Compressed,
+    apply_error_feedback,
+    compressed_bytes,
+    init_error_feedback,
+    int8_compress,
+    int8_decompress,
+    residual,
+    topk_densify,
+    topk_sparsify,
+)
+from .sharding import (
+    batch_pspecs,
+    batch_shardings,
+    cache_pspecs,
+    cache_shardings,
+    params_pspecs,
+    params_shardings,
+)
+from .steps import (
+    TrainState,
+    init_train_state,
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    state_pspecs,
+)
+from .sync import STRATEGIES, sync_allreduce, sync_hier, sync_hier_int8, wan_bytes_per_step
+
+__all__ = [
+    "Int8Compressed",
+    "STRATEGIES",
+    "TrainState",
+    "apply_error_feedback",
+    "batch_pspecs",
+    "batch_shardings",
+    "cache_pspecs",
+    "cache_shardings",
+    "compressed_bytes",
+    "init_error_feedback",
+    "init_train_state",
+    "int8_compress",
+    "int8_decompress",
+    "make_decode_step",
+    "make_prefill_step",
+    "make_train_step",
+    "params_pspecs",
+    "params_shardings",
+    "residual",
+    "state_pspecs",
+    "sync_allreduce",
+    "sync_hier",
+    "sync_hier_int8",
+    "topk_densify",
+    "topk_sparsify",
+    "wan_bytes_per_step",
+]

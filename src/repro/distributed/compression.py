@@ -1,0 +1,109 @@
+"""Gradient compression for the WAN hop (beyond-paper optimization).
+
+Only cross-pod (inter-data-center) traffic is compressed: intra-pod ICI
+collectives stay full precision.  Two compressors:
+
+* :func:`int8_compress` / :func:`int8_decompress` — per-block absmax int8,
+  blocks of 256 lanes along the LAST axis (leading dims untouched, so a
+  GSPMD-sharded gradient never needs resharding to be compressed);
+  4x byte reduction on fp32.  The Pallas kernel
+  (``repro.kernels.wan_quant``) implements the same transform for the TPU
+  hot path; this jnp version is its oracle and the CPU/dry-run path.
+
+* :func:`topk_sparsify` — magnitude top-k with index+value transport.
+
+:class:`ErrorFeedback` helpers accumulate the quantization residual per
+pod and re-inject it the next step (Seide et al.; standard for convergent
+compressed all-reduce).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+class Int8Compressed(NamedTuple):
+    values: jnp.ndarray  # int8  [..., L_pad]
+    scales: jnp.ndarray  # f32   [..., L_pad / BLOCK]
+    orig_last: int  # unpadded last-dim size
+    orig_shape: Tuple[int, ...]
+
+
+def _as_2plus_d(x):
+    """View with >=1 trailing lane dim (scalars/1-d promoted)."""
+    if x.ndim == 0:
+        return x.reshape(1)
+    return x
+
+
+def int8_compress(x: jnp.ndarray) -> Int8Compressed:
+    orig_shape = tuple(x.shape)
+    x2 = _as_2plus_d(x.astype(jnp.float32))
+    last = x2.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x2 = jnp.pad(x2, [(0, 0)] * (x2.ndim - 1) + [(0, pad)])
+    nblocks = x2.shape[-1] // BLOCK
+    blocks = x2.reshape(*x2.shape[:-1], nblocks, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return Int8Compressed(
+        values=q.reshape(*x2.shape[:-1], nblocks * BLOCK),
+        scales=scale[..., 0],
+        orig_last=last,
+        orig_shape=orig_shape,
+    )
+
+
+def int8_decompress(c: Int8Compressed) -> jnp.ndarray:
+    lead = c.values.shape[:-1]
+    nblocks = c.values.shape[-1] // BLOCK
+    blocks = c.values.reshape(*lead, nblocks, BLOCK).astype(jnp.float32)
+    full = (blocks * c.scales[..., None]).reshape(*lead, nblocks * BLOCK)
+    return full[..., : c.orig_last].reshape(c.orig_shape)
+
+
+def compressed_bytes(c: Int8Compressed) -> int:
+    return int(c.values.size + c.scales.size * 4)
+
+
+def topk_sparsify(x: jnp.ndarray, k_fraction: float = 0.01):
+    """Magnitude top-k: returns (values, flat indices, shape)."""
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * k_fraction))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    vals = flat[idx]
+    return vals, idx, tuple(x.shape)
+
+
+def topk_densify(vals, idx, shape):
+    size = 1
+    for s in shape:
+        size *= s
+    flat = jnp.zeros((size,), vals.dtype)
+    return flat.at[idx].set(vals).reshape(shape)
+
+
+# -- error feedback ----------------------------------------------------------------
+
+
+def init_error_feedback(grads) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def apply_error_feedback(grads, ef):
+    """g' = g + residual (per leaf)."""
+    return jax.tree.map(lambda g, e: g.astype(jnp.float32) + e, grads, ef)
+
+
+def residual(original, transmitted):
+    """New residual = what compression lost this step."""
+    return jax.tree.map(
+        lambda o, t: o.astype(jnp.float32) - t.astype(jnp.float32), original, transmitted
+    )

@@ -1,0 +1,232 @@
+"""Sharding rules: parameter/batch/cache PartitionSpecs per mesh.
+
+Policy (training *and* serving — 2-D weight sharding):
+
+* projections' input-ish dim -> ``data`` (FSDP), output-ish dim -> ``model``
+  (tensor parallelism); experts -> ``model`` (expert parallelism) with the
+  expert FFN width additionally FSDP-sharded over ``data``;
+* parameters are REPLICATED across ``pod`` — each data center holds a full
+  replica, the geo-DP setting of the paper; only gradient synchronization
+  crosses the WAN (see ``repro.distributed.sync``);
+* batch dims shard over ``("pod", "data")``; KV caches shard batch over
+  ``data`` and kv-heads over ``model``;
+* a dim is sharded only when the mesh axis divides it — otherwise the rule
+  falls back to replication for that dim (keeps odd vocabularies and tiny
+  smoke configs compiling).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# rules keyed by parameter leaf name -> spec over the TRAILING dims.
+# "F" = fsdp/data axis, "T" = tensor/model axis, "E" = expert/model axis,
+# None = replicated.  Leading (stack) dims are padded with None.
+_TRAILING_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    # embeddings.  NOTE: the embedding table must not shard its non-vocab
+    # dim over "data": XLA's SPMD partitioner (CPU pipeline) hits a CHECK
+    # failure partitioning the token gather under a manual "pod" sub-mesh
+    # when the gather operand is partially replicated over "data"
+    # (PartitionGatherTrivialSlicedOperandDimensions -> ReplicatePartial).
+    # Vocab-over-model is also the TP-friendly layout for the LM head.
+    "embed": ("T", None),  # (V, D)
+    "unembed": ("F", "T"),  # (D, V)
+    # frontend_proj's output dim must ALSO avoid "data": its sharding
+    # propagates through the prefix-concat onto the token-gather output,
+    # retriggering the same partitioner CHECK.
+    "frontend_proj": (None, "T"),  # (frontend_dim, D)
+    # attention
+    "wq": ("F", "T"),
+    "wk": ("F", "T"),
+    "wv": ("F", "T"),
+    "wo": ("T", "F"),
+    "bq": ("T",),
+    "bk": ("T",),
+    "bv": ("T",),
+    "bo": (None,),
+    # dense ffn
+    "w_gate": ("F", "T"),
+    "w_up": ("F", "T"),
+    "w_down": ("T", "F"),
+    "b_up": ("T",),
+    "b_down": (None,),
+    # rwkv time-mix / channel-mix
+    "wr": ("F", "T"),
+    "wg": ("F", "T"),
+    "cm_k": ("F", "T"),
+    "cm_v": ("T", "F"),
+    "cm_r": ("F", "T"),
+    "decay_a": ("F", None),
+    "decay_b": (None, "F"),
+    # rg-lru
+    "w_in_x": ("F", "T"),
+    "w_in_g": ("F", "T"),
+    "w_gate_a": ("F", "T"),
+    "w_gate_x": ("F", "T"),
+    "w_out": ("T", "F"),
+    "conv_w": (None, "T"),
+    "conv_b": ("T",),
+    # moe
+    "router": ("F", None),
+}
+
+# MoE expert weights carry an extra leading E dim -> expert parallelism.
+_MOE_TENSORS = {"w_gate", "w_up", "w_down"}
+_MOE_RULES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("E", None, "F"),  # (E, D, F)
+    "w_up": ("E", None, "F"),
+    "w_down": ("E", "F", None),  # (E, F, D)
+}
+
+
+def _axis(mesh: Mesh, tag: Optional[str]) -> Optional[str]:
+    if tag is None:
+        return None
+    name = {"F": "data", "T": "model", "E": "model"}[tag]
+    return name if name in mesh.axis_names else None
+
+
+def _spec_for(path: Tuple, leaf, mesh: Mesh) -> P:
+    names = [getattr(k, "key", getattr(k, "name", getattr(k, "idx", None))) for k in path]
+    leaf_name = names[-1] if names else None
+    in_moe = any(n == "ffn" for n in names) and leaf_name in _MOE_TENSORS and leaf.ndim >= 3
+    rank = len(leaf.shape)
+    if in_moe and rank >= 3:
+        trailing = _MOE_RULES[leaf_name]
+        e_dim = rank - 3  # (..., E, D/F, F/D)
+        if "model" in mesh.axis_names and leaf.shape[e_dim] % mesh.shape["model"] != 0:
+            # few-expert MoE (e.g. Mixtral's 8 experts on a 16-way model
+            # axis): EP doesn't divide, so shard the FFN width over BOTH
+            # model and data jointly — otherwise 100+ GB of experts
+            # replicate per model shard.
+            f_axes = ("model", "data")
+            ok = all(a in mesh.axis_names for a in f_axes)
+            if ok:
+                spec: list = [None] * rank
+                width = 1
+                for a in f_axes:
+                    width *= mesh.shape[a]
+                if leaf_name in ("w_gate", "w_up"):
+                    f_dim = rank - 1  # (E, D, F)
+                else:
+                    f_dim = rank - 2  # (E, F, D)
+                if leaf.shape[f_dim] % width == 0:
+                    spec[f_dim] = f_axes
+                    return P(*spec)
+    else:
+        trailing = _TRAILING_RULES.get(leaf_name)
+    if trailing is None or rank < len(trailing):
+        return P()
+    spec: list = [None] * rank
+    used = set()
+    for i, tag in enumerate(trailing):
+        dim = rank - len(trailing) + i
+        axis = _axis(mesh, tag)
+        if axis is None or axis in used:
+            continue
+        if leaf.shape[dim] % mesh.shape[axis] == 0 and leaf.shape[dim] > 0:
+            spec[dim] = axis
+            used.add(axis)
+    return P(*spec)
+
+
+def params_pspecs(params_shapes, mesh: Mesh):
+    """PartitionSpec pytree for a params (shape) pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _spec_for(path, leaf, mesh), params_shapes
+    )
+
+
+def params_shardings(params_shapes, mesh: Mesh):
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec), params_pspecs(params_shapes, mesh)
+    )
+
+
+# -- batch / cache ---------------------------------------------------------------
+
+
+def _batch_axes(mesh: Mesh, size: int) -> P:
+    """Shard a batch dim over ("pod","data") as divisibility allows."""
+    axes = [a for a in ("pod", "data") if a in mesh.axis_names]
+    combo: Tuple[str, ...] = ()
+    prod = 1
+    for a in axes:
+        if size % (prod * mesh.shape[a]) == 0:
+            combo = combo + (a,)
+            prod *= mesh.shape[a]
+    return combo if combo else None
+
+
+def batch_pspecs(batch_shapes, mesh: Mesh):
+    """Shard every batch input over its leading (batch) dim."""
+
+    def spec(leaf):
+        b = _batch_axes(mesh, leaf.shape[0]) if leaf.ndim >= 1 else None
+        return P(b, *([None] * max(leaf.ndim - 1, 0)))
+
+    return jax.tree.map(spec, batch_shapes)
+
+
+def batch_shardings(batch_shapes, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), batch_pspecs(batch_shapes, mesh))
+
+
+def cache_pspecs(cache_shapes, mesh: Mesh):
+    """KV/recurrent cache sharding.
+
+    Layout per leaf (after the optional leading group-stack dim):
+      k/v:  [B, S, KVH, hd]  -> batch over data, kv-heads over model
+      pos:  [S]              -> replicated
+      wkv:  [B, H, N, N]     -> batch over data, heads over model
+      conv/h/shift: [B, ...] -> batch over data
+    """
+    model = "model" if True else None
+
+    def spec(path, leaf):
+        names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
+        leaf_name = names[-1]
+        stacked = any(n == "groups" for n in names)
+        lead = (None,) if stacked else ()
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        def div(dim_size, axis):
+            return axis in mesh.axis_names and dim_size % mesh.shape[axis] == 0
+
+        if leaf_name in ("k", "v") and len(shape) == 4:
+            b, s, kvh, hd = shape
+            # prefer kv-head TP; fall back to head_dim TP when kv_heads
+            # don't divide (GQA with few kv heads on a wide model axis) —
+            # without this, e.g. yi-34b decode_32k replicates a 1 TB cache.
+            if div(kvh, "model"):
+                kv_spec, hd_spec = "model", None
+            elif div(hd, "model"):
+                kv_spec, hd_spec = None, "model"
+            else:
+                kv_spec, hd_spec = None, None
+            return P(*lead,
+                     "data" if div(b, "data") else None,
+                     None, kv_spec, hd_spec)
+        if leaf_name == "wkv" and len(shape) == 4:
+            b, h, n, _ = shape
+            return P(*lead,
+                     "data" if div(b, "data") else None,
+                     "model" if div(h, "model") else None,
+                     None, None)
+        if leaf_name in ("h", "conv", "shift_att", "shift_ffn") and len(shape) >= 2:
+            b = shape[0]
+            d_last = shape[-1]
+            mid = [None] * (len(shape) - 2)
+            return P(*lead,
+                     "data" if div(b, "data") else None,
+                     *mid,
+                     "model" if div(d_last, "model") else None)
+        return P(*lead, *([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shapes)
+
+
+def cache_shardings(cache_shapes, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), cache_pspecs(cache_shapes, mesh))

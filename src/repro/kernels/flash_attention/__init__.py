@@ -1,0 +1,5 @@
+from .kernel import flash_attention_fwd
+from .ops import flash_attention
+from .ref import flash_attention_ref
+
+__all__ = ["flash_attention", "flash_attention_fwd", "flash_attention_ref"]

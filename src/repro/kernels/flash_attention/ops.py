@@ -1,0 +1,63 @@
+"""Jit-ready wrapper for the flash-attention Pallas kernel.
+
+Accepts the model's native [B, S, H, hd] layout, transposes to the
+kernel's heads-first tiling layout, picks MXU-aligned block sizes, and
+falls back to the jnp reference for shapes the kernel cannot tile (tiny
+smoke shapes, non-divisible sequence lengths).
+
+On this CPU container the kernel runs with ``interpret=True`` (Pallas
+executes the kernel body in Python) — the TPU target is the compiled
+Mosaic path with identical semantics.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import flash_attention_fwd
+from .ref import flash_attention_ref
+
+
+def _pick_block(s: int, preferred: int) -> Optional[int]:
+    for b in (preferred, 512, 256, 128):
+        if b <= s and s % b == 0:
+            return b
+    return None
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "logit_softcap", "block_q", "block_k", "interpret"),
+)
+def flash_attention(
+    q: jnp.ndarray,  # [B, Sq, H, hd]
+    k: jnp.ndarray,  # [B, Sk, KVH, hd]
+    v: jnp.ndarray,  # [B, Sk, KVH, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+    block_q: int = 512,
+    block_k: int = 512,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    qt = jnp.swapaxes(q, 1, 2)  # [B, H, Sq, hd]
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    bq = _pick_block(qt.shape[2], block_q)
+    bk = _pick_block(kt.shape[2], block_k)
+    if bq is None or bk is None:
+        out = flash_attention_ref(
+            qt, kt, vt, causal=causal, window=window, logit_softcap=logit_softcap
+        )
+    else:
+        out = flash_attention_fwd(
+            qt, kt, vt,
+            causal=causal, window=window, logit_softcap=logit_softcap,
+            block_q=bq, block_k=bk, interpret=interpret,
+        )
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Numerically the plain softmax-attention definition — the kernel must match
+this to tolerance across the shape/dtype sweep in tests/test_kernels.py.
+Layout: heads-first [B, H, S, hd] (the kernel's native tiling layout).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, H, Sq, hd]
+    k: jnp.ndarray,  # [B, KVH, Sk, hd]
+    v: jnp.ndarray,  # [B, KVH, Sk, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    logit_softcap: Optional[float] = None,
+) -> jnp.ndarray:
+    b, h, sq, hd = q.shape
+    kvh = k.shape[1]
+    groups = h // kvh
+    qg = q.reshape(b, kvh, groups, sq, hd).astype(jnp.float32)
+    scale = hd ** -0.5
+    logits = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32)) * scale
+    if logit_softcap is not None:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    q_pos = jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(k.shape[2])[None, :]
+    mask = jnp.ones((sq, k.shape[2]), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, h, sq, hd).astype(q.dtype)

@@ -1,0 +1,5 @@
+from .kernel import wkv6_fwd
+from .ops import wkv6
+from .ref import wkv6_ref
+
+__all__ = ["wkv6", "wkv6_fwd", "wkv6_ref"]

@@ -1,0 +1,115 @@
+"""RWKV6 WKV recurrence as a Pallas TPU kernel.
+
+The sub-quadratic engine behind the `long_500k` shapes: per (batch, head)
+the recurrence carries an [N, N] state (N = 64 -> 16 KB f32, comfortably
+VMEM-resident) while streaming T timesteps through in chunks.
+
+Grid: (B, H, T/chunk) with the time dimension sequential ("arbitrary") —
+the state lives in VMEM scratch across chunk steps, so HBM traffic is
+exactly one read of (r, k, v, w) and one write of the output: the kernel
+is HBM-bandwidth-bound by construction, which is the roofline-optimal
+shape for this memory-bound recurrence (arithmetic intensity ~N/2).
+
+Inside a chunk the timestep loop is a ``fori_loop`` of rank-1 updates:
+    out_t  = r_t . (S + u * k_t v_t^T)
+    S     <- diag(w_t) S + k_t v_t^T
+The (N, 1) x (1, N) outer products and (1, N) x (N, N) row-vector matmuls
+map onto the MXU as skinny matmuls.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(
+    r_ref,  # [1, chunk, 1, N]
+    k_ref,
+    v_ref,
+    w_ref,
+    u_ref,  # [1, N]
+    s0_ref,  # [1, 1, N, N]
+    o_ref,  # [1, chunk, 1, N]
+    sout_ref,  # [1, 1, N, N]
+    state_scr,  # [N, N] f32 VMEM scratch
+    *,
+    chunk: int,
+    num_chunks: int,
+):
+    ti = pl.program_id(2)
+
+    @pl.when(ti == 0)
+    def _init():
+        state_scr[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)  # [N]
+
+    def step(t, state):
+        r_t = r_ref[0, t, 0].astype(jnp.float32)  # [N]
+        k_t = k_ref[0, t, 0].astype(jnp.float32)
+        v_t = v_ref[0, t, 0].astype(jnp.float32)
+        w_t = w_ref[0, t, 0].astype(jnp.float32)
+        kv = k_t[:, None] * v_t[None, :]  # [N, N]
+        boosted = state + u[:, None] * kv
+        out = jax.lax.dot_general(
+            r_t[None, :], boosted, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )[0]
+        o_ref[0, t, 0] = out.astype(o_ref.dtype)
+        return state * w_t[:, None] + kv
+
+    state = jax.lax.fori_loop(0, chunk, step, state_scr[...])
+    state_scr[...] = state
+
+    @pl.when(ti == num_chunks - 1)
+    def _final():
+        sout_ref[0, 0] = state.astype(sout_ref.dtype)
+
+
+def wkv6_fwd(
+    r: jnp.ndarray,  # [B, T, H, N]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,
+    u: jnp.ndarray,  # [H, N]
+    state0: jnp.ndarray,  # [B, H, N, N]
+    *,
+    chunk: int = 128,
+    interpret: bool = False,
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    b, t, h, n = r.shape
+    chunk = min(chunk, t)
+    assert t % chunk == 0, (t, chunk)
+    nchunks = t // chunk
+
+    kernel = functools.partial(_wkv_kernel, chunk=chunk, num_chunks=nchunks)
+    seq_spec = pl.BlockSpec((1, chunk, 1, n), lambda b_, h_, ti: (b_, ti, h_, 0))
+    out, sout = pl.pallas_call(
+        kernel,
+        grid=(b, h, nchunks),
+        in_specs=[
+            seq_spec, seq_spec, seq_spec, seq_spec,
+            pl.BlockSpec((1, n), lambda b_, h_, ti: (h_, 0)),
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, ti: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            seq_spec,
+            pl.BlockSpec((1, 1, n, n), lambda b_, h_, ti: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, n), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, n, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((n, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(r, k, v, w, u, state0)
+    return out, sout

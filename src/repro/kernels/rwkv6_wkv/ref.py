@@ -1,0 +1,34 @@
+"""Pure-jnp oracle for the RWKV6 WKV kernel: scan over time.
+
+Identical math to ``repro.models.rwkv6.wkv6_scan`` (kept standalone so the
+kernel test does not depend on the model stack).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(
+    r: jnp.ndarray,  # [B, T, H, N]
+    k: jnp.ndarray,
+    v: jnp.ndarray,
+    w: jnp.ndarray,  # decay in (0, 1)
+    u: jnp.ndarray,  # [H, N] bonus
+    state0: jnp.ndarray,  # [B, H, N, N]
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    def step(state, inputs):
+        r_t, k_t, v_t, w_t = inputs  # [B, H, N]
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B, H, N, N]
+        out = jnp.einsum("bhi,bhij->bhj", r_t, state + u[None, :, :, None] * kv)
+        state = state * w_t[..., :, None] + kv
+        return state, out
+
+    xs = tuple(
+        jnp.moveaxis(a.astype(jnp.float32), 1, 0) for a in (r, k, v, w)
+    )
+    final, outs = jax.lax.scan(step, state0.astype(jnp.float32), xs)
+    return jnp.moveaxis(outs, 0, 1), final

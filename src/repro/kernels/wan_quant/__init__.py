@@ -1,0 +1,5 @@
+from .kernel import BLOCK, wan_dequant, wan_quant
+from .ops import dequantize, quantize
+from .ref import wan_dequant_ref, wan_quant_ref
+
+__all__ = ["BLOCK", "dequantize", "quantize", "wan_dequant", "wan_dequant_ref", "wan_quant", "wan_quant_ref"]

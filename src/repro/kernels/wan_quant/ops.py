@@ -1,0 +1,63 @@
+"""Jit-ready wrappers for the WAN quantization kernels.
+
+Handles arbitrary pytree-leaf shapes: pads the trailing dim to a 256
+multiple, flattens leading dims to rows, and dispatches to the Pallas
+kernel (interpret mode on CPU).  The round-trip composes with the error-
+feedback machinery in ``repro.distributed.compression``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import BLOCK, wan_dequant, wan_quant
+
+
+def _to_rows(x: jnp.ndarray) -> Tuple[jnp.ndarray, Tuple[int, ...], int]:
+    orig_shape = tuple(x.shape)
+    if x.ndim == 0:
+        x = x.reshape(1, 1)
+    elif x.ndim == 1:
+        x = x.reshape(1, -1)
+    else:
+        x = x.reshape(-1, x.shape[-1])
+    last = x.shape[-1]
+    pad = (-last) % BLOCK
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad)))
+    return x, orig_shape, last
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def quantize(x: jnp.ndarray, *, interpret: bool = True):
+    """Any-shape leaf -> (int8 rows, scales, static (shape, last)) bundle."""
+    rows, orig_shape, last = _to_rows(x.astype(jnp.float32))
+    rt = 1
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if rows.shape[0] % cand == 0:
+            rt = cand
+            break
+    q, s = wan_quant(rows, row_tile=rt, interpret=interpret)
+    return q, s
+
+
+@functools.partial(jax.jit, static_argnames=("orig_shape", "interpret"))
+def dequantize(q, s, *, orig_shape: Tuple[int, ...], interpret: bool = True):
+    rt = 1
+    for cand in (256, 128, 64, 32, 16, 8, 4, 2, 1):
+        if q.shape[0] % cand == 0:
+            rt = cand
+            break
+    full = wan_dequant(q, s, row_tile=rt, interpret=interpret)
+    last = orig_shape[-1] if orig_shape else 1
+    if full.ndim and orig_shape:
+        lead = 1
+        for d in orig_shape[:-1]:
+            lead *= d
+        full = full[:, :last] if full.shape[-1] != last else full
+        return full.reshape(orig_shape)
+    return full.reshape(orig_shape)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for the WAN int8 quantization kernel.
+
+Matches ``repro.distributed.compression.int8_compress`` exactly: per-row
+blocks of 256 lanes, absmax scale, symmetric round-to-nearest int8.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def wan_quant_ref(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [rows, lanes] (lanes % 256 == 0) -> (int8 [rows, lanes],
+    scales f32 [rows, lanes/256])."""
+    rows, lanes = x.shape
+    assert lanes % BLOCK == 0
+    blocks = x.astype(jnp.float32).reshape(rows, lanes // BLOCK, BLOCK)
+    absmax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(rows, lanes), scale[..., 0]
+
+
+def wan_dequant_ref(q: jnp.ndarray, scales: jnp.ndarray) -> jnp.ndarray:
+    rows, lanes = q.shape
+    blocks = q.reshape(rows, lanes // BLOCK, BLOCK).astype(jnp.float32)
+    return (blocks * scales[..., None]).reshape(rows, lanes)

@@ -1,0 +1,179 @@
+"""HLO post-processing: collective byte accounting from compiled modules.
+
+``compiled.cost_analysis()`` reports per-device FLOPs and bytes but NOT
+collective traffic, so we parse the optimized HLO text: every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` instruction contributes its result-shape bytes.
+
+Cross-pod classification: on the (2, 16, 16) production mesh, device ids
+0..255 are pod 0 and 256..511 pod 1 (the pod axis varies slowest), so a
+replica group containing ids from both halves is WAN traffic.  Both the
+explicit ``{{0,256},...}`` and iota-v2 ``[g,n]<=[512]`` group encodings
+are handled (iota conservatively: classified cross-pod when the group
+size exceeds the per-pod device count or the iota covers the full mesh
+with a permutation mixing the leading dim).
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  %all-reduce.5 = f32[128,1024]{1,0} all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[^\]]*\][^\s\)]*)(?:,\s*[a-z0-9]+\[[^\]]*\][^\s\)]*)*)\s*\)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+#: XLA elides long group lists ("{{0,256},{1,257},...}"); dots allowed.
+_EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,{}. ]*)\}\}")
+#: collective-permute uses point-to-point pairs, not replica groups.  A
+#: 2-pod psum is lowered by XLA as permute+add, so these carry the
+#: cross-pod gradient traffic on the 2x16x16 mesh.
+_PERMUTE_PAIRS_RE = re.compile(r"source_target_pairs=\{\{([0-9,{}. ]*)\}\}")
+_IOTA_GROUPS_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([0-9,]+)\](?:T\(([0-9,]+)\))?"
+)
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO shape string."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    #: per-op-kind total result bytes (one device's view)
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    #: bytes on collectives whose replica groups span pods (WAN)
+    cross_pod_bytes: int = 0
+    #: bytes on collectives we could not classify
+    unclassified_bytes: int = 0
+    count: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def _groups_cross_pod(line: str, pod_size: int) -> Optional[bool]:
+    m = _PERMUTE_PAIRS_RE.search(line)
+    if m:
+        for pair in m.group(1).split("},{"):
+            ids = [
+                int(x)
+                for x in pair.replace("{", "").replace("}", "").split(",")
+                if x.strip().isdigit()
+            ]
+            if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                return True
+        return False
+    m = _EXPLICIT_GROUPS_RE.search(line)
+    if m:
+        for grp in m.group(1).split("},{"):
+            ids = [
+                int(x)
+                for x in grp.replace("{", "").replace("}", "").split(",")
+                if x.strip().isdigit()
+            ]
+            if ids and (min(ids) // pod_size) != (max(ids) // pod_size):
+                return True
+        return False
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        n_groups, group_size = int(m.group(1)), int(m.group(2))
+        iota_dims = [int(x) for x in m.group(3).split(",")]
+        total = 1
+        for d in iota_dims:
+            total *= d
+        n_pods = max(total // pod_size, 1)
+        if len(iota_dims) == 1 and not m.group(4):
+            # contiguous iota: group g covers [g*group_size, (g+1)*size)
+            if group_size > pod_size:
+                return True
+            return pod_size % group_size != 0
+        # N-d (possibly transposed) iota: group members are the trailing
+        # dims of the permuted device array whose product covers
+        # group_size; the group crosses pods iff the pod dim (original
+        # dim 0, by mesh construction) is among those varying dims.
+        perm = (
+            [int(x) for x in m.group(4).split(",")]
+            if m.group(4)
+            else list(range(len(iota_dims)))
+        )
+        permuted = [iota_dims[p] for p in perm]
+        prod, varying = 1, []
+        for pos in range(len(permuted) - 1, -1, -1):
+            if prod >= group_size:
+                break
+            prod *= permuted[pos]
+            varying.append(perm[pos])
+        if iota_dims[0] == n_pods and n_pods > 1:
+            return 0 in varying
+        return None
+    return None
+
+
+_OPNAME_RE = re.compile(
+    r"\s(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\("
+)
+
+
+def parse_collectives(hlo_text: str, *, pod_size: int = 0) -> CollectiveStats:
+    """Scan optimized HLO for collective ops; bytes are one device's view.
+
+    The result may be a TUPLE shape (XLA's all-reduce combiner merges many
+    psums into one tuple all-reduce, with /*index=N*/ comments inline), so
+    bytes are summed over every shape token LEFT of the op name — i.e. the
+    result only, never the operands.
+    """
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        if not stripped.startswith("%") or "= " not in stripped:
+            continue
+        m = _OPNAME_RE.search(stripped)
+        if not m:
+            continue
+        opname, suffix = m.group(1), m.group(2)
+        if suffix == "-done":
+            continue  # counted at -start
+        nbytes = shape_bytes(stripped[: m.start()])
+        stats.bytes_by_kind[opname] = stats.bytes_by_kind.get(opname, 0) + nbytes
+        stats.count += 1
+        if pod_size:
+            crosses = _groups_cross_pod(stripped, pod_size)
+            if crosses is None:
+                stats.unclassified_bytes += nbytes
+            elif crosses:
+                stats.cross_pod_bytes += nbytes
+    return stats
+
+
+def scan_trip_counts(hlo_text: str) -> List[int]:
+    """Best-effort trip counts of while loops (scan bodies) in the module."""
+    # XLA annotates known trip counts:  while(...), ... trip_count=12
+    return [int(x) for x in re.findall(r"trip_count[=:]\s*(\d+)", hlo_text)]

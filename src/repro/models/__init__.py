@@ -1,0 +1,28 @@
+"""Model stack: unified decoder covering all assigned architectures."""
+
+from .config import ATTN, LOCAL, RECURRENT, RWKV, ModelConfig, MoEConfig
+from .transformer import (
+    IGNORE_LABEL,
+    decode_step,
+    forward,
+    init_decode_cache,
+    init_params,
+    loss_fn,
+    prefill,
+)
+
+__all__ = [
+    "ATTN",
+    "LOCAL",
+    "RECURRENT",
+    "RWKV",
+    "IGNORE_LABEL",
+    "ModelConfig",
+    "MoEConfig",
+    "decode_step",
+    "forward",
+    "init_decode_cache",
+    "init_params",
+    "loss_fn",
+    "prefill",
+]

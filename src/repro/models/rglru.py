@@ -1,0 +1,120 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The Real-Gated Linear Recurrent Unit:
+
+    r_t = sigmoid(x_t W_a)                    # recurrence gate
+    i_t = sigmoid(x_t W_x)                    # input gate
+    a_t = a^(c * r_t)        with a = sigmoid(Lambda), c = 8
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+embedded in Griffin's recurrent block: linear in-proj to a 2-branch
+(GeGLU-style gate + temporal conv1d(4) + RG-LRU) and linear out-proj.
+Decode is O(1): state = (lru hidden [B, Dr], conv tail [B, 3, Dr]).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import dense_init
+
+Params = Dict[str, jnp.ndarray]
+
+CONV_WIDTH = 4
+LRU_C = 8.0
+
+
+def init_rglru_block(key, cfg: ModelConfig) -> Params:
+    d = cfg.d_model
+    dr = cfg.d_rnn
+    pdt = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 6)
+    # Lambda init so a = sigmoid(Lambda)^c spans ~(0.9, 0.999)
+    lam = jnp.log(jnp.linspace(0.9, 0.999, dr) ** (1.0 / LRU_C))
+    lam = lam - jnp.log1p(-jnp.exp(lam))  # logit
+    return {
+        "w_in_x": dense_init(ks[0], (d, dr), dtype=pdt),  # recurrent branch
+        "w_in_g": dense_init(ks[1], (d, dr), dtype=pdt),  # gate branch
+        "conv_w": (jax.random.normal(ks[2], (CONV_WIDTH, dr)) * 0.1).astype(pdt),
+        "conv_b": jnp.zeros((dr,), pdt),
+        "lru_lambda": lam.astype(jnp.float32),
+        "w_gate_a": dense_init(ks[3], (dr, dr), dtype=pdt),
+        "w_gate_x": dense_init(ks[4], (dr, dr), dtype=pdt),
+        "w_out": dense_init(ks[5], (dr, d), in_axis_size=dr, dtype=pdt),
+    }
+
+
+def _causal_conv1d(x, w, b, *, tail):
+    """Depthwise causal conv, width CONV_WIDTH.
+
+    x: [B, T, Dr]; tail: [B, CONV_WIDTH-1, Dr] from the previous segment.
+    Returns (y [B, T, Dr], new_tail).
+    """
+    b_, t, dr = x.shape
+    padded = jnp.concatenate([tail.astype(x.dtype), x], axis=1)  # [B, T+3, Dr]
+    y = jnp.zeros_like(x)
+    for i in range(CONV_WIDTH):
+        y = y + padded[:, i : i + t, :] * w[i][None, None, :].astype(x.dtype)
+    y = y + b[None, None, :].astype(x.dtype)
+    new_tail = padded[:, t:, :]
+    return y, new_tail
+
+
+def rg_lru(x, r_gate, i_gate, lam, *, h0):
+    """The RG-LRU recurrence via associative scan.
+
+    x, r_gate, i_gate: [B, T, Dr]; h0: [B, Dr].
+    Returns (h [B, T, Dr], h_last [B, Dr]).
+
+    Uses the linear-recurrence composition (a1, b1) o (a2, b2) =
+    (a1*a2, b1*a2 + b2) under jax.lax.associative_scan (log-depth on TPU).
+    """
+    log_a_base = jax.nn.log_sigmoid(lam)[None, None, :]  # [1,1,Dr]
+    log_a = LRU_C * r_gate.astype(jnp.float32) * log_a_base
+    a = jnp.exp(log_a)
+    gated_x = (i_gate * x).astype(jnp.float32)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    b_seq = beta * gated_x
+
+    # fold the initial state into the first element
+    b_seq = b_seq.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_l * a_r, b_l * a_r + b_r
+
+    a_cum, h = jax.lax.associative_scan(combine, (a, b_seq), axis=1)
+    return h.astype(x.dtype), h[:, -1, :]
+
+
+def rglru_block(
+    params: Params,
+    x,  # [B, T, D]
+    cfg: ModelConfig,
+    *,
+    state,  # {"h": [B, Dr], "conv": [B, 3, Dr]}
+):
+    """Griffin recurrent block. Returns (y, new_state)."""
+    dt = cfg.compute_dtype
+    branch_x = x @ params["w_in_x"].astype(dt)
+    branch_g = jax.nn.gelu(x @ params["w_in_g"].astype(dt))
+    conv_out, new_tail = _causal_conv1d(
+        branch_x, params["conv_w"], params["conv_b"], tail=state["conv"]
+    )
+    r_gate = jax.nn.sigmoid(conv_out @ params["w_gate_a"].astype(dt))
+    i_gate = jax.nn.sigmoid(conv_out @ params["w_gate_x"].astype(dt))
+    h, h_last = rg_lru(conv_out, r_gate, i_gate, params["lru_lambda"], h0=state["h"])
+    y = (h * branch_g) @ params["w_out"].astype(dt)
+    return y, {"h": h_last, "conv": new_tail}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int):
+    return {
+        "h": jnp.zeros((batch, cfg.d_rnn), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_WIDTH - 1, cfg.d_rnn), cfg.compute_dtype),
+    }

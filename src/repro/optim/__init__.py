@@ -1,0 +1,10 @@
+"""Optimizers: native AdamW + DiLoCo outer optimizer for local_sgd."""
+
+from .adamw import AdamWConfig, AdamWState, adamw_update, clip_by_global_norm, global_norm, init_adamw, schedule_lr
+from .diloco import DilocoConfig, DilocoState, init_diloco, outer_step
+
+__all__ = [
+    "AdamWConfig", "AdamWState", "adamw_update", "clip_by_global_norm",
+    "global_norm", "init_adamw", "schedule_lr",
+    "DilocoConfig", "DilocoState", "init_diloco", "outer_step",
+]

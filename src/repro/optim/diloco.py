@@ -1,0 +1,68 @@
+"""DiLoCo-style outer optimization for the ``local_sgd`` sync strategy.
+
+Each pod (data center) runs H inner AdamW steps with NO WAN traffic; every
+H steps the pods exchange parameter deltas once and apply an outer
+Nesterov-momentum step.  This is the communication-frequency reduction the
+paper's related-work section points to (federated/communication-efficient
+training) made first-class: WAN bytes drop by ~H/(compression) while the
+outer momentum keeps replicas converging.
+
+All functions assume a manual ``pod`` axis (inside shard_map).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DilocoConfig(NamedTuple):
+    outer_lr: float = 0.7
+    outer_momentum: float = 0.9
+    sync_every: int = 8  # H
+
+
+class DilocoState(NamedTuple):
+    anchor: Any  # fp32 params at last outer sync (replicated across pods)
+    momentum: Any  # fp32 outer Nesterov momentum
+
+
+def init_diloco(params) -> DilocoState:
+    f32 = lambda p: p.astype(jnp.float32)
+    return DilocoState(
+        anchor=jax.tree.map(f32, params),
+        momentum=jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    )
+
+
+def outer_step(
+    cfg: DilocoConfig, params, state: DilocoState, *, axis: str = "pod"
+) -> Tuple[Any, DilocoState]:
+    """Cross-pod outer Nesterov step on parameter deltas.
+
+    delta   = anchor - params          (per pod; what inner steps learned)
+    d_mean  = psum(delta) / npods      (the ONLY WAN transfer)
+    mom     = beta * mom + d_mean
+    params' = anchor - outer_lr * (beta * mom + d_mean)   (Nesterov)
+    anchor' = params'
+    """
+    n = jax.lax.psum(1, axis)
+
+    def one(anchor, p, mom):
+        delta = anchor - p.astype(jnp.float32)
+        d_mean = jax.lax.psum(delta, axis) / n
+        new_mom = cfg.outer_momentum * mom + d_mean
+        step = cfg.outer_momentum * new_mom + d_mean  # Nesterov look-ahead
+        new_p = anchor - cfg.outer_lr * step
+        return new_p.astype(p.dtype), new_p, new_mom
+
+    flat_a, treedef = jax.tree.flatten(state.anchor)
+    flat_p = treedef.flatten_up_to(params)
+    flat_m = treedef.flatten_up_to(state.momentum)
+    out = [one(a, p, m) for a, p, m in zip(flat_a, flat_p, flat_m)]
+    new_params = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_anchor = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_mom = jax.tree.unflatten(treedef, [o[2] for o in out])
+    return new_params, DilocoState(anchor=new_anchor, momentum=new_mom)

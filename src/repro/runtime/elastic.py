@@ -1,0 +1,106 @@
+"""Elastic re-meshing: survive pod loss, absorb pod joins.
+
+When the failure detector kills a pod, the job must continue on the
+survivors: pick the new mesh (drop the pod axis or shrink it), recompute
+every sharding for the new mesh, and re-place the restored checkpoint.
+Parameters are pod-replicated by design (DESIGN.md §4), so *any* single
+surviving pod holds a complete model copy — re-meshing is a resharding,
+never a data loss.  The global batch is preserved by scaling the per-pod
+batch (synchronous semantics unchanged; data order is deterministic in
+(seed, step, host), so resume is exact).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+from repro.distributed.sharding import params_pspecs, params_shardings
+from repro.launch.mesh import make_mesh
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: Tuple[int, ...]
+    axes: Tuple[str, ...]
+    npods: int
+    note: str
+
+    def build(self) -> Mesh:
+        return make_mesh(self.shape, self.axes)
+
+
+def plan_remesh(
+    current_pods: int,
+    surviving_pods: int,
+    *,
+    data: int,
+    model: int,
+) -> MeshPlan:
+    """New mesh after pod loss/join.
+
+    2 -> 1 pods collapses the pod axis (single-DC operation); N -> M keeps
+    a pod axis of M.  The data/model factors within a pod are unchanged —
+    intra-pod topology didn't change, only the WAN peer set did.
+    """
+    if surviving_pods < 1:
+        raise ValueError("no survivors")
+    if surviving_pods == 1:
+        return MeshPlan(
+            shape=(data, model), axes=("data", "model"), npods=1,
+            note=f"collapsed pod axis ({current_pods}->1); WAN sync disabled",
+        )
+    return MeshPlan(
+        shape=(surviving_pods, data, model),
+        axes=("pod", "data", "model"),
+        npods=surviving_pods,
+        note=f"pod axis {current_pods}->{surviving_pods}",
+    )
+
+
+def reshard_tree(tree, new_mesh: Mesh):
+    """Re-place a pytree onto a new mesh using the standard rules."""
+    shapes = jax.tree.map(lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), tree)
+    shardings = params_shardings(shapes, new_mesh)
+    return jax.tree.map(
+        lambda a, s: jax.device_put(a, s), tree, shardings
+    )
+
+
+@dataclasses.dataclass
+class ElasticEvent:
+    step: int
+    kind: str  # "pod_lost" | "pod_joined"
+    pod: str
+    plan: MeshPlan
+
+
+class ElasticCoordinator:
+    """Tracks pod membership and produces re-mesh plans on change."""
+
+    def __init__(self, pods: List[str], *, data: int, model: int):
+        self.pods = list(pods)
+        self.data = data
+        self.model = model
+        self.events: List[ElasticEvent] = []
+
+    def on_pod_lost(self, pod: str, step: int) -> MeshPlan:
+        if pod in self.pods:
+            self.pods.remove(pod)
+        plan = plan_remesh(
+            len(self.pods) + 1, len(self.pods), data=self.data, model=self.model
+        )
+        self.events.append(ElasticEvent(step=step, kind="pod_lost", pod=pod, plan=plan))
+        return plan
+
+    def on_pod_joined(self, pod: str, step: int) -> MeshPlan:
+        if pod not in self.pods:
+            self.pods.append(pod)
+        plan = plan_remesh(
+            len(self.pods) - 1, len(self.pods), data=self.data, model=self.model
+        )
+        self.events.append(ElasticEvent(step=step, kind="pod_joined", pod=pod, plan=plan))
+        return plan

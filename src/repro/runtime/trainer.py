@@ -1,0 +1,206 @@
+"""GeoTrainer: the end-to-end geo-distributed training loop.
+
+Composes every substrate: model + configs, distributed step builders
+(WAN sync strategies), data pipeline, AdamW/DiLoCo, checkpointing (async,
+checksummed), heartbeat failure detection, straggler monitoring, elastic
+re-meshing, and the ScaleAcross fabric — which supplies the *WAN cost
+model* per step, so a CPU run reports the same communication economics
+the paper measures on its emulated testbed (Fig. 14).
+
+This is the driver behind ``examples/train_geo.py`` and
+``launch/train.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import AsyncCheckpointer, CheckpointStore
+from repro.core.geo import GeoFabric
+from repro.data import loader_for_model
+from repro.distributed import init_train_state, make_train_step
+from repro.launch.shapes import params_specs
+from repro.models import init_params
+from repro.models.config import ModelConfig
+from repro.optim import AdamWConfig, DilocoConfig
+
+from .failure import HeartbeatMonitor, optimal_checkpoint_interval, plan_recovery
+from .straggler import StragglerMonitor
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    seq_len: int = 128
+    global_batch: int = 8
+    steps: int = 100
+    strategy: str = "hier"
+    num_channels: int = 4
+    checkpoint_every: Optional[int] = None  # None -> Young/Daly auto
+    checkpoint_keep: int = 3
+    log_every: int = 10
+    seed: int = 0
+    opt: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+    diloco: DilocoConfig = dataclasses.field(default_factory=DilocoConfig)
+    mtbf_s: float = 6 * 3600.0  # assumed per-pod MTBF for ckpt cadence
+
+
+class GeoTrainer:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        mesh,
+        *,
+        trainer_cfg: TrainerConfig,
+        checkpoint_dir: str,
+        geo: Optional[GeoFabric] = None,
+    ):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.tc = trainer_cfg
+        self.geo = geo or GeoFabric(num_pods=max(mesh.shape.get("pod", 1), 1) + (0 if "pod" in mesh.axis_names else 1))
+        self.store = CheckpointStore(checkpoint_dir, keep=trainer_cfg.checkpoint_keep)
+        self.ckpt = AsyncCheckpointer(self.store)
+        pods = [f"pod{i}" for i in range(mesh.shape.get("pod", 1))] or ["pod0"]
+        self.heartbeats = HeartbeatMonitor(pods, interval_ms=100.0)
+        self.stragglers = StragglerMonitor(pods)
+        self.metrics_log: List[Dict[str, float]] = []
+        self._build()
+
+    # -- setup -----------------------------------------------------------------
+
+    def _build(self) -> None:
+        cfg, tc = self.cfg, self.tc
+        self.loader = loader_for_model(
+            cfg, seq_len=tc.seq_len, global_batch=tc.global_batch, seed=tc.seed
+        )
+        p_shapes = params_specs(cfg)
+        batch_np = self.loader.next_batch()
+        self.loader.step -= 1  # peek, don't consume
+        batch_shapes = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), batch_np
+        )
+        self.step_fn, self.shardings = make_train_step(
+            cfg, self.mesh,
+            opt_cfg=tc.opt,
+            strategy=tc.strategy,
+            num_channels=tc.num_channels,
+            diloco_cfg=tc.diloco,
+            params_shapes=p_shapes,
+            batch_shapes=batch_shapes,
+            donate=False,
+        )
+        self.grad_bytes = sum(
+            int(np.prod(s.shape)) * 4 for s in jax.tree.leaves(p_shapes)
+        )
+
+    def init_or_restore(self):
+        cfg, tc = self.cfg, self.tc
+        params = init_params(jax.random.PRNGKey(tc.seed), cfg)
+        state = init_train_state(params, tc.opt, strategy=tc.strategy)
+        start_step = 0
+        latest = self.store.latest_step()
+        if latest is not None:
+            (params, state), meta = self.store.restore(latest, (params, state))
+            start_step = int(meta.get("data_step", latest))
+            self.loader.step = start_step
+        return params, state, start_step
+
+    def _ckpt_interval(self, step_time_s: float) -> int:
+        if self.tc.checkpoint_every is not None:
+            return self.tc.checkpoint_every
+        save_overhead = max(self.grad_bytes / 1e9, 0.05)  # ~1 GB/s disk
+        return optimal_checkpoint_interval(
+            step_time_s=max(step_time_s, 1e-3),
+            save_overhead_s=save_overhead,
+            mtbf_s=self.tc.mtbf_s,
+        )
+
+    # -- the loop -----------------------------------------------------------------
+
+    def run(
+        self,
+        *,
+        on_step: Optional[Callable[[int, Dict[str, float]], None]] = None,
+        inject_failure_at: Optional[int] = None,
+    ) -> Dict[str, Any]:
+        params, state, start = self.init_or_restore()
+        tc = self.tc
+        last_ckpt = start
+        wan_cost = (
+            self.geo.sync_cost(tc.strategy, self.grad_bytes, jitter=False)
+            if tc.strategy in ("allreduce", "ps", "hier", "hier_int8", "local_sgd")
+            else None
+        )
+        recovery_drills = []
+        t_step_ewma = None
+        # simulated heartbeat clock: one beat interval per training step, so
+        # detection semantics are step-count-based (detect_mult missed
+        # steps) regardless of wall-clock step duration.
+        interval_ms = next(iter(self.heartbeats.workers.values())).session.interval_ms
+        sim_ms = 0.0
+        with self.mesh:
+            for step in range(start, tc.steps):
+                batch = {k: jnp.asarray(v) for k, v in self.loader.next_batch().items()}
+                t0 = time.time()
+                params, state, metrics = self.step_fn(params, state, batch)
+                loss = float(metrics["loss"])
+                dt = time.time() - t0
+                t_step_ewma = dt if t_step_ewma is None else 0.8 * t_step_ewma + 0.2 * dt
+
+                sim_ms += interval_ms
+                for pod in self.heartbeats.workers:
+                    if inject_failure_at is not None and step >= inject_failure_at and pod == "pod1":
+                        continue  # pod1 goes silent
+                    self.heartbeats.heartbeat(pod, sim_ms)
+                    self.stragglers.record(pod, dt)
+                # +1 ms epsilon: a pod missing detect_mult consecutive beats
+                # is declared dead on exactly that step
+                dead = self.heartbeats.poll(sim_ms + 1.0)
+                if dead:
+                    plan = plan_recovery(
+                        step=step,
+                        last_checkpoint_step=last_ckpt,
+                        step_time_s=t_step_ewma or dt,
+                        detect_time_ms=self.heartbeats.detect_time_ms(),
+                        checkpoint_bytes=self.grad_bytes * 3,
+                    )
+                    recovery_drills.append({"step": step, "dead": dead, "plan": dataclasses.asdict(plan)})
+                    inject_failure_at = None  # handled
+
+                row = {
+                    "step": step,
+                    "loss": loss,
+                    "step_s": dt,
+                    "grad_norm": float(metrics.get("grad_norm", 0.0)),
+                    "wan_s_est": wan_cost.amortized_seconds if wan_cost else 0.0,
+                }
+                self.metrics_log.append(row)
+                if on_step:
+                    on_step(step, row)
+                if step % tc.log_every == 0:
+                    print(
+                        f"step {step:5d} loss {loss:7.4f} "
+                        f"({dt:5.2f}s compute, +{row['wan_s_est']:.2f}s WAN est "
+                        f"[{tc.strategy}])",
+                        flush=True,
+                    )
+                interval = self._ckpt_interval(t_step_ewma or dt)
+                if (step + 1) % max(interval, 1) == 0 or step == tc.steps - 1:
+                    self.ckpt.save(
+                        step + 1, (params, state), metadata={"data_step": step + 1}
+                    )
+                    last_ckpt = step + 1
+        self.ckpt.wait()
+        return {
+            "final_loss": self.metrics_log[-1]["loss"] if self.metrics_log else None,
+            "metrics": self.metrics_log,
+            "recovery_drills": recovery_drills,
+            "sync_efficiency": self.stragglers.sync_efficiency(),
+            "last_checkpoint": last_ckpt,
+        }

@@ -1,0 +1,107 @@
+"""Analytical collision model tests (paper §3.3.2, Eqs. 3-11)."""
+
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.collision import (
+    collision_index,
+    collision_reduction,
+    compare_schemes,
+    expected_collisions,
+    monte_carlo_collisions,
+)
+from repro.core.ports import ALIASING_STRIDE
+
+
+def normalized(dist):
+    arr = np.asarray(dist, dtype=np.float64)
+    return arr / arr.sum()
+
+
+class TestClosedForms:
+    def test_uniform_minimizes_index(self):
+        """Eq. 6 discussion: sum p^2 is minimized at p = 1/K."""
+        k = 4
+        uniform = collision_index([1 / k] * k)
+        assert uniform == pytest.approx(1 / k)
+        skewed = collision_index([0.7, 0.1, 0.1, 0.1])
+        assert skewed > uniform
+
+    @given(st.lists(st.floats(min_value=0.01, max_value=1.0), min_size=2, max_size=16))
+    def test_index_bounds(self, raw):
+        p = normalized(raw)
+        idx = collision_index(p)
+        assert 1 / len(p) - 1e-9 <= idx <= 1.0 + 1e-9
+
+    def test_expected_collisions_eq5(self):
+        """E[C] = C(N,2) sum p^2 for concrete values."""
+        p = [0.5, 0.5]
+        assert expected_collisions(4, p) == pytest.approx(math.comb(4, 2) * 0.5)
+        assert expected_collisions(2, [1.0]) == 1.0  # both flows on the one path
+
+    def test_delta_c_eq10(self):
+        base = [0.7, 0.1, 0.1, 0.1]
+        prop = [0.25] * 4
+        got = collision_reduction(base, prop)
+        expect = 1 - 0.25 / (0.49 + 0.03)
+        assert got == pytest.approx(expect)
+
+    def test_delta_c_zero_when_equal(self):
+        p = [0.4, 0.3, 0.2, 0.1]
+        assert collision_reduction(p, p) == pytest.approx(0.0)
+
+    def test_eq11_condition(self):
+        """Proposed wins iff sum(p_prop^2) < sum(p_base^2)."""
+        base, prop = [0.7, 0.3], [0.5, 0.5]
+        assert collision_reduction(base, prop) > 0
+        assert collision_reduction(prop, base) < 0
+
+    def test_unnormalized_rejected(self):
+        with pytest.raises(ValueError):
+            collision_index([0.5, 0.2])
+
+
+class TestMonteCarlo:
+    def test_analytic_matches_empirical_for_uniform(self):
+        """Under high-entropy allocation, E[C] from the pooled distribution
+        matches the Monte-Carlo collision count (independence holds)."""
+        r = monte_carlo_collisions(
+            num_qps=8, num_paths=4, scheme="qp_aware", trials=3000, qp_stride=1, seed=0
+        )
+        assert r.mean_pairwise_collisions == pytest.approx(r.analytic_expected, rel=0.15)
+
+    def test_correlated_baseline_worse_than_uniform(self):
+        """The production pathology: aliased QP numbers collapse onto few
+        paths, so collisions exceed the uniform-hash expectation."""
+        r = monte_carlo_collisions(
+            num_qps=8, num_paths=4, scheme="baseline",
+            trials=1500, qp_stride=ALIASING_STRIDE, seed=1,
+        )
+        uniform_expectation = math.comb(8, 2) / 4
+        assert r.mean_pairwise_collisions > 1.5 * uniform_expectation
+
+    @pytest.mark.parametrize("num_qps", [4, 8, 16, 32])
+    def test_qp_aware_reduces_collisions_under_aliasing(self, num_qps):
+        """The paper's headline: binning reduces collisions for correlated
+        QPs across all channel counts studied (4..32)."""
+        r = compare_schemes(
+            num_qps=num_qps, num_paths=4, trials=800,
+            qp_stride=ALIASING_STRIDE, seed=2,
+        )
+        assert r["delta_c_empirical"] > 0.25
+
+    def test_neutral_under_high_entropy(self):
+        """§3.3.2: the mechanism does not improve *ideal* ECMP hashing."""
+        r = compare_schemes(num_qps=16, num_paths=4, trials=1500, qp_stride=1, seed=3)
+        assert abs(r["delta_c_empirical"]) < 0.15
+
+    def test_path_distribution_valid(self):
+        r = monte_carlo_collisions(
+            num_qps=4, num_paths=8, scheme="baseline", trials=200, seed=0
+        )
+        assert r.path_distribution.shape == (8,)
+        assert r.path_distribution.sum() == pytest.approx(1.0)

@@ -1,0 +1,124 @@
+"""EVPN control plane + VNI multi-tenancy tests (paper §3.2, §4.2, §5.4)."""
+
+import pytest
+
+from repro.core.evpn import EvpnControlPlane, RouteType2, RouteType3
+from repro.core.fabric import Fabric, UnreachableError
+from repro.core.tenancy import TenancyManager
+
+
+@pytest.fixture()
+def stack():
+    fabric = Fabric()
+    evpn = EvpnControlPlane(fabric)
+    tenancy = TenancyManager(fabric, evpn)
+    return fabric, evpn, tenancy
+
+
+class TestEvpnControlPlane:
+    def test_type3_vtep_discovery(self, stack):
+        fabric, evpn, _ = stack
+        route = evpn.configure_vni("d1l1", 100)
+        assert isinstance(route, RouteType3)
+        assert route.vtep_ip == fabric.vtep_ip("d1l1")
+        # remote leaf with the same VNI imports the flood-list entry
+        evpn.configure_vni("d2l1", 100)
+        assert fabric.vtep_ip("d1l1") in evpn.flood_list["d2l1"][100]
+        assert fabric.vtep_ip("d2l1") in evpn.flood_list["d1l1"][100]
+
+    def test_type2_macip_propagation(self, stack):
+        """Fig. 5 sequence: host ARP -> Type-2 -> cross-DC reachability."""
+        fabric, evpn, _ = stack
+        evpn.configure_vni("d1l1", 100)
+        evpn.configure_vni("d2l1", 100)
+        route = evpn.learn_host("d1h1", 100)
+        assert isinstance(route, RouteType2)
+        assert route.mac == fabric.hosts["d1h1"].mac
+        d2l1_entry = evpn.ip_table["d2l1"].get((100, fabric.hosts["d1h1"].ip))
+        assert d2l1_entry == fabric.vtep_ip("d1l1")
+
+    def test_rt_import_policy(self, stack):
+        """A leaf without the VNI configured must not import its routes."""
+        fabric, evpn, _ = stack
+        evpn.configure_vni("d1l1", 100)
+        evpn.learn_host("d1h1", 100)
+        # d2l1 never configured VNI 100 -> no entry
+        assert (100, fabric.hosts["d1h1"].ip) not in evpn.ip_table["d2l1"]
+
+    def test_route_counts(self, stack):
+        fabric, evpn, _ = stack
+        evpn.configure_vni("d1l1", 100)
+        evpn.configure_vni("d2l1", 100)
+        evpn.learn_host("d1h1", 100)
+        counts = evpn.speakers["d2s1"].rib
+        assert any(isinstance(r, RouteType2) for r in counts)
+        assert evpn.route_count("d2s1")["type2"] == 1
+        assert evpn.route_count("d2s1")["type3"] == 2
+
+    def test_reachability_requires_route(self, stack):
+        fabric, evpn, _ = stack
+        evpn.learn_host("d1h1", 100)
+        assert not evpn.reachable("d1h1", "d2h1")  # d2h1 not attached yet
+        evpn.learn_host("d2h1", 100)
+        assert evpn.reachable("d1h1", "d2h1")
+        assert evpn.reachable("d2h1", "d1h1")
+
+    def test_withdraw_leaf(self, stack):
+        fabric, evpn, _ = stack
+        evpn.learn_host("d1h1", 100)
+        evpn.learn_host("d2h1", 100)
+        assert evpn.reachable("d2h1", "d1h1")
+        evpn.withdraw_leaf("d1l1")
+        assert not evpn.reachable("d2h1", "d1h1")
+
+
+class TestMultiTenancy:
+    def test_table1_matrix(self, stack):
+        """Reproduces Table 1: intra-VNI reachable, inter-VNI unreachable."""
+        fabric, evpn, tenancy = stack
+        tenancy.create_tenant("job-a", vni=100)
+        tenancy.create_tenant("job-b", vni=200)
+        tenancy.create_tenant("job-c", vni=300)
+        # paper's host assignment
+        for host in ("d1h1", "d1h2", "d2h1"):
+            tenancy.attach("job-a", host)
+        for host in ("d1h3", "d1h5", "d2h4"):
+            tenancy.attach("job-b", host)
+        tenancy.attach("job-c", "d1h4")
+
+        assert tenancy.ping("d1h1", "d2h1")  # VNI 100 -> VNI 100 (21.4 ms row)
+        assert tenancy.ping("d1h3", "d1h5")  # VNI 200 -> VNI 200 (0.07 ms row)
+        assert not tenancy.ping("d1h2", "d1h3")  # VNI 100 -> 200: unreachable
+        assert not tenancy.ping("d1h4", "d2h4")  # VNI 300 -> 200: unreachable
+        tenancy.verify_isolation()
+
+    def test_duplicate_vni_rejected(self, stack):
+        _, _, tenancy = stack
+        tenancy.create_tenant("a", vni=100)
+        with pytest.raises(ValueError):
+            tenancy.create_tenant("b", vni=100)
+
+    def test_vni_24bit_range(self, stack):
+        """§3.1: 16M VNIs vs 4096 VLANs."""
+        _, _, tenancy = stack
+        tenancy.create_tenant("big", vni=(1 << 24) - 1)  # fine: 24-bit
+        with pytest.raises(ValueError):
+            tenancy.create_tenant("too-big", vni=1 << 24)
+
+    def test_double_attach_conflict(self, stack):
+        _, _, tenancy = stack
+        tenancy.create_tenant("a", vni=100)
+        tenancy.create_tenant("b", vni=200)
+        tenancy.attach("a", "d1h1")
+        with pytest.raises(ValueError):
+            tenancy.attach("b", "d1h1")
+
+    def test_unreachable_send_raises(self, stack):
+        fabric, _, tenancy = stack
+        tenancy.create_tenant("a", vni=100)
+        tenancy.create_tenant("b", vni=200)
+        tenancy.attach("a", "d1h1")
+        tenancy.attach("b", "d2h1")
+        with pytest.raises(UnreachableError):
+            fabric.send("d1h1", "d2h1", 100, src_port=49192,
+                        check_reachability=tenancy.reachable)

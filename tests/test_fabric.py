@@ -1,0 +1,140 @@
+"""Tests for the emulated spine-leaf multi-DC fabric (paper §4)."""
+
+import pytest
+from hypothesis import given
+from hypothesis import strategies as st
+
+from repro.core.fabric import (
+    Fabric,
+    FabricConfig,
+    FiveTuple,
+    ecmp_hash,
+    vxlan_outer_tuple,
+    VXLAN_DST_PORT,
+)
+
+
+@pytest.fixture()
+def fabric():
+    return Fabric()
+
+
+class TestTopology:
+    def test_paper_inventory(self, fabric):
+        """Fig. 1 / Fig. 3: 2 DCs x (2 spines + 3 leaves), 5 + 4 hosts."""
+        assert len(fabric.spines) == 4
+        assert len(fabric.leaves) == 6
+        assert len(fabric.hosts) == 9
+        assert {h.dc for h in fabric.hosts.values()} == {1, 2}
+        assert len([h for h in fabric.hosts.values() if h.dc == 1]) == 5
+        assert len([h for h in fabric.hosts.values() if h.dc == 2]) == 4
+
+    def test_wan_links_full_bipartite(self, fabric):
+        # 2 spines per DC, 2 DCs -> 4 WAN links
+        assert len(fabric.wan_links) == 4
+        for link in fabric.wan_links:
+            u, v = sorted(link)
+            assert u.startswith("d1s") and v.startswith("d2s")
+
+    def test_leaf_uplinks(self, fabric):
+        for leaf in fabric.leaves:
+            spines = [n for n in fabric.neighbors(leaf) if n in fabric.spines]
+            assert len(spines) == 2  # each leaf dual-homed to both local spines
+
+    def test_hosts_nontransit(self, fabric):
+        """Traffic between two hosts never transits a third host."""
+        path = fabric.route_flow(
+            FiveTuple("a", "b", 50000, 4791), "d1l1", "d2l1"
+        )
+        assert not any(n in fabric.hosts for n in path)
+
+    def test_validate_rejects_bad_config(self):
+        with pytest.raises(ValueError):
+            FabricConfig(num_dcs=2, hosts_per_leaf=((1,),)).validate()
+
+
+class TestEcmpRouting:
+    def test_path_is_shortest(self, fabric):
+        tup = FiveTuple("192.168.1.1", "192.168.2.1", 49999, 4791)
+        path = fabric.route_flow(tup, "d1l1", "d2l1")
+        # leaf -> spine -> WAN spine -> leaf = 4 nodes / 3 hops
+        assert len(path) == 4
+        assert path[0] == "d1l1" and path[-1] == "d2l1"
+
+    def test_deterministic(self, fabric):
+        tup = FiveTuple("192.168.1.1", "192.168.2.1", 50123, 4791)
+        assert fabric.route_flow(tup, "d1l1", "d2l1") == fabric.route_flow(tup, "d1l1", "d2l1")
+
+    def test_port_diversity_spreads_paths(self, fabric):
+        """Different source ports should reach different equal-cost paths."""
+        paths = {
+            tuple(fabric.route_flow(FiveTuple("a", "b", p, 4791), "d1l1", "d2l1"))
+            for p in range(49192, 49192 + 256)
+        }
+        assert len(paths) > 1
+
+    def test_identical_tuple_identical_path(self, fabric):
+        """The collision mechanism: same 5-tuple -> same path, always."""
+        tup = FiveTuple("x", "y", 55555, 4791)
+        first = fabric.route_flow(tup, "d1l1", "d2l3")
+        for _ in range(10):
+            assert fabric.route_flow(tup, "d1l1", "d2l3") == first
+
+    @given(st.integers(min_value=0, max_value=2**16 - 1), st.integers(min_value=1, max_value=8))
+    def test_hash_in_range(self, port, n):
+        tup = FiveTuple("1.1.1.1", "2.2.2.2", port, 4791)
+        assert 0 <= ecmp_hash(tup, 0xABC, n) < n
+
+    def test_failed_link_avoided(self, fabric):
+        fabric.fail_link("d1l1", "d1s1")
+        for p in range(49192, 49192 + 64):
+            path = fabric.route_flow(FiveTuple("a", "b", p, 4791), "d1l1", "d2l1")
+            assert ("d1l1", "d1s1") not in list(zip(path, path[1:]))
+        fabric.restore_link("d1l1", "d1s1")
+
+    def test_no_route_raises(self, fabric):
+        for spine in ("d1s1", "d1s2"):
+            fabric.fail_link("d1l1", spine)
+        with pytest.raises(RuntimeError, match="no route"):
+            fabric.route_flow(FiveTuple("a", "b", 50000, 4791), "d1l1", "d2l1")
+        fabric.restore_link("d1l1", "d1s1")
+        fabric.restore_link("d1l1", "d1s2")
+
+
+class TestVxlanDataPlane:
+    def test_outer_tuple_preserves_entropy(self):
+        """RFC 7348: inner-flow hash becomes the outer UDP source port."""
+        inner_a = FiveTuple("192.168.1.1", "192.168.1.2", 49192, 4791)
+        inner_b = FiveTuple("192.168.1.1", "192.168.1.2", 49193, 4791)
+        outer_a = vxlan_outer_tuple(inner_a, "1.1.10.1", "2.2.10.1")
+        outer_b = vxlan_outer_tuple(inner_b, "1.1.10.1", "2.2.10.1")
+        assert outer_a.dst_port == VXLAN_DST_PORT
+        assert outer_a.src_port != outer_b.src_port  # entropy survived
+        assert outer_a.src_ip == "1.1.10.1"
+
+    def test_send_counts_bytes(self, fabric):
+        fabric.reset_counters()
+        path = fabric.send("d1h1", "d2h1", 1000, src_port=49192)
+        assert path[0] == "d1h1" and path[-1] == "d2h1"
+        assert sum(fabric.link_bytes.values()) == 1000 * (len(path) - 1)
+
+    def test_same_leaf_local_bridging(self, fabric):
+        fabric.reset_counters()
+        # d1h1 and d1h2 both live on d1l1 (2 hosts on leaf 1)
+        h1, h2 = "d1h1", "d1h2"
+        assert fabric.hosts[h1].leaf == fabric.hosts[h2].leaf
+        path = fabric.send(h1, h2, 500, src_port=49192)
+        assert len(path) == 3  # host -> leaf -> host, no spine transit
+        assert all(n not in fabric.spines for n in path)
+
+    def test_uplink_byte_counters(self, fabric):
+        fabric.reset_counters()
+        for port in range(49192, 49192 + 32):
+            fabric.send("d1h1", "d2h4", 10_000, src_port=port)
+        leaf_up = fabric.uplink_bytes("d1l1", toward="spine")
+        assert len(leaf_up) >= 1
+        assert sum(leaf_up.values()) == 32 * 10_000
+        wan_total = sum(
+            b for (u, v), b in fabric.link_bytes.items() if fabric.is_wan_link(u, v)
+        )
+        assert wan_total == 32 * 10_000

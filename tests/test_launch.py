@@ -1,0 +1,122 @@
+"""Launch-layer units: HLO collective parsing, shapes/specs, mesh helpers."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, get_smoke_config
+from repro.launch.hlo_stats import (
+    CollectiveStats,
+    parse_collectives,
+    shape_bytes,
+)
+from repro.launch.mesh import batch_axes, chips_per_pod, make_mesh, num_pods
+from repro.launch.shapes import SHAPES, decode_cache_specs, input_specs, params_specs
+
+
+class TestShapeBytes:
+    @pytest.mark.parametrize(
+        "s,expected",
+        [
+            ("f32[128,1024]{1,0}", 128 * 1024 * 4),
+            ("bf16[2,3,4]", 48),
+            ("s8[100]", 100),
+            ("pred[16]", 16),
+            ("f32[]", 4),
+            ("(f32[8], bf16[8])", 8 * 4 + 8 * 2),
+        ],
+    )
+    def test_sizes(self, s, expected):
+        assert shape_bytes(s) == expected
+
+
+class TestParseCollectives:
+    HLO = """
+  %ag = f32[64,128]{1,0} all-gather(f32[4,128] %x), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %ar = bf16[256]{0} all-reduce(bf16[256] %y), replica_groups=[2,256]<=[512], to_apply=%add
+  %rs = f32[32]{0} reduce-scatter(f32[64] %z), replica_groups={{0,256}}, dimensions={0}
+  %dot = f32[8,8] dot(f32[8,8] %a, f32[8,8] %b)
+"""
+
+    def test_counts_and_bytes(self):
+        stats = parse_collectives(self.HLO)
+        assert stats.count == 3
+        assert stats.bytes_by_kind["all-gather"] == 64 * 128 * 4
+        assert stats.bytes_by_kind["all-reduce"] == 256 * 2
+        assert stats.bytes_by_kind["reduce-scatter"] == 32 * 4
+
+    def test_cross_pod_classification(self):
+        stats = parse_collectives(self.HLO, pod_size=256)
+        # explicit {{0,256}} spans pods; {{0,1},{2,3}} does not;
+        # iota [2,256]<=[512] groups of 256 stay within a pod
+        assert stats.cross_pod_bytes == 32 * 4
+
+    def test_iota_oversized_group_is_cross_pod(self):
+        hlo = "%ar = f32[16] all-reduce(f32[16] %x), replica_groups=[1,512]<=[512]"
+        stats = parse_collectives(hlo, pod_size=256)
+        assert stats.cross_pod_bytes == 64
+
+    def test_transposed_iota_pairs_across_pods(self):
+        """[256,2]<=[2,256]T(1,0): groups pair device i with i+256 — the
+        form GSPMD emits for manual-pod psums on the 2x16x16 mesh."""
+        hlo = "%ar = f32[16] all-reduce(f32[16] %x), replica_groups=[256,2]<=[2,256]T(1,0)"
+        stats = parse_collectives(hlo, pod_size=256)
+        assert stats.cross_pod_bytes == 64
+        assert stats.unclassified_bytes == 0
+
+
+class TestInputSpecs:
+    def test_train_specs_for_every_arch(self):
+        for arch in ("olmo-1b", "rwkv6-7b", "phi-3-vision-4.2b", "musicgen-large"):
+            cfg = get_config(arch)
+            specs = input_specs(cfg, "train_4k")["batch"]
+            # every leaf is an allocation-free ShapeDtypeStruct with the
+            # assigned global batch / seq
+            for leaf in jax.tree.leaves(specs):
+                assert isinstance(leaf, jax.ShapeDtypeStruct)
+                assert leaf.shape[0] == SHAPES["train_4k"].global_batch
+            if cfg.frontend == "none":
+                assert specs["tokens"].shape == (256, 4096)
+
+    def test_decode_specs(self):
+        cfg = get_config("olmo-1b")
+        specs = input_specs(cfg, "decode_32k")
+        assert specs["tokens_t"].shape == (128,)
+        cache = decode_cache_specs(cfg, "decode_32k")
+        k = cache["groups"]["slot0"]["k"]
+        assert k.shape == (16, 128, 32768, 16, 128)  # (L, B, S, KVH, hd)
+
+    def test_long_500k_rejected_for_full_attn(self):
+        with pytest.raises(ValueError, match="quadratic"):
+            input_specs(get_config("yi-34b"), "long_500k")
+
+    def test_long_500k_state_is_o1_for_rwkv(self):
+        cfg = get_config("rwkv6-7b")
+        cache = decode_cache_specs(cfg, "long_500k")
+        total = sum(s.size for s in jax.tree.leaves(cache))
+        # recurrent state is independent of the 524288 context length
+        assert total < 50e6
+
+    def test_params_specs_no_allocation(self):
+        specs = params_specs(get_config("arctic-480b"))  # 477B params, no memory
+        n = sum(s.size for s in jax.tree.leaves(specs))
+        assert n > 4e11
+
+
+class _FakeMesh:
+    """Shape/axis view of a mesh (this process has 1 real device)."""
+
+    def __init__(self, shape, axes):
+        self.shape = dict(zip(axes, shape))
+        self.axis_names = axes
+
+
+class TestMeshHelpers:
+    def test_mesh_math(self):
+        mesh = _FakeMesh((2, 2, 2), ("pod", "data", "model"))
+        assert num_pods(mesh) == 2
+        assert chips_per_pod(mesh) == 4
+        assert batch_axes(mesh) == ("pod", "data")
+        single = _FakeMesh((4, 2), ("data", "model"))
+        assert num_pods(single) == 1
+        assert batch_axes(single) == ("data",)

@@ -1,0 +1,115 @@
+"""Unit + property tests for source-port allocation (paper Algorithm 1)."""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.ports import (
+    ALIASING_STRIDE,
+    ALIASING_STRIDE_STRONG,
+    MAX_PORT,
+    NUM_PORT_OFFSETS,
+    ROCE_V2_BASE_PORT,
+    QueuePair,
+    allocate_ports,
+    hash_32,
+    make_queue_pairs,
+    qp_aware_port,
+    qp_aware_ports,
+    rxe_baseline_port,
+)
+
+
+class TestHash32:
+    def test_matches_kernel_reference(self):
+        # hash_32(val, bits) = (val * GOLDEN_RATIO_32) >> (32 - bits), u32
+        assert hash_32(0, 14) == 0
+        assert hash_32(1, 14) == (0x61C88647 >> 18)
+        assert hash_32(2**32 - 1, 14) < 2**14
+
+    @given(st.integers(min_value=0, max_value=2**32 - 1), st.integers(min_value=1, max_value=31))
+    def test_range(self, val, bits):
+        assert 0 <= hash_32(val, bits) < 2**bits
+
+
+class TestBaseline:
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_port_in_roce_range(self, qpn):
+        port = rxe_baseline_port(qpn)
+        assert ROCE_V2_BASE_PORT <= port <= MAX_PORT
+
+    def test_aliasing_stride(self):
+        """The production pathology (§3.3): correlated QP numbers receive
+        identical source ports under stock rdma-rxe hashing."""
+        for stride in (ALIASING_STRIDE, ALIASING_STRIDE_STRONG):
+            qps = make_queue_pairs(8, base_number=12345, stride=stride)
+            ports = [rxe_baseline_port(q.number) for q in qps]
+            assert len(set(ports)) < len(ports), (
+                f"stride {stride} should alias baseline ports, got {ports}"
+            )
+
+    def test_strong_alias_is_total(self):
+        qps = make_queue_pairs(8, base_number=777, stride=ALIASING_STRIDE_STRONG)
+        ports = [rxe_baseline_port(q.number) for q in qps]
+        assert len(set(ports)) == 1
+
+
+class TestQpAware:
+    @given(
+        st.integers(min_value=0, max_value=2**20),
+        st.integers(min_value=0, max_value=2**32 - 1),
+        st.sampled_from([1, 2, 4, 8, 16]),
+    )
+    def test_port_in_range(self, index, number, k):
+        port = qp_aware_port(QueuePair(index, number), k=k)
+        assert ROCE_V2_BASE_PORT <= port <= MAX_PORT
+
+    @given(
+        st.integers(min_value=0, max_value=2**20),
+        st.integers(min_value=0, max_value=2**32 - 1),
+        st.sampled_from([2, 4, 8]),
+    )
+    def test_bin_assignment(self, index, number, k):
+        """Algorithm 1 line 6: the bin is determined by index mod k."""
+        w_b = NUM_PORT_OFFSETS // k
+        port = qp_aware_port(QueuePair(index, number), k=k)
+        offset = port - ROCE_V2_BASE_PORT
+        assert offset // w_b == index % k
+
+    @given(st.integers(min_value=0, max_value=2**28), st.sampled_from([2, 4, 8]))
+    def test_bins_nonoverlapping(self, number, k):
+        """QPs with distinct index mod k can never share a port, even with a
+        fully degenerate hash (the structural-separation guarantee)."""
+        w_b = NUM_PORT_OFFSETS // k
+        ports = [qp_aware_port(QueuePair(i, number), k=k) for i in range(k)]
+        bins = [(p - ROCE_V2_BASE_PORT) // w_b for p in ports]
+        assert sorted(bins) == list(range(k))
+        assert len(set(ports)) == k
+
+    def test_aliased_qps_get_distinct_ports(self):
+        """The fix, end to end: under the aliasing stride the baseline gives
+        one port for all 4 QPs, Algorithm 1 gives 4 distinct ports."""
+        qps = make_queue_pairs(4, base_number=99, stride=ALIASING_STRIDE_STRONG)
+        assert len(set(allocate_ports(qps, scheme="baseline"))) == 1
+        assert len(set(allocate_ports(qps, scheme="qp_aware"))) == 4
+
+    def test_hash_preserved_within_bin(self):
+        """Algorithm 1 line 7: within the bin, the offset is o_r mod W_b."""
+        qp = QueuePair(index=2, number=0xDEADBEEF)
+        o_r = hash_32(qp.number, 14)
+        port = qp_aware_port(qp, k=4)
+        assert port == ROCE_V2_BASE_PORT + 2 * 4096 + (o_r % 4096)
+
+    def test_paper_constants(self):
+        # Algorithm 1 lines 1-3
+        assert ROCE_V2_BASE_PORT == 49192
+        assert NUM_PORT_OFFSETS == 16384
+        assert NUM_PORT_OFFSETS // 4 == 4096
+
+    def test_bad_scheme_rejected(self):
+        with pytest.raises(ValueError):
+            allocate_ports(make_queue_pairs(2), scheme="nonsense")
+
+    def test_bad_k_rejected(self):
+        with pytest.raises(ValueError):
+            qp_aware_port(QueuePair(0, 1), k=0)

@@ -1,0 +1,142 @@
+"""WAN emulation + failure detection tests (paper §5.1, §5.3)."""
+
+import numpy as np
+import pytest
+
+from repro.core.bfd import BfdSession, BfdState, BgpHoldTimer, FailureDetector
+from repro.core.evpn import EvpnControlPlane
+from repro.core.fabric import Fabric
+from repro.core.geo import GeoFabric
+from repro.core.wan import Netem, NetemProfile, PAPER_WAN, WanTimingModel, ping_rtt
+
+
+class TestNetemRtt:
+    def test_fig8_rtt_near_22ms(self):
+        """Fig. 8: ~22 ms host-to-host RTT with 5 ms +/- 1 ms per WAN hop."""
+        fabric = Fabric()
+        netem = Netem(fabric, seed=42)
+        rtt = ping_rtt(netem, "d1h1", "d2h1", count=200)
+        assert 20.0 < rtt.mean() < 24.0
+        assert rtt.std() < 3.0  # consistent with the configured jitter
+
+    def test_intra_dc_rtt_sub_ms(self):
+        fabric = Fabric()
+        netem = Netem(fabric, seed=0)
+        rtt = ping_rtt(netem, "d1h3", "d1h5", count=50)  # different leaves, same DC
+        assert rtt.mean() < 2.0
+
+    def test_jitter_free_base_rtt(self):
+        fabric = Fabric()
+        netem = Netem(fabric, seed=0)
+        base = netem.base_rtt_ms("d1h1", "d2h1")
+        assert 20.0 < base < 24.0
+        assert netem.base_rtt_ms("d1h1", "d2h1") == base  # deterministic
+
+    def test_reproducible_with_seed(self):
+        fabric = Fabric()
+        a = ping_rtt(Netem(fabric, seed=7), "d1h1", "d2h1", count=10)
+        b = ping_rtt(Netem(Fabric(), seed=7), "d1h1", "d2h1", count=10)
+        np.testing.assert_allclose(a, b)
+
+
+class TestTimingModel:
+    def test_bottleneck_dominates(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        model = WanTimingModel(netem)
+        wan = sorted(fabric.wan_links[0])
+        lan = ("d1l1", "d1s1")
+        # 100 MB on an 800 Mbit/s WAN link ~ 1 s; 100 MB on 10G LAN ~ 80 ms
+        res = model.transfer_time({(wan[0], wan[1]): 100_000_000, lan: 100_000_000})
+        assert res.bottleneck_link == (wan[0], wan[1])
+        assert 0.9 < res.seconds < 1.2
+
+    def test_rtt_term_added(self):
+        fabric = Fabric()
+        model = WanTimingModel(Netem(fabric))
+        base = model.transfer_time({("d1s1", "d2s1"): 1000}).seconds
+        with_rtt = model.transfer_time({("d1s1", "d2s1"): 1000}, rtt_ms=22.0).seconds
+        assert with_rtt == pytest.approx(base + 0.022)
+
+
+class TestBfd:
+    def test_detect_time(self):
+        s = BfdSession("a", "b", interval_ms=10.0, detect_mult=3)
+        assert s.detect_time_ms == 30.0
+
+    def test_state_machine(self):
+        s = BfdSession("a", "b")
+        assert s.state == BfdState.DOWN
+        s.bring_up(0.0)
+        assert s.poll(25.0) == BfdState.UP  # within detect time
+        s.on_rx(25.0)
+        assert s.poll(50.0) == BfdState.UP  # refreshed
+        assert s.poll(56.0) == BfdState.DOWN  # 31 ms silence
+
+    def test_fig9_bfd_recovery_near_110ms(self):
+        """Fig. 9: BFD(10 ms x 3) end-to-end recovery ~110 ms."""
+        fabric = Fabric()
+        evpn = EvpnControlPlane(fabric)
+        det = FailureDetector(fabric, evpn)
+        wan = sorted(fabric.wan_links[0])
+        tl = det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        assert 90.0 < tl.recovery_ms < 130.0
+        assert tl.detected_at_ms - tl.failure_at_ms == 30.0
+
+    def test_fig13_bgp_recovery_near_180s(self):
+        """Fig. 13: default BGP timers -> ~180 s recovery."""
+        fabric = Fabric()
+        det = FailureDetector(fabric)
+        wan = sorted(fabric.wan_links[0])
+        tl = det.fail_and_recover((wan[0], wan[1]), mechanism="bgp")
+        assert 179.0 < tl.recovery_ms / 1e3 < 182.0
+
+    def test_traffic_reroutes_after_failure(self):
+        fabric = Fabric()
+        det = FailureDetector(fabric)
+        wan = sorted(fabric.wan_links[0])
+        det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        # all WAN traffic must avoid the failed link but still arrive
+        fabric.reset_counters()
+        for port in range(49192, 49192 + 64):
+            path = fabric.send("d1h1", "d2h1", 100, src_port=port)
+            assert (wan[0], wan[1]) not in list(zip(path, path[1:]))
+        det.restore((wan[0], wan[1]))
+
+    def test_restore(self):
+        fabric = Fabric()
+        det = FailureDetector(fabric)
+        wan = sorted(fabric.wan_links[0])
+        det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        det.restore((wan[0], wan[1]))
+        assert fabric.link_up(wan[0], wan[1])
+
+    def test_unknown_mechanism(self):
+        det = FailureDetector(Fabric())
+        with pytest.raises(ValueError):
+            det.fail_and_recover(("d1s1", "d2s1"), mechanism="psychic")
+
+
+class TestGeoFabricFacade:
+    def test_sync_strategy_ordering(self):
+        """hier < allreduce < ps in WAN seconds, int8 < hier, local_sgd
+        amortizes — the qualitative Fig. 14 + beyond-paper result."""
+        geo = GeoFabric(num_pods=2, workers_per_pod=4, seed=3)
+        cost = {s: geo.sync_cost(s, grad_bytes=312_000_000, jitter=False)
+                for s in ("allreduce", "ps", "hier", "hier_int8", "local_sgd")}
+        assert cost["ps"].wan_seconds > cost["allreduce"].wan_seconds
+        assert cost["hier"].wan_seconds < cost["allreduce"].wan_seconds
+        assert cost["hier_int8"].wan_seconds < cost["hier"].wan_seconds
+        assert cost["local_sgd"].amortized_seconds < cost["hier"].wan_seconds
+
+    def test_wan_bytes_accounting(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=4, seed=0)
+        c = geo.sync_cost("hier", grad_bytes=100_000_000, jitter=False)
+        # leader ring over 2 DCs: shard crosses WAN twice (there and back)
+        assert c.wan_bytes == pytest.approx(2 * (100_000_000 // 4), rel=0.05)
+
+    def test_more_pods(self):
+        geo = GeoFabric(num_pods=3, workers_per_pod=2, seed=0)
+        assert len(geo.pod_leaders()) == 3
+        c = geo.sync_cost("hier", grad_bytes=10_000_000, jitter=False)
+        assert c.wan_seconds > 0
