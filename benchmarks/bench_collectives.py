@@ -1,0 +1,141 @@
+"""Scaled-topology collective sweep + batched-router speedup (beyond paper).
+
+Where Figs. 11/12 fix the 9-host Fig. 1 fabric and a single flow pattern,
+this suite scales the topology to 4 DCs x 4 spines x 8 leaves x 4
+hosts/leaf (128 hosts, 64 WAN links per DC pair) and sweeps every
+collective pattern in :mod:`repro.core.flows` — ring all-reduce, parameter
+server, reduce-scatter, all-gather, MoE all-to-all, and GeoPipe-style
+pipeline P2P — under both port-allocation schemes, reporting the CONGA
+load factor (Eq. 12) and the collision-index skew ``sum p^2`` (Eq. 11)
+over the WAN links.
+
+Also measures the batched routing engine against the sequential per-flow
+walk on a >=10k-flow all-to-all workload (steady state, next-hop tables
+warm) and asserts the two produce byte-identical counters.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.collision import collision_index
+from repro.core.fabric import Fabric, FabricConfig
+from repro.core.flows import (
+    Flow,
+    all_gather_flows,
+    all_to_all_flows,
+    parameter_server_flows,
+    pipeline_p2p_flows,
+    reduce_scatter_flows,
+    ring_allreduce_flows,
+    route_flows,
+    route_flows_batched,
+)
+from repro.core.metrics import load_factor
+
+from .common import BenchRow, timed
+
+#: 4-DC scaled fabric: 16 spines, 32 leaves, 128 hosts, 6 DC pairs x 16
+#: spine-pair WAN links = 96 WAN links.
+SCALED = FabricConfig(
+    num_dcs=4,
+    spines_per_dc=4,
+    leaves_per_dc=8,
+    hosts_per_leaf=tuple(tuple(4 for _ in range(8)) for _ in range(4)),
+)
+
+GRAD_BYTES = 64_000_003  # deliberately not divisible by channel counts
+SPEEDUP_WORKERS = 64  # every other host -> 64*63*4 = 15_876 flows (>=10k)
+MIN_SPEEDUP = 10.0
+
+
+def _patterns(fabric: Fabric, scheme: str) -> Dict[str, List[Flow]]:
+    hosts = list(fabric.hosts)
+    kw = dict(scheme=scheme, num_channels=8)
+    by_dc: Dict[int, List[str]] = {}
+    for name, h in fabric.hosts.items():
+        by_dc.setdefault(h.dc, []).append(name)
+    stages = [by_dc[dc] for dc in sorted(by_dc)]  # one pipeline stage per DC
+    return {
+        "ring": ring_allreduce_flows(hosts, GRAD_BYTES, **kw),
+        "ps": parameter_server_flows(hosts[0], hosts[1:], GRAD_BYTES, **kw),
+        "reduce_scatter": reduce_scatter_flows(hosts, GRAD_BYTES, **kw),
+        "all_gather": all_gather_flows(hosts, GRAD_BYTES, **kw),
+        "all_to_all": all_to_all_flows(hosts[::4], GRAD_BYTES, **kw),
+        "pipeline_p2p": pipeline_p2p_flows(
+            stages, GRAD_BYTES // 32, num_microbatches=4, **kw
+        ),
+    }
+
+
+def _wan_metrics(fabric: Fabric) -> Tuple[float, float]:
+    """(load factor, collision-index skew) over every WAN link direction."""
+    wan: Dict[Tuple[str, str], int] = {}
+    for link in fabric.wan_links:
+        u, v = sorted(link)
+        wan[(u, v)] = fabric.link_bytes.get((u, v), 0)
+        wan[(v, u)] = fabric.link_bytes.get((v, u), 0)
+    lf = load_factor(wan, threshold=-1).load_factor
+    values = np.array(list(wan.values()), dtype=np.float64)
+    total = values.sum()
+    skew = collision_index(values / total) if total > 0 else 0.0
+    return lf, skew
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    fabric = Fabric(SCALED)
+
+    for scheme in ("baseline", "qp_aware"):
+        for name, flows in _patterns(fabric, scheme).items():
+            (lf, skew), us = timed(
+                lambda f=flows: (
+                    route_flows_batched(fabric, f),
+                    _wan_metrics(fabric),
+                )[1]
+            )
+            uniform = 1.0 / (2 * len(fabric.wan_links))
+            rows.append(
+                BenchRow(
+                    name=f"collective_{name}_{scheme}",
+                    us_per_call=us / max(len(flows), 1),
+                    derived=(
+                        f"{len(flows)} flows | WAN load_factor={lf:.3f} "
+                        f"skew={skew:.5f} (uniform={uniform:.5f})"
+                    ),
+                )
+            )
+
+    # batched vs sequential on a >=10k-flow workload, steady state: route
+    # once untimed so both engines' one-time caches (BFS distances /
+    # next-hop tables / pair keys) are warm, then take best-of-3 of a full
+    # pass each (shared CI runners jitter single measurements).
+    flows = all_to_all_flows(
+        list(fabric.hosts)[: SPEEDUP_WORKERS * 2 : 2], GRAD_BYTES, num_channels=8
+    )
+    seq_counters = route_flows(fabric, flows)
+    bat_counters = route_flows_batched(fabric, flows)
+    seq_s = min(timed(lambda: route_flows(fabric, flows))[1] for _ in range(3))
+    bat_s = min(timed(lambda: route_flows_batched(fabric, flows))[1] for _ in range(3))
+    if seq_counters != bat_counters:
+        raise AssertionError("batched router diverged from sequential reference")
+    speedup = seq_s / bat_s
+    rows.append(
+        BenchRow(
+            name="batched_vs_sequential_router",
+            us_per_call=bat_s / len(flows),
+            derived=(
+                f"{len(flows)} flows | seq {seq_s / 1e6:.3f}s batched "
+                f"{bat_s / 1e6:.3f}s = {speedup:.1f}x (byte-identical; "
+                f"target >={MIN_SPEEDUP:.0f}x)"
+            ),
+        )
+    )
+    if speedup < MIN_SPEEDUP:
+        raise AssertionError(
+            f"batched router speedup {speedup:.1f}x below {MIN_SPEEDUP:.0f}x target"
+        )
+    return rows

@@ -15,7 +15,7 @@ from typing import Dict, List
 import numpy as np
 
 from repro.core.fabric import Fabric
-from repro.core.flows import Flow, route_flows
+from repro.core.flows import Flow, route_flows_batched
 from repro.core.metrics import load_factor
 from repro.core.ports import allocate_ports, make_correlated_queue_pairs
 
@@ -52,7 +52,7 @@ def _one_trial(fabric: Fabric, num_qps: int, scheme: str, rng) -> Dict[str, floa
         Flow(src="d1h1", dst="d2h2", nbytes=BYTES_PER_QP, qp=qp, src_port=port)
         for qp, port in zip(qps, ports)
     ]
-    route_flows(fabric, flows)
+    route_flows_batched(fabric, flows)
     leaf = load_factor(_all_equal_cost_links(fabric, "d1l1", "spine"), threshold=-1)
     spine_bytes: Dict = {}
     for s in ("d1s1", "d1s2"):

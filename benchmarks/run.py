@@ -17,6 +17,7 @@ SUITES = (
     ("fig8_rtt", "benchmarks.bench_rtt"),
     ("fig11_12_ecmp", "benchmarks.bench_ecmp"),
     ("eq3_11_collision", "benchmarks.bench_collision"),
+    ("collectives_scale", "benchmarks.bench_collectives"),
     ("fig9_13_failover", "benchmarks.bench_failover"),
     ("table1_tenancy", "benchmarks.bench_tenancy"),
     ("fig14_training", "benchmarks.bench_training"),

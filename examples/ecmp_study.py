@@ -12,7 +12,7 @@ Run:  PYTHONPATH=src python examples/ecmp_study.py
 import numpy as np
 
 from repro.core.fabric import Fabric
-from repro.core.flows import Flow, route_flows
+from repro.core.flows import Flow, route_flows_batched
 from repro.core.metrics import load_factor
 from repro.core.ports import (
     ALIASING_STRIDE,
@@ -35,7 +35,7 @@ def measure(fabric, qps_list, k):
         ]
         flows = [Flow("d1h1", "d2h2", 1_000_000, qp, port)
                  for qp, port in zip(qps, ports)]
-        route_flows(fabric, flows)
+        route_flows_batched(fabric, flows)
         links = dict(fabric.uplink_bytes("d1l1", toward="spine"))
         for spine in ("d1s1", "d1s2"):
             links.setdefault(("d1l1", spine), 0)

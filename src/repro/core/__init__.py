@@ -17,10 +17,16 @@ from .evpn import EvpnControlPlane, RouteType2, RouteType3
 from .fabric import Fabric, FabricConfig, FiveTuple, UnreachableError, ecmp_hash
 from .flows import (
     Flow,
+    all_gather_flows,
+    all_to_all_flows,
     hierarchical_flows,
     parameter_server_flows,
+    pipeline_p2p_flows,
+    reduce_scatter_flows,
     ring_allreduce_flows,
     route_flows,
+    route_flows_batched,
+    split_bytes,
 )
 from .geo import SYNC_STRATEGIES, GeoFabric, SyncCost
 from .metrics import LoadFactorResult, flow_entropy, load_factor
@@ -76,6 +82,8 @@ __all__ = [
     "TPU_DCI",
     "UnreachableError",
     "WanTimingModel",
+    "all_gather_flows",
+    "all_to_all_flows",
     "allocate_ports",
     "collision_index",
     "collision_reduction",
@@ -91,9 +99,13 @@ __all__ = [
     "monte_carlo_collisions",
     "parameter_server_flows",
     "ping_rtt",
+    "pipeline_p2p_flows",
     "qp_aware_port",
+    "reduce_scatter_flows",
     "ring_allreduce_flows",
     "route_flows",
+    "route_flows_batched",
     "rxe_baseline_port",
+    "split_bytes",
     "ROCE_V2_BASE_PORT",
 ]

@@ -16,12 +16,42 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from functools import lru_cache
 from typing import Callable, Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from .fabric import FiveTuple, ecmp_hash
-from .ports import QueuePair, allocate_ports, make_queue_pairs
+from .ports import (
+    NUM_PORT_OFFSETS,
+    ROCE_V2_BASE_PORT,
+    QueuePair,
+    allocate_ports,
+    make_queue_pairs,
+)
+
+
+@lru_cache(maxsize=32)
+def _port_path_table(
+    src_ip: str, dst_ip: str, dst_port: int, switch_seed: int, num_paths: int
+) -> np.ndarray:
+    """ECMP path for every RoCEv2 source port, precomputed.
+
+    A connection's QPs share the 5-tuple except for the source port
+    (§3.3), so one pass over the 16384-port dynamic range turns the
+    per-trial hash loop into a NumPy table lookup — same ``ecmp_hash``,
+    just evaluated once per port instead of once per (trial, QP)."""
+    return np.array(
+        [
+            ecmp_hash(
+                FiveTuple(src_ip, dst_ip, ROCE_V2_BASE_PORT + off, dst_port),
+                switch_seed,
+                num_paths,
+            )
+            for off in range(NUM_PORT_OFFSETS)
+        ],
+        dtype=np.int64,
+    )
 
 
 def collision_index(p: Sequence[float]) -> float:
@@ -79,6 +109,7 @@ def monte_carlo_collisions(
     """
     rng = np.random.default_rng(seed)
     switch_seed = 0x5EED
+    table = _port_path_table(src_ip, dst_ip, dst_port, switch_seed, num_paths)
     path_counts = np.zeros(num_paths, dtype=np.int64)
     total_collisions = 0
     per_trial_expected = 0.0
@@ -87,10 +118,7 @@ def monte_carlo_collisions(
         base = int(rng.integers(0, 2**31))
         qps = make_queue_pairs(num_qps, base_number=base, stride=qp_stride)
         ports = allocate_ports(qps, scheme=scheme, k=k_bins)
-        paths = [
-            ecmp_hash(FiveTuple(src_ip, dst_ip, port, dst_port), switch_seed, num_paths)
-            for port in ports
-        ]
+        paths = table[np.asarray(ports, dtype=np.int64) - ROCE_V2_BASE_PORT]
         counts = np.bincount(paths, minlength=num_paths)
         path_counts += counts
         total_collisions += int(np.sum(counts * (counts - 1) // 2))

@@ -21,6 +21,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams; accept either.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 BLOCK = 256  # lanes per scale block (wire format)
 ROW_TILE = 256  # rows per grid step
 
@@ -60,7 +63,7 @@ def wan_quant(
             jax.ShapeDtypeStruct((rows, lanes), jnp.int8),
             jax.ShapeDtypeStruct((rows, nblocks), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,
@@ -85,7 +88,7 @@ def wan_dequant(
         ],
         out_specs=pl.BlockSpec((rt, BLOCK), lambda r, c: (r, c)),
         out_shape=jax.ShapeDtypeStruct((rows, lanes), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel"),
         ),
         interpret=interpret,

@@ -1,0 +1,10 @@
+"""Test-support utilities (importable with ``PYTHONPATH=src``).
+
+Currently hosts the seeded-random :mod:`hypothesis` fallback used by the
+test suite when the real package is not installed (the container image
+does not ship it); see :mod:`repro.testing.hypothesis_fallback`.
+"""
+
+from . import hypothesis_fallback
+
+__all__ = ["hypothesis_fallback"]

@@ -1,0 +1,193 @@
+"""Seeded-random fallback for the ``hypothesis`` property-testing API.
+
+The test suite uses a small slice of hypothesis: ``@given`` over
+``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.sampled_from`` plus
+``@settings(max_examples=..., deadline=...)``.  When the real package is
+not installed, :func:`install` registers this module under
+``sys.modules["hypothesis"]`` so the test modules import and *run* instead
+of dying at collection.
+
+Semantics: each ``@given`` test is executed ``max_examples`` times with
+arguments drawn from a PRNG seeded by the test's qualified name, so runs
+are deterministic across invocations.  The first two examples pin each
+strategy to its low/high boundary values (where hypothesis's shrinker
+would usually end up), the rest are uniform draws.  No shrinking, no
+database — a deliberate trade: deterministic coverage over minimal
+counterexamples.
+"""
+
+from __future__ import annotations
+
+import functools
+import random
+import sys
+import types
+import zlib
+from typing import Any, List, Optional, Sequence
+
+DEFAULT_MAX_EXAMPLES = 50
+
+
+class SearchStrategy:
+    """Base strategy: boundary examples first, then seeded uniform draws."""
+
+    def example(self, rng: random.Random, index: int) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(SearchStrategy):
+    def __init__(self, min_value: Optional[int] = None, max_value: Optional[int] = None):
+        self.min_value = -(2**63) if min_value is None else min_value
+        self.max_value = 2**63 - 1 if max_value is None else max_value
+
+    def example(self, rng: random.Random, index: int) -> int:
+        if index == 0:
+            return self.min_value
+        if index == 1:
+            return self.max_value
+        return rng.randint(self.min_value, self.max_value)
+
+
+class _Floats(SearchStrategy):
+    def __init__(
+        self,
+        min_value: Optional[float] = None,
+        max_value: Optional[float] = None,
+        allow_nan: bool = False,
+        allow_infinity: bool = False,
+        **_: Any,
+    ):
+        self.min_value = -1e9 if min_value is None else float(min_value)
+        self.max_value = 1e9 if max_value is None else float(max_value)
+
+    def example(self, rng: random.Random, index: int) -> float:
+        if index == 0:
+            return self.min_value
+        if index == 1:
+            return self.max_value
+        return rng.uniform(self.min_value, self.max_value)
+
+
+class _SampledFrom(SearchStrategy):
+    def __init__(self, elements: Sequence[Any]):
+        self.elements = list(elements)
+        if not self.elements:
+            raise ValueError("sampled_from requires a non-empty sequence")
+
+    def example(self, rng: random.Random, index: int) -> Any:
+        if index == 0:
+            return self.elements[0]
+        if index == 1:
+            return self.elements[-1]
+        return rng.choice(self.elements)
+
+
+class _Lists(SearchStrategy):
+    def __init__(
+        self,
+        elements: SearchStrategy,
+        min_size: int = 0,
+        max_size: Optional[int] = None,
+        **_: Any,
+    ):
+        self.elements = elements
+        self.min_size = min_size
+        self.max_size = max_size if max_size is not None else min_size + 10
+
+    def example(self, rng: random.Random, index: int) -> List[Any]:
+        size = self.min_size if index == 0 else (
+            self.max_size if index == 1 else rng.randint(self.min_size, self.max_size)
+        )
+        return [self.elements.example(rng, 2 + i) for i in range(size)]
+
+
+class _Booleans(SearchStrategy):
+    def example(self, rng: random.Random, index: int) -> bool:
+        if index in (0, 1):
+            return bool(index)
+        return rng.random() < 0.5
+
+
+def integers(min_value: Optional[int] = None, max_value: Optional[int] = None) -> _Integers:
+    return _Integers(min_value, max_value)
+
+
+def floats(*args: Any, **kwargs: Any) -> _Floats:
+    return _Floats(*args, **kwargs)
+
+
+def sampled_from(elements: Sequence[Any]) -> _SampledFrom:
+    return _SampledFrom(elements)
+
+
+def lists(elements: SearchStrategy, **kwargs: Any) -> _Lists:
+    return _Lists(elements, **kwargs)
+
+
+def booleans() -> _Booleans:
+    return _Booleans()
+
+
+def settings(**config: Any):
+    """Decorator recording execution knobs for a later ``@given``."""
+
+    def decorate(fn):
+        setattr(fn, "_fallback_settings", config)
+        return fn
+
+    return decorate
+
+
+def given(*strategies: SearchStrategy):
+    """Run the test ``max_examples`` times with seeded strategy draws."""
+
+    def decorate(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_fallback_settings", None)
+            if cfg is None:
+                cfg = getattr(fn, "_fallback_settings", {})
+            max_examples = int(cfg.get("max_examples", DEFAULT_MAX_EXAMPLES))
+            rng = random.Random(zlib.crc32(fn.__qualname__.encode()))
+            for index in range(max_examples):
+                drawn = [s.example(rng, index) for s in strategies]
+                try:
+                    fn(*args, *drawn, **kwargs)
+                except Exception as exc:  # annotate, like hypothesis's falsifying example
+                    raise AssertionError(
+                        f"falsifying example (fallback, draw {index}): "
+                        f"{fn.__qualname__}{tuple(drawn)!r}"
+                    ) from exc
+
+        # pytest must not treat the drawn parameters as fixtures: expose a
+        # bare (*args, **kwargs) signature instead of the wrapped one.
+        if hasattr(wrapper, "__wrapped__"):
+            del wrapper.__wrapped__
+        wrapper.is_hypothesis_test = True
+        return wrapper
+
+    return decorate
+
+
+def install() -> None:
+    """Register this module as ``hypothesis`` if the real one is absent."""
+    if "hypothesis" in sys.modules:
+        return
+    try:
+        import hypothesis  # noqa: F401 — the real package wins when present
+
+        return
+    except ImportError:
+        pass
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.__doc__ = __doc__
+    hyp.__fallback__ = True
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "floats", "sampled_from", "lists", "booleans"):
+        setattr(strat, name, globals()[name])
+    strat.SearchStrategy = SearchStrategy
+    hyp.strategies = strat
+    sys.modules["hypothesis"] = hyp
+    sys.modules["hypothesis.strategies"] = strat

@@ -1,0 +1,10 @@
+"""Suite-wide fixtures/shims.
+
+Installs the seeded-random ``hypothesis`` fallback before test modules are
+collected when the real package is missing (see ISSUE 1: the suite must
+not abort at collection on an optional dev dependency).
+"""
+
+from repro.testing.hypothesis_fallback import install
+
+install()

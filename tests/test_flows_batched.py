@@ -1,0 +1,274 @@
+"""Batched routing engine equivalence + collective flow-library tests.
+
+Covers ISSUE 1's tentpole guarantees:
+
+* ``route_flows_batched`` produces byte-identical ``link_bytes`` to the
+  sequential per-flow walk on the seed Fig. 1 topology for every
+  collective pattern (and under link failure, odd ports, VNI isolation);
+* the four new generators (reduce-scatter, all-gather, all-to-all,
+  pipeline P2P) emit the right flow counts, conserve bytes exactly, and
+  cross the WAN where the pattern says they must;
+* ``split_bytes`` never drops remainder bytes (the old ring
+  double-truncation bug).
+"""
+
+import pytest
+
+from repro.core.fabric import Fabric, FabricConfig, UnreachableError
+from repro.core.flows import (
+    Flow,
+    all_gather_flows,
+    all_to_all_flows,
+    hierarchical_flows,
+    parameter_server_flows,
+    pipeline_p2p_flows,
+    reduce_scatter_flows,
+    ring_allreduce_flows,
+    route_flows,
+    route_flows_batched,
+    split_bytes,
+)
+from repro.core.ports import QueuePair
+
+
+@pytest.fixture()
+def fabric():
+    return Fabric()  # the paper's Fig. 1 seed topology
+
+
+def _patterns(hosts):
+    """Every collective pattern over the seed fabric's 9 hosts."""
+    return {
+        "ring": ring_allreduce_flows(hosts, 10_000_003),
+        "ps": parameter_server_flows(hosts[0], hosts[1:], 5_000_001),
+        "reduce_scatter": reduce_scatter_flows(hosts, 7_777_777),
+        "all_gather": all_gather_flows(hosts, 7_777_777),
+        "all_to_all": all_to_all_flows(hosts, 9_999_999),
+        "pipeline_p2p": pipeline_p2p_flows(
+            [hosts[0:3], hosts[3:6], hosts[6:9]], 1_234_567, num_microbatches=3
+        ),
+        "hierarchical": hierarchical_flows([hosts[0], hosts[5]], 2_000_001),
+    }
+
+
+class TestBatchedEquivalence:
+    @pytest.mark.parametrize(
+        "pattern",
+        [
+            "ring", "ps", "reduce_scatter", "all_gather",
+            "all_to_all", "pipeline_p2p", "hierarchical",
+        ],
+    )
+    def test_byte_identical_per_pattern(self, fabric, pattern):
+        flows = _patterns(list(fabric.hosts))[pattern]
+        assert flows, pattern
+        seq = route_flows(fabric, flows)
+        bat = route_flows_batched(fabric, flows)
+        assert seq == bat
+
+    def test_byte_identical_both_schemes(self, fabric):
+        hosts = list(fabric.hosts)
+        for scheme in ("baseline", "qp_aware"):
+            flows = ring_allreduce_flows(hosts, 4_000_001, scheme=scheme)
+            assert route_flows(fabric, flows) == route_flows_batched(fabric, flows)
+
+    def test_byte_identical_under_link_failure(self, fabric):
+        flows = ring_allreduce_flows(list(fabric.hosts), 8_000_000)
+        fabric.fail_link("d1l1", "d1s1")
+        try:
+            assert route_flows(fabric, flows) == route_flows_batched(fabric, flows)
+        finally:
+            fabric.restore_link("d1l1", "d1s1")
+        # table invalidation: results must change back after restore
+        assert route_flows(fabric, flows) == route_flows_batched(fabric, flows)
+
+    def test_byte_identical_odd_ports(self, fabric):
+        """Source ports outside the 5-digit range take the scalar fallback."""
+        qp = QueuePair(0, 1)
+        flows = [
+            Flow("d1h1", "d2h2", 1000, qp, port)
+            for port in (1, 7, 99, 9_999, 10_000, 99_999, 100_000, 54_321)
+        ]
+        assert route_flows(fabric, flows) == route_flows_batched(fabric, flows)
+
+    def test_byte_identical_zero_byte_flows(self, fabric):
+        """send() records zero-valued counter entries for every traversed
+        link; the batched engine must emit the same keys (split_bytes
+        yields zero-byte channels whenever total_bytes < num_channels)."""
+        flows = all_to_all_flows(list(fabric.hosts), 2, num_channels=4)
+        assert any(f.nbytes == 0 for f in flows)
+        seq = route_flows(fabric, flows)
+        bat = route_flows_batched(fabric, flows)
+        assert seq == bat
+        assert set(seq) == set(bat)  # including zero-valued keys
+
+    def test_same_leaf_flows(self, fabric):
+        qp = QueuePair(0, 1)
+        flows = [Flow("d1h1", "d1h2", 500, qp, 50_000)] * 3
+        assert route_flows(fabric, flows) == route_flows_batched(fabric, flows)
+
+    def test_scaled_topology(self):
+        big = Fabric(FabricConfig(
+            num_dcs=4, spines_per_dc=4, leaves_per_dc=8,
+            hosts_per_leaf=tuple(tuple(2 for _ in range(8)) for _ in range(4)),
+        ))
+        flows = all_to_all_flows(list(big.hosts)[::4], 3_000_007)
+        assert route_flows(big, flows) == route_flows_batched(big, flows)
+
+    def test_reachability_check_raises(self, fabric):
+        flows = [Flow("d1h1", "d2h2", 100, QueuePair(0, 1), 50_000)]
+        with pytest.raises(UnreachableError):
+            route_flows_batched(fabric, flows, check_reachability=lambda s, d: False)
+
+    def test_no_route_raises(self, fabric):
+        flows = [Flow("d1h1", "d2h2", 100, QueuePair(0, 1), 50_000)]
+        fabric.fail_link("d1l1", "d1s1")
+        fabric.fail_link("d1l1", "d1s2")
+        try:
+            with pytest.raises(RuntimeError, match="no route"):
+                route_flows_batched(fabric, flows)
+        finally:
+            fabric.restore_link("d1l1", "d1s1")
+            fabric.restore_link("d1l1", "d1s2")
+
+    def test_counters_accumulate_across_batches(self, fabric):
+        """Fabric.route_flows_batched adds to existing counters (like send)."""
+        flows = [Flow("d1h1", "d2h2", 1000, QueuePair(0, 1), 50_000)]
+        fabric.reset_counters()
+        first = fabric.route_flows_batched(flows)
+        fabric.route_flows_batched(flows)
+        for link, b in first.items():
+            assert fabric.link_bytes[link] == 2 * b
+
+
+class TestSplitBytes:
+    def test_exact_conservation(self):
+        for total in (0, 1, 999, 1333, 10_000_003):
+            for parts in (1, 2, 3, 4, 7, 16):
+                chunks = split_bytes(total, parts)
+                assert sum(chunks) == total
+                assert len(chunks) == parts
+                assert max(chunks) - min(chunks) <= 1
+
+    def test_rejects_bad_parts(self):
+        with pytest.raises(ValueError):
+            split_bytes(100, 0)
+
+
+class TestRingRemainder:
+    def test_no_silent_truncation(self):
+        """The old path dropped up to num_channels-1 bytes per worker:
+        B=1000, n=3 -> per-worker 1333; 4 channels of 333 lost 1 byte."""
+        flows = ring_allreduce_flows(["d1h1", "d1h2", "d1h3"], 1000, num_channels=4)
+        per_worker = (2 * 2 * 1000) // 3  # 1333
+        by_src = {}
+        for f in flows:
+            by_src[f.src] = by_src.get(f.src, 0) + f.nbytes
+        assert all(v == per_worker for v in by_src.values()), by_src
+
+    def test_flow_count(self):
+        flows = ring_allreduce_flows([f"d1h{i}" for i in range(1, 6)][:4], 100, num_channels=4)
+        assert len(flows) == 4 * 4  # n workers x channels
+
+
+class TestNewGenerators:
+    WORKERS = ["d1h1", "d1h2", "d1h4", "d2h1", "d2h3"]  # spans both DCs
+
+    def _wan_flow_bytes(self, fabric, flows):
+        """Bytes of flows whose endpoints live in different DCs."""
+        return sum(
+            f.nbytes for f in flows
+            if fabric.hosts[f.src].dc != fabric.hosts[f.dst].dc
+        )
+
+    def test_reduce_scatter_counts_and_bytes(self):
+        n, ch, B = len(self.WORKERS), 4, 9_999_991
+        flows = reduce_scatter_flows(self.WORKERS, B, num_channels=ch)
+        assert len(flows) == n * ch
+        per_worker = ((n - 1) * B) // n
+        for w in self.WORKERS:
+            assert sum(f.nbytes for f in flows if f.src == w) == per_worker
+
+    def test_all_gather_counts_and_bytes(self):
+        n, ch, B = len(self.WORKERS), 4, 9_999_991
+        flows = all_gather_flows(self.WORKERS, B, num_channels=ch)
+        assert len(flows) == n * ch
+        per_worker = ((n - 1) * B) // n
+        for w in self.WORKERS:
+            assert sum(f.nbytes for f in flows if f.src == w) == per_worker
+
+    def test_all_gather_distinct_qps_from_reduce_scatter(self):
+        rs = reduce_scatter_flows(self.WORKERS, 1_000_000)
+        ag = all_gather_flows(self.WORKERS, 1_000_000)
+        assert {f.qp.number for f in rs}.isdisjoint({f.qp.number for f in ag})
+
+    def test_all_gather_qps_disjoint_at_scale(self):
+        """The offset must clear the whole RS span, not a fixed 0x10000
+        (at 502+ workers pair_id*131 overruns a constant offset)."""
+        workers = [f"w{i}" for i in range(600)]
+        rs = reduce_scatter_flows(workers, 1_000_000)
+        ag = all_gather_flows(workers, 1_000_000)
+        assert {f.qp.number for f in rs}.isdisjoint({f.qp.number for f in ag})
+
+    def test_all_to_all_counts_and_bytes(self):
+        n, ch, B = len(self.WORKERS), 4, 10_000_001
+        flows = all_to_all_flows(self.WORKERS, B, num_channels=ch)
+        assert len(flows) == n * (n - 1) * ch
+        shards = split_bytes(B, n)
+        for i, w in enumerate(self.WORKERS):
+            sent = sum(f.nbytes for f in flows if f.src == w)
+            assert sent == B - shards[i]  # everything but the self-shard
+
+    def test_all_to_all_wan_crossings(self, fabric):
+        flows = all_to_all_flows(self.WORKERS, 10_000_001)
+        dc = {w: fabric.hosts[w].dc for w in self.WORKERS}
+        expected_pairs = sum(
+            1 for s in self.WORKERS for d in self.WORKERS
+            if s != d and dc[s] != dc[d]
+        )
+        crossing = {(f.src, f.dst) for f in flows
+                    if dc[f.src] != dc[f.dst]}
+        assert len(crossing) == expected_pairs
+        # routed WAN bytes == bytes of the DC-crossing flows
+        route_flows_batched(fabric, flows)
+        wan_bytes = sum(
+            b for (u, v), b in fabric.link_bytes.items() if fabric.is_wan_link(u, v)
+        )
+        assert wan_bytes == self._wan_flow_bytes(fabric, flows)
+
+    def test_pipeline_p2p_counts_and_bytes(self):
+        stages = [["d1h1", "d1h2"], ["d1h4", "d1h5"], ["d2h1", "d2h2"]]
+        act, mb, ch = 999_999, 4, 4
+        flows = pipeline_p2p_flows(stages, act, num_microbatches=mb, num_channels=ch)
+        assert len(flows) == 2 * 2 * ch  # 2 boundaries x width 2 x channels
+        per_rank = act * mb
+        total = sum(f.nbytes for f in flows)
+        assert total == 2 * 2 * per_rank
+
+    def test_pipeline_p2p_uneven_stages(self):
+        flows = pipeline_p2p_flows([["d1h1", "d1h2", "d1h3"], ["d2h1"]], 1_000)
+        # width 3: every rank of the wide stage sends to the narrow stage
+        assert {f.src for f in flows} == {"d1h1", "d1h2", "d1h3"}
+        assert {f.dst for f in flows} == {"d2h1"}
+
+    def test_pipeline_p2p_wan_crossings(self, fabric):
+        stages = [["d1h1", "d1h2"], ["d2h1", "d2h2"]]
+        flows = pipeline_p2p_flows(stages, 1_000_000)
+        assert all(fabric.hosts[f.src].dc != fabric.hosts[f.dst].dc for f in flows)
+        route_flows_batched(fabric, flows)
+        wan_bytes = sum(
+            b for (u, v), b in fabric.link_bytes.items() if fabric.is_wan_link(u, v)
+        )
+        assert wan_bytes == sum(f.nbytes for f in flows)
+
+    def test_pipeline_p2p_rejects_empty_stage(self):
+        with pytest.raises(ValueError):
+            pipeline_p2p_flows([["d1h1"], []], 100)
+
+    def test_ps_byte_conservation(self):
+        B, ch = 5_000_003, 4
+        flows = parameter_server_flows("d2h1", self.WORKERS[:3], B, num_channels=ch)
+        assert len(flows) == 3 * 2 * ch
+        for w in self.WORKERS[:3]:
+            assert sum(f.nbytes for f in flows if f.src == w) == B  # push
+            assert sum(f.nbytes for f in flows if f.dst == w) == B  # pull
