@@ -1,13 +1,18 @@
 """Benchmark driver: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig14]``
+``PYTHONPATH=src python -m benchmarks.run [--only fig14] [--json-dir out/]``
 
-Prints the ``name,us_per_call,derived`` CSV contract.
+Prints the ``name,us_per_call,derived`` CSV contract; with ``--json-dir``
+each suite additionally lands as ``BENCH_<suite>.json`` (the files CI
+uploads as a workflow artifact).
 """
 
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import pathlib
 import sys
 import traceback
 
@@ -29,7 +34,17 @@ SUITES = (
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--only", default=None, help="substring filter on suite name")
+    ap.add_argument(
+        "--json-dir",
+        default=None,
+        help="also write one BENCH_<suite>.json per suite into this directory",
+    )
     args = ap.parse_args()
+
+    json_dir = None
+    if args.json_dir:
+        json_dir = pathlib.Path(args.json_dir)
+        json_dir.mkdir(parents=True, exist_ok=True)
 
     import importlib
 
@@ -40,12 +55,27 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(module)
-            for row in mod.run():
+            rows = list(mod.run())
+            for row in rows:
                 print(row.csv(), flush=True)
+            if json_dir is not None:
+                payload = {
+                    "suite": name,
+                    "module": module,
+                    "rows": [dataclasses.asdict(r) for r in rows],
+                }
+                (json_dir / f"BENCH_{name}.json").write_text(
+                    json.dumps(payload, indent=2) + "\n"
+                )
         except Exception as e:  # noqa: BLE001
             failures.append((name, e))
             print(f"{name},0.0,SUITE FAILED: {e}", flush=True)
             traceback.print_exc(file=sys.stderr)
+            if json_dir is not None:
+                (json_dir / f"BENCH_{name}.json").write_text(
+                    json.dumps({"suite": name, "module": module, "error": str(e)})
+                    + "\n"
+                )
     if failures:
         raise SystemExit(f"{len(failures)} benchmark suites failed: {[f[0] for f in failures]}")
 

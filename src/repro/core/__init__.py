@@ -13,8 +13,24 @@ from .collision import (
     expected_collisions,
     monte_carlo_collisions,
 )
+from .congestion import (
+    CongestionReport,
+    LinkLoadMatrix,
+    build_link_load_matrix,
+    congestion_report,
+    max_min_rates,
+    route_and_analyze,
+)
 from .evpn import EvpnControlPlane, RouteType2, RouteType3
-from .fabric import Fabric, FabricConfig, FiveTuple, UnreachableError, ecmp_hash
+from .fabric import (
+    Fabric,
+    FabricConfig,
+    FiveTuple,
+    FlowPaths,
+    RerouteStats,
+    UnreachableError,
+    ecmp_hash,
+)
 from .flows import (
     Flow,
     all_gather_flows,
@@ -26,6 +42,7 @@ from .flows import (
     ring_allreduce_flows,
     route_flows,
     route_flows_batched,
+    route_flows_with_paths,
     split_bytes,
 )
 from .geo import SYNC_STRATEGIES, GeoFabric, SyncCost
@@ -58,13 +75,16 @@ __all__ = [
     "ALIASING_STRIDE",
     "BfdSession",
     "BgpHoldTimer",
+    "CongestionReport",
     "EvpnControlPlane",
     "Fabric",
     "FabricConfig",
     "FailureDetector",
     "FiveTuple",
     "Flow",
+    "FlowPaths",
     "GeoFabric",
+    "LinkLoadMatrix",
     "LoadFactorResult",
     "Netem",
     "NetemProfile",
@@ -73,6 +93,7 @@ __all__ = [
     "PAPER_WAN",
     "QueuePair",
     "RecoveryTimeline",
+    "RerouteStats",
     "RouteType2",
     "RouteType3",
     "SYNC_STRATEGIES",
@@ -85,9 +106,11 @@ __all__ = [
     "all_gather_flows",
     "all_to_all_flows",
     "allocate_ports",
+    "build_link_load_matrix",
     "collision_index",
     "collision_reduction",
     "compare_schemes",
+    "congestion_report",
     "ecmp_hash",
     "expected_collisions",
     "flow_entropy",
@@ -96,6 +119,7 @@ __all__ = [
     "load_factor",
     "make_correlated_queue_pairs",
     "make_queue_pairs",
+    "max_min_rates",
     "monte_carlo_collisions",
     "parameter_server_flows",
     "ping_rtt",
@@ -103,8 +127,10 @@ __all__ = [
     "qp_aware_port",
     "reduce_scatter_flows",
     "ring_allreduce_flows",
+    "route_and_analyze",
     "route_flows",
     "route_flows_batched",
+    "route_flows_with_paths",
     "rxe_baseline_port",
     "split_bytes",
     "ROCE_V2_BASE_PORT",

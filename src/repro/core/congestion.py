@@ -1,0 +1,242 @@
+"""Vectorized flow-level congestion model (paper §5.5 / Fig. 14).
+
+The paper observes that during geo-distributed training the spine WAN
+links saturate at an *effective* ~800 Mbit/s (§5.5) and that per-collective
+batch times (Fig. 14) are set by how flows share those bottlenecks — not by
+the fabric's ideal bisection bandwidth.  :class:`~repro.core.wan.WanTimingModel`'s
+original fluid estimate divides each link's aggregate bytes by its capacity,
+which is exact only when every flow on the bottleneck starts and ends
+together.  This module refines that into a *flow-level* model:
+
+* :func:`build_link_load_matrix` — turn the per-flow directed-link paths
+  recorded by :meth:`repro.core.fabric.Fabric.route_flows_with_paths` into a
+  factorized flow x link incidence (CSR-style membership arrays) annotated
+  with per-link netem capacity and propagation;
+* :func:`max_min_rates` — progressive-filling max-min fair allocation
+  ("I've Got 99 Problems But FLOPS Ain't One", arXiv:2407.12819, argues WAN
+  bottleneck share is the quantity that determines geo step time): every
+  round all unfrozen flows rise together until the tightest link saturates,
+  freezing its flows at the current level; each round is pure NumPy
+  (``bincount`` / boolean masks) over the membership arrays, so 10k+ flows
+  allocate in a handful of array ops per bottleneck level;
+* :func:`congestion_report` — per-flow completion time
+  (``bytes / fair rate`` + propagation along the recorded path, the Corning
+  fiber-latency argument of arXiv:2605.19169) and per-link throughput /
+  utilization, including the paper's effective-WAN-throughput observable:
+  a saturated spine WAN link carries exactly its ~800 Mbit/s capacity
+  no matter how many flows contend for it.
+
+Wired into :meth:`repro.core.wan.WanTimingModel.contended_transfer_time`
+(and from there ``GeoFabric.sync_cost(congestion=True)``) so Fig. 14-style
+per-collective timings reflect contention rather than ideal bisection.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .fabric import Fabric, FlowPaths, Link
+
+#: Relative tolerance for deciding a link saturated at this filling level.
+_SATURATION_RTOL = 1e-9
+
+
+@dataclass(frozen=True)
+class LinkLoadMatrix:
+    """Factorized flow x link incidence with per-link netem attributes.
+
+    Row ``r`` says flow ``mem_flow[r]`` traverses link ``mem_link[r]``
+    (an index into ``links``).  ``delay_ms`` is the one-way propagation of
+    a single traversal — two netem qdisc passes, as in
+    :meth:`repro.core.wan.Netem.one_way_delay_ms` (jitter-free).
+    """
+
+    mem_flow: np.ndarray  # (R,) int64
+    mem_link: np.ndarray  # (R,) int64 indices into ``links``
+    links: Tuple[Link, ...]
+    capacity_gbps: np.ndarray  # (L,) float64
+    delay_ms: np.ndarray  # (L,) float64, per single traversal (2 passes)
+    is_wan: np.ndarray  # (L,) bool
+    num_flows: int
+    hops_per_flow: np.ndarray  # (F,) int64 links traversed per flow
+
+
+def build_link_load_matrix(
+    fabric: Fabric, netem, paths: FlowPaths
+) -> LinkLoadMatrix:
+    """Factorize recorded flow paths into a :class:`LinkLoadMatrix`.
+
+    ``netem`` is a :class:`repro.core.wan.Netem` (typed loosely to keep the
+    module import-cycle-free); capacity and delay come from its per-link
+    profiles, exactly as the ideal fluid model uses them.
+    """
+    nflows = paths.num_flows
+    n = len(paths.nodes)
+    keys = paths.link_u * n + paths.link_v
+    uniq, mem_link = np.unique(keys, return_inverse=True)
+    links = tuple(
+        (paths.nodes[int(k) // n], paths.nodes[int(k) % n]) for k in uniq
+    )
+    capacity = np.empty(len(links))
+    delay = np.empty(len(links))
+    is_wan = np.zeros(len(links), dtype=bool)
+    for i, (u, v) in enumerate(links):
+        prof = netem.profile(u, v)
+        capacity[i] = prof.bandwidth_gbps
+        delay[i] = 2.0 * prof.delay_ms  # netem qdisc on both interfaces
+        is_wan[i] = fabric.is_wan_link(u, v)
+    hops = np.diff(paths.ptr)
+    mem_flow = np.repeat(np.arange(nflows, dtype=np.int64), hops)
+    return LinkLoadMatrix(
+        mem_flow=mem_flow,
+        mem_link=mem_link.astype(np.int64),
+        links=links,
+        capacity_gbps=capacity,
+        delay_ms=delay,
+        is_wan=is_wan,
+        num_flows=nflows,
+        hops_per_flow=hops.astype(np.int64),
+    )
+
+
+def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
+    """Max-min fair per-flow rates (Gbit/s) by vectorized water-filling.
+
+    Progressive filling: all unfrozen flows increase at the same rate; the
+    link minimizing ``residual capacity / unfrozen flow count`` saturates
+    first and freezes its flows at the current level.  Terminates in at
+    most ``len(links)`` rounds (>=1 link saturates per round); each round
+    is O(active memberships) in NumPy with frozen rows compacted away.
+    """
+    nflows, nlinks = matrix.num_flows, len(matrix.links)
+    rate = np.zeros(nflows)
+    mem_f, mem_l = matrix.mem_flow, matrix.mem_link
+    if nflows == 0 or mem_f.size == 0:
+        return rate
+    resid = matrix.capacity_gbps.astype(np.float64).copy()
+    level = 0.0
+    for _ in range(nlinks + 1):
+        if mem_f.size == 0:
+            break
+        n_l = np.bincount(mem_l, minlength=nlinks)
+        has = n_l > 0
+        share = np.full(nlinks, np.inf)
+        share[has] = np.maximum(resid[has], 0.0) / n_l[has]
+        step = float(share.min())
+        if not np.isfinite(step):
+            break
+        level += step
+        resid -= step * n_l
+        saturated = has & (share <= step * (1.0 + _SATURATION_RTOL))
+        newly = np.unique(mem_f[saturated[mem_l]])
+        rate[newly] = level
+        keep = ~np.isin(mem_f, newly)
+        mem_f, mem_l = mem_f[keep], mem_l[keep]
+    if mem_f.size:  # numerical stragglers: freeze at the final level
+        rate[np.unique(mem_f)] = level
+    return rate
+
+
+@dataclass(frozen=True)
+class CongestionReport:
+    """Per-flow rates/completions and per-link throughput under contention."""
+
+    rates_gbps: np.ndarray  # (F,) max-min fair allocation
+    completion_s: np.ndarray  # (F,) transfer + propagation
+    propagation_ms: np.ndarray  # (F,) one-way path propagation
+    links: Tuple[Link, ...]
+    capacity_gbps: np.ndarray  # (L,)
+    throughput_gbps: np.ndarray  # (L,) sum of allocated rates on the link
+    is_wan: np.ndarray  # (L,) bool
+
+    @property
+    def seconds(self) -> float:
+        """Completion time of the whole flow set (slowest flow)."""
+        return float(self.completion_s.max()) if self.completion_s.size else 0.0
+
+    @property
+    def utilization(self) -> np.ndarray:
+        with np.errstate(divide="ignore", invalid="ignore"):
+            out = np.where(
+                self.capacity_gbps > 0, self.throughput_gbps / self.capacity_gbps, 0.0
+            )
+        return out
+
+    @property
+    def bottleneck_link(self) -> Optional[Link]:
+        if not self.links:
+            return None
+        return self.links[int(np.argmax(self.utilization))]
+
+    @property
+    def effective_wan_gbps(self) -> float:
+        """Peak per-link WAN throughput — the paper's §5.5 observable
+        (~0.8 Gbit/s on a contended spine WAN link)."""
+        if not bool(self.is_wan.any()):
+            return 0.0
+        return float(self.throughput_gbps[self.is_wan].max())
+
+
+def congestion_report(
+    matrix: LinkLoadMatrix, nbytes: Sequence[int]
+) -> CongestionReport:
+    """Allocate rates and estimate per-flow completion + propagation.
+
+    ``completion = bytes * 8 / rate + one-way propagation`` where the
+    propagation sums the recorded path's per-link netem delays (two qdisc
+    passes each) plus per-transit-switch forwarding latency — the same
+    terms :func:`repro.core.wan.ping_rtt` samples, minus jitter.
+    """
+    from .wan import SWITCH_FORWARDING_MS  # local: wan imports this module
+
+    nb = np.asarray(list(nbytes), dtype=np.float64)
+    if nb.size != matrix.num_flows:
+        raise ValueError(
+            f"{nb.size} byte counts for {matrix.num_flows} recorded paths"
+        )
+    rate = max_min_rates(matrix)
+    prop = np.zeros(matrix.num_flows)
+    np.add.at(prop, matrix.mem_flow, matrix.delay_ms[matrix.mem_link])
+    prop += np.maximum(matrix.hops_per_flow - 1, 0) * SWITCH_FORWARDING_MS
+    with np.errstate(divide="ignore", invalid="ignore"):
+        transfer = np.where(nb > 0, nb * 8.0 / (rate * 1e9), 0.0)
+    throughput = np.bincount(
+        matrix.mem_link, weights=rate[matrix.mem_flow], minlength=len(matrix.links)
+    )
+    return CongestionReport(
+        rates_gbps=rate,
+        completion_s=transfer + prop / 1e3,
+        propagation_ms=prop,
+        links=matrix.links,
+        capacity_gbps=matrix.capacity_gbps,
+        throughput_gbps=throughput,
+        is_wan=matrix.is_wan,
+    )
+
+
+def route_and_analyze(
+    fabric: Fabric,
+    netem,
+    flows: Sequence,
+    *,
+    check_reachability=None,
+    reset_counters: bool = True,
+) -> Tuple[Dict[Link, int], CongestionReport]:
+    """Route ``flows`` with path recording and run the congestion model.
+
+    Returns the batch's link byte counters (same contract as
+    :func:`repro.core.flows.route_flows_batched`, including the optional
+    counter reset) alongside the :class:`CongestionReport`.
+    """
+    flows = list(flows)  # consumed twice: routing, then per-flow byte counts
+    if reset_counters:
+        fabric.reset_counters()
+    link_bytes, paths = fabric.route_flows_with_paths(
+        flows, check_reachability=check_reachability
+    )
+    matrix = build_link_load_matrix(fabric, netem, paths)
+    report = congestion_report(matrix, [f.nbytes for f in flows])
+    return link_bytes, report

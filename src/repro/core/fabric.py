@@ -30,6 +30,26 @@ Two routing engines share the same hash semantics:
   ``tests/test_flows_batched.py``) and >=10x faster on >=10k-flow
   workloads (``benchmarks/bench_collectives.py``).
 
+Incremental failover re-convergence (paper §5.3, Fig. 9 at scale): a link
+flap does **not** flush the routing state wholesale.  While compiling
+``_distances_to(dst)`` the fabric records a reverse *link -> destination*
+dependency index: a destination depends on a live link iff the link lies
+on its BFS shortest-path DAG (``|dist[u] - dist[v]| == 1``), and on a
+down link iff restoring it would shorten a distance or add an equal-cost
+choice.  ``fail_link``/``restore_link`` consult that index and touch only
+the dependent destinations — and when the flap provably leaves every BFS
+distance unchanged (the far endpoint keeps another equal-cost next hop),
+the cached next-hop table is patched *in place* (one row) instead of being
+rebuilt.  The interned pair registry, template CRCs and per-switch
+seed-XOR columns are never invalidated, so ``route_flows_batched`` stays
+warm across BFD-cadence flap storms (``benchmarks/bench_failover.py``
+gates >=10x re-convergence speedup vs. full invalidation, byte-identical
+counters as the check).
+
+:meth:`Fabric.route_flows_with_paths` additionally records every flow's
+directed-link path (CSR :class:`FlowPaths`) — the input to the
+flow-level congestion model in :mod:`repro.core.congestion`.
+
 Node naming follows the paper: ``d{i}s{j}`` spines, ``d{i}l{j}`` leaves,
 ``d{i}h{j}`` hosts (1-based, e.g. ``d1l1`` = leaf 1 of DC 1).
 """
@@ -148,6 +168,55 @@ class Host:
     vni: Optional[int] = None
 
 
+@dataclass(frozen=True)
+class RerouteStats:
+    """What one ``fail_link``/``restore_link`` did to the routing state.
+
+    ``patched``  — compiled next-hop tables repaired in place (one row);
+    ``rebuilt``  — cached destinations evicted for a full BFS rebuild;
+    ``retained`` — cached destinations left untouched (unaffected by the
+    flap, or affected but carrying no compiled table to edit).
+    """
+
+    link: Tuple[str, str]
+    action: str  # "fail" | "restore"
+    patched: int
+    rebuilt: int
+    retained: int
+
+    @property
+    def touched(self) -> int:
+        return self.patched + self.rebuilt
+
+
+@dataclass(frozen=True)
+class FlowPaths:
+    """Per-flow directed-link paths in CSR form (``route_flows_with_paths``).
+
+    Flow ``i`` traverses the directed links
+    ``(link_u[k], link_v[k]) for k in range(ptr[i], ptr[i + 1])`` in hop
+    order, as integer node ids decodable through ``nodes``.  This is the
+    flow x link incidence the congestion model's max-min allocation
+    consumes without any per-flow Python loop.
+    """
+
+    link_u: "np.ndarray"  # (R,) int64 node ids
+    link_v: "np.ndarray"  # (R,) int64 node ids
+    ptr: "np.ndarray"  # (F + 1,) int64 CSR offsets
+    nodes: Tuple[str, ...]  # node id -> name
+
+    @property
+    def num_flows(self) -> int:
+        return len(self.ptr) - 1
+
+    def flow_links(self, i: int) -> List[Link]:
+        lo, hi = int(self.ptr[i]), int(self.ptr[i + 1])
+        return [
+            (self.nodes[int(u)], self.nodes[int(v)])
+            for u, v in zip(self.link_u[lo:hi], self.link_v[lo:hi])
+        ]
+
+
 class Fabric:
     """The emulated underlay + VXLAN data plane."""
 
@@ -164,6 +233,12 @@ class Fabric:
         self.wan_links: List[FrozenSet[str]] = []
         self._switch_seed: Dict[str, int] = {}
         self._dist_cache: Dict[str, Dict[str, int]] = {}
+        # incremental re-convergence: reverse link -> destination dependency
+        # index (built while compiling _distances_to) plus the forward map
+        # used to unregister a destination when its entry is evicted.
+        self._link_deps: Dict[FrozenSet[str], set] = {}
+        self._dst_dep_links: Dict[str, List[FrozenSet[str]]] = {}
+        self.last_reroute: Optional[RerouteStats] = None
         # batched-engine state: node<->id maps, per-destination next-hop
         # tables, and per-key-length CRC seed columns (see route_flows_batched)
         self._wan_link_set: set[FrozenSet[str]] = set()
@@ -232,6 +307,13 @@ class Fabric:
             [self._switch_seed[n] & 0xFFFFFFFF for n in self._node_order],
             dtype=np.uint32,
         )
+        # Routing-loop guard derived from the topology instead of a magic
+        # constant: an ECMP walk strictly decreases the BFS distance toward
+        # the destination every hop, and that distance is bounded by the
+        # switch-graph diameter — which under an arbitrary failure set is at
+        # most the switch count (a shortest path never revisits a switch).
+        # Anything longer is a genuine loop, at 8-DC scale included.
+        self._hop_limit = len(self.spines) + len(self.leaves) + 2
 
     # -- link state ---------------------------------------------------------
 
@@ -244,18 +326,174 @@ class Fabric:
     def link_up(self, u: str, v: str) -> bool:
         return frozenset((u, v)) not in self._down_links
 
-    def fail_link(self, u: str, v: str) -> None:
+    def fail_link(self, u: str, v: str) -> RerouteStats:
+        """Take a link down, re-converging only the dependent destinations."""
         key = frozenset((u, v))
         if key not in self._links:
             raise KeyError(f"no such link {u}<->{v}")
+        if key in self._down_links:  # already down: nothing can change
+            stats = RerouteStats((u, v), "fail", 0, 0, len(self._dist_cache))
+            self.last_reroute = stats
+            return stats
         self._down_links.add(key)
-        self._dist_cache.clear()
-        self._nh_cache.clear()
+        return self._reconverge(key, (u, v), "fail")
 
-    def restore_link(self, u: str, v: str) -> None:
-        self._down_links.discard(frozenset((u, v)))
+    def restore_link(self, u: str, v: str) -> RerouteStats:
+        """Bring a link back up, re-converging only the dependent destinations.
+
+        Unlike the original full-invalidation path, an unknown link raises
+        ``KeyError`` (symmetrically with :meth:`fail_link`) instead of being
+        silently discarded.
+        """
+        key = frozenset((u, v))
+        if key not in self._links:
+            raise KeyError(f"no such link {u}<->{v}")
+        if key not in self._down_links:  # already up: nothing can change
+            stats = RerouteStats((u, v), "restore", 0, 0, len(self._dist_cache))
+            self.last_reroute = stats
+            return stats
+        self._down_links.discard(key)
+        return self._reconverge(key, (u, v), "restore")
+
+    def flush_routing_state(self) -> None:
+        """Full invalidation: drop every cached distance map, next-hop table
+        and dependency record (the pre-incremental behavior; the failover
+        benchmark uses it as the re-convergence baseline).  The interned
+        pair registry and CRC/seed state survive — they are topology-only.
+        """
         self._dist_cache.clear()
         self._nh_cache.clear()
+        self._link_deps.clear()
+        self._dst_dep_links.clear()
+
+    def compile_routes(self, dsts: Iterable[str]) -> None:
+        """Eagerly (re)build the per-destination routing tables.
+
+        After a flap this materializes any lazily evicted rebuilds, so
+        benchmarks can measure re-convergence separately from routing.
+        """
+        for dst in dsts:
+            self._next_hop_table(dst)
+
+    # -- incremental re-convergence -----------------------------------------
+
+    def _index_deps(self, dst: str, dist: Dict[str, int]) -> None:
+        """Register ``dst`` in the reverse link->destination index.
+
+        Sensitivity is a pure function of the cached distance map:
+
+        * a *live* link matters iff it is a DAG edge
+          (``|dist[u] - dist[v]| == 1``) — failing anything else can change
+          neither a distance nor an equal-cost choice set;
+        * a *down* link matters iff restoring it would reconnect an
+          unreachable endpoint or create a shorter/equal-cost path
+          (``dist[u] != dist[v]`` or exactly one endpoint reachable).
+
+        In-place row patches never change distances, so registrations stay
+        exact across patches and only need rebuilding on eviction.
+        """
+        self._unindex(dst)
+        deps: List[FrozenSet[str]] = []
+        down = self._down_links
+        hosts = self.hosts
+        for key in self._links:
+            u, v = tuple(key)
+            if (u in hosts and u != dst) or (v in hosts and v != dst):
+                # host attachment links never carry transit traffic, so they
+                # cannot affect tables toward any other destination — without
+                # this, a single host-NIC flap would degenerate to full
+                # invalidation (every reachable host sits one BFS level past
+                # its leaf, which looks like a DAG edge).
+                continue
+            du, dv = dist.get(u), dist.get(v)
+            if key in down:
+                sensitive = (du is None) != (dv is None) or (
+                    du is not None and dv is not None and du != dv
+                )
+            else:
+                sensitive = du is not None and dv is not None and abs(du - dv) == 1
+            if sensitive:
+                self._link_deps.setdefault(key, set()).add(dst)
+                deps.append(key)
+        self._dst_dep_links[dst] = deps
+
+    def _unindex(self, dst: str) -> None:
+        for key in self._dst_dep_links.pop(dst, ()):
+            bucket = self._link_deps.get(key)
+            if bucket is not None:
+                bucket.discard(dst)
+
+    def _evict(self, dst: str) -> None:
+        self._dist_cache.pop(dst, None)
+        self._nh_cache.pop(dst, None)
+        self._unindex(dst)
+
+    def _patch_row(self, dst: str, node: str) -> bool:
+        """Recompute one node's row of the cached next-hop table in place.
+
+        Returns True iff a compiled table existed and was actually edited."""
+        cached = self._nh_cache.get(dst)
+        if cached is None:
+            return False  # distances unchanged and no table compiled yet
+        nh, counts = cached
+        i = self._node_id[node]
+        if node in self.hosts and node != dst:
+            row: List[int] = []  # hosts never forward
+        else:
+            row = [self._node_id[c] for c in self.next_hops(node, dst)]
+        if len(row) > nh.shape[1]:  # restore added a choice beyond the width
+            pad = np.full((nh.shape[0], len(row) - nh.shape[1]), -1, dtype=np.int64)
+            nh = np.hstack([nh, pad])
+        nh[i, :] = -1
+        if row:
+            nh[i, : len(row)] = row
+        counts[i] = len(row)
+        self._nh_cache[dst] = (nh, counts)
+        return True
+
+    def _reconverge(
+        self, key: FrozenSet[str], link: Tuple[str, str], action: str
+    ) -> RerouteStats:
+        """Patch or evict exactly the destinations that depend on ``key``.
+
+        For each dependent destination the cached distances decide the
+        cheap case: if the flapped link connects adjacent BFS levels and
+        the far endpoint still has (fail) / merely gains (restore) an
+        equal-cost choice, no distance anywhere can change — only the far
+        endpoint's ECMP choice row, which is rewritten in place.  Anything
+        else (lost last next hop, reconnection, shortcut) evicts that one
+        destination for a lazy BFS rebuild.  Every other cached
+        destination — and the pair/CRC/seed state — is untouched.
+        """
+        cached_before = len(self._dist_cache)
+        affected = sorted(self._link_deps.get(key, ()))
+        patched = rebuilt = 0
+        for dst in affected:
+            dist = self._dist_cache.get(dst)
+            if dist is None:  # stale index entry; nothing cached to fix
+                self._evict(dst)
+                continue
+            u, v = link
+            du, dv = dist.get(u), dist.get(v)
+            if du is not None and dv is not None and abs(du - dv) == 1:
+                far = u if du > dv else v
+                if action == "restore" or any(
+                    dist.get(nb) == dist[far] - 1 for nb in self.neighbors(far)
+                ):
+                    # distances provably unchanged: the flap only edits the
+                    # far endpoint's equal-cost choice set.  A destination
+                    # with a cached distance map but no compiled table needs
+                    # no edit at all and stays in the retained count.
+                    if self._patch_row(dst, far):
+                        patched += 1
+                    continue
+            self._evict(dst)
+            rebuilt += 1
+        stats = RerouteStats(
+            link, action, patched, rebuilt, cached_before - patched - rebuilt
+        )
+        self.last_reroute = stats
+        return stats
 
     def neighbors(self, node: str) -> List[str]:
         return [v for v in self._adj[node] if self.link_up(node, v)]
@@ -281,6 +519,7 @@ class Fabric:
                         nxt.append(nb)
             frontier = nxt
         self._dist_cache[dst] = dist
+        self._index_deps(dst, dist)
         return dist
 
     def next_hops(self, node: str, dst: str) -> List[str]:
@@ -305,7 +544,7 @@ class Fabric:
             path.append(pick)
             node = pick
             hops += 1
-            if hops > 64:
+            if hops > self._hop_limit:
                 raise RuntimeError("routing loop detected")
         return path
 
@@ -416,6 +655,8 @@ class Fabric:
         cur: np.ndarray,
         nb: np.ndarray,
         dst_hosts: np.ndarray,
+        flow_ids: Optional[np.ndarray] = None,
+        rec: Optional[List] = None,
     ) -> None:
         """Advance every flow bound for ``dst_leaf`` one hop per NumPy step."""
         nh, cnt = self._next_hop_table(dst_leaf)
@@ -424,7 +665,7 @@ class Fabric:
         len_slot = np.searchsorted(uniq_lens, lens)
         dst_id = self._node_id[dst_leaf]
         active = np.nonzero(cur != dst_id)[0]
-        for _hop in range(64):
+        for _hop in range(self._hop_limit):
             if active.size == 0:
                 break
             ci = cur[active]
@@ -436,6 +677,8 @@ class Fabric:
             pick = nh[ci, h.astype(np.int64) % fan]
             np.add.at(counters, (ci, pick), nb[active])
             touched[ci, pick] = True
+            if rec is not None:
+                rec.append((flow_ids[active], _hop + 1, ci, pick))
             cur[active] = pick
             active = active[pick != dst_id]
         else:
@@ -443,6 +686,8 @@ class Fabric:
         egress = np.full(dst_hosts.size, dst_id)
         np.add.at(counters, (egress, dst_hosts), nb)
         touched[egress, dst_hosts] = True
+        if rec is not None:
+            rec.append((flow_ids, self._hop_limit + 2, egress, dst_hosts))
 
     def route_flows_batched(
         self,
@@ -473,6 +718,34 @@ class Fabric:
         the sequential path, an unreachable flow raises before any counter
         is touched.
         """
+        out, _ = self._route_batch(flows, dst_port, check_reachability, False)
+        return out
+
+    def route_flows_with_paths(
+        self,
+        flows: Iterable,
+        *,
+        dst_port: int = ROCE_DST_PORT,
+        check_reachability=None,
+    ) -> Tuple[Dict[Link, int], FlowPaths]:
+        """:meth:`route_flows_batched` plus per-flow path recording.
+
+        Returns ``(link byte increments, FlowPaths)``; the paths feed the
+        flow-level congestion model (:mod:`repro.core.congestion`), which
+        needs to know *which* flows share a link, not just the aggregate
+        bytes.  Counter semantics are identical to the plain batched call.
+        """
+        out, paths = self._route_batch(flows, dst_port, check_reachability, True)
+        assert paths is not None
+        return out, paths
+
+    def _route_batch(
+        self,
+        flows: Iterable,
+        dst_port: int,
+        check_reachability,
+        collect_paths: bool,
+    ) -> Tuple[Dict[Link, int], Optional[FlowPaths]]:
         pair_cache = self._pair_cache
         register = self._register_pair
         pidx_l: List[int] = []
@@ -491,8 +764,14 @@ class Fabric:
             pidx_l.append(idx)
             ports_l.append(flow.src_port)
             nb_l.append(flow.nbytes)
+        empty = np.empty(0, dtype=np.int64)
         if not pidx_l:
-            return {}
+            paths = (
+                FlowPaths(empty, empty, np.zeros(1, dtype=np.int64),
+                          tuple(self._node_order))
+                if collect_paths else None
+            )
+            return {}, paths
         n = len(self._node_order)
         counters = np.zeros((n, n), dtype=np.int64)
         # links traversed, independent of byte count: send() records a
@@ -504,14 +783,23 @@ class Fabric:
         ports = np.asarray(ports_l, dtype=np.int64)
         nb = np.asarray(nb_l, dtype=np.int64)
 
+        # per-flow (flow id, hop seq, u, v) fragments for FlowPaths assembly
+        rec: Optional[List] = [] if collect_paths else None
+        nflows = pidx.size
         np.add.at(counters, (cols["src_host"][pidx], cols["src_leaf"][pidx]), nb)
         touched[cols["src_host"][pidx], cols["src_leaf"][pidx]] = True
+        if rec is not None:
+            rec.append(
+                (np.arange(nflows), 0, cols["src_host"][pidx], cols["src_leaf"][pidx])
+            )
         same = cols["same_leaf"][pidx]
         si = np.nonzero(same)[0]
         if si.size:  # same-leaf local bridging: leaf -> dst host, no underlay
             sp = pidx[si]
             np.add.at(counters, (cols["dst_leaf"][sp], cols["dst_host"][sp]), nb[si])
             touched[cols["dst_leaf"][sp], cols["dst_host"][sp]] = True
+            if rec is not None:
+                rec.append((si, 1, cols["dst_leaf"][sp], cols["dst_host"][sp]))
         ri = np.nonzero(~same)[0]
         if ri.size:
             rp = pidx[ri]
@@ -555,6 +843,7 @@ class Fabric:
                 self._walk_group(
                     counters, touched, self._gid_leaf[g],
                     c0[m], lens[m], cur[m], rnb[m], dst_hosts[m],
+                    flow_ids=ri[m] if rec is not None else None, rec=rec,
                 )
 
         out: Dict[Link, int] = {}
@@ -564,7 +853,19 @@ class Fabric:
             b = int(counters[u, v])
             out[(order[u], order[v])] = b
             self.link_bytes[(order[u], order[v])] += b
-        return out
+        paths: Optional[FlowPaths] = None
+        if rec is not None:
+            fl = np.concatenate([np.asarray(r[0], dtype=np.int64) for r in rec])
+            seq = np.concatenate(
+                [np.full(len(r[0]), r[1], dtype=np.int64) for r in rec]
+            )
+            lu = np.concatenate([np.asarray(r[2], dtype=np.int64) for r in rec])
+            lv = np.concatenate([np.asarray(r[3], dtype=np.int64) for r in rec])
+            sort = np.lexsort((seq, fl))  # group by flow, hop order within
+            ptr = np.zeros(nflows + 1, dtype=np.int64)
+            np.cumsum(np.bincount(fl, minlength=nflows), out=ptr[1:])
+            paths = FlowPaths(lu[sort], lv[sort], ptr, tuple(order))
+        return out, paths
 
     # -- data plane ---------------------------------------------------------
 

@@ -39,7 +39,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
-from .fabric import Fabric, Link
+from .fabric import Fabric, FlowPaths, Link
 from .ports import QueuePair, allocate_ports
 
 
@@ -347,3 +347,19 @@ def route_flows_batched(
     """
     fabric.reset_counters()
     return fabric.route_flows_batched(flows, check_reachability=check_reachability)
+
+
+def route_flows_with_paths(
+    fabric: Fabric,
+    flows: Sequence[Flow],
+    *,
+    check_reachability=None,
+) -> Tuple[Dict[Link, int], FlowPaths]:
+    """:func:`route_flows_batched` plus per-flow path recording.
+
+    Same reset-and-route contract; additionally returns the CSR
+    :class:`repro.core.fabric.FlowPaths` consumed by the flow-level
+    congestion model (:mod:`repro.core.congestion`).
+    """
+    fabric.reset_counters()
+    return fabric.route_flows_with_paths(flows, check_reachability=check_reachability)

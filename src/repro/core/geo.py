@@ -35,7 +35,15 @@ from .flows import (
 )
 from .metrics import LoadFactorResult, load_factor
 from .tenancy import TenancyManager
-from .wan import Netem, NetemProfile, PAPER_LAN, PAPER_WAN, WanTimingModel, ping_rtt
+from .wan import (
+    Netem,
+    NetemProfile,
+    PAPER_LAN,
+    PAPER_WAN,
+    TransferResult,
+    WanTimingModel,
+    ping_rtt,
+)
 
 SYNC_STRATEGIES = ("allreduce", "ps", "hier", "hier_int8", "local_sgd")
 
@@ -123,6 +131,7 @@ class GeoFabric:
         sync_every: int = 8,
         int8_ratio: float = 0.25,  # fp32 -> int8 + per-block scales
         jitter: bool = True,
+        congestion: bool = False,
     ) -> SyncCost:
         """Cost one gradient synchronization under ``strategy``.
 
@@ -133,6 +142,12 @@ class GeoFabric:
                         the bytes over the WAN + intra-pod all-gather;
         ``hier_int8`` — ``hier`` with the WAN payload int8-compressed;
         ``local_sgd`` — ``hier`` executed once every ``sync_every`` steps.
+
+        ``congestion=True`` swaps the ideal aggregate-bytes fluid estimate
+        for the flow-level max-min model
+        (:meth:`~repro.core.wan.WanTimingModel.contended_transfer_time`):
+        the sync finishes with its slowest contended flow, with per-flow
+        path propagation already included (so no separate RTT term).
         """
         if strategy not in SYNC_STRATEGIES:
             raise ValueError(f"unknown strategy {strategy!r}; want one of {SYNC_STRATEGIES}")
@@ -154,10 +169,27 @@ class GeoFabric:
             if strategy == "local_sgd":
                 every = sync_every
             flows = hierarchical_flows(self.pod_leaders(), shard, **kw)
-        link_bytes = route_flows(self.fabric, flows, check_reachability=self.tenancy.reachable)
-        rtt = self.netem.base_rtt_ms(self.pod_leaders()[0], self.pod_leaders()[-1]) if self.num_pods > 1 else 0.0
         jit = float(self.netem.rng.uniform(0, 2.0)) if jitter else 0.0
-        result = self.timing.transfer_time(link_bytes, rtt_ms=rtt, jitter_sample_ms=jit)
+        if congestion:
+            report = self.timing.contended_transfer_time(
+                flows, check_reachability=self.tenancy.reachable
+            )
+            link_bytes = dict(self.fabric.link_bytes)
+            result = TransferResult(
+                seconds=report.seconds + jit / 1e3,
+                bottleneck_link=report.bottleneck_link,
+                bottleneck_bytes=0,
+            )
+        else:
+            link_bytes = route_flows(
+                self.fabric, flows, check_reachability=self.tenancy.reachable
+            )
+            rtt = (
+                self.netem.base_rtt_ms(self.pod_leaders()[0], self.pod_leaders()[-1])
+                if self.num_pods > 1
+                else 0.0
+            )
+            result = self.timing.transfer_time(link_bytes, rtt_ms=rtt, jitter_sample_ms=jit)
         wan_bytes = sum(
             b for (u, v), b in link_bytes.items() if self.fabric.is_wan_link(u, v)
         )

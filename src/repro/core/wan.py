@@ -9,7 +9,11 @@ module reproduces both:
 * :func:`ping_rtt` — RTT samples along a fabric path (Fig. 8);
 * :class:`WanTimingModel` — deterministic per-collective transfer times used
   by the Fig. 14 reproduction and by the geo-runtime's step-time estimator:
-  ``time = bytes_on_bottleneck / bw + propagation + jitter``.
+  ``time = bytes_on_bottleneck / bw + propagation + jitter`` — plus
+  :meth:`WanTimingModel.contended_transfer_time`, which replaces the ideal
+  aggregate-bytes fluid estimate with the flow-level max-min congestion
+  model of :mod:`repro.core.congestion` (paper §5.5's ~800 Mbit/s
+  effective spine throughput emerges from it rather than being assumed).
 
 All randomness flows through a seeded ``numpy`` Generator: runs are
 bit-reproducible.
@@ -154,3 +158,33 @@ class WanTimingModel:
             bottleneck_bytes=worst[2],
             per_link_seconds=per_link,
         )
+
+    def contended_transfer_time(
+        self,
+        flows: Sequence,
+        *,
+        check_reachability=None,
+        reset_counters: bool = True,
+    ):
+        """Flow-level contended timing for a set of concurrent flows.
+
+        Routes ``flows`` through the fabric with per-flow path recording
+        (resetting counters first by default, like
+        :func:`repro.core.flows.route_flows_batched`), then applies the
+        max-min congestion model: each flow finishes at
+        ``bytes / fair_share + path propagation``, so a collective's time
+        is its slowest contended flow, not the ideal aggregate-bytes
+        estimate of :meth:`transfer_time`.  Returns the
+        :class:`repro.core.congestion.CongestionReport` (``.seconds`` is
+        the completion time; propagation is already included per flow).
+        """
+        from .congestion import route_and_analyze  # congestion imports wan
+
+        _, report = route_and_analyze(
+            self.fabric,
+            self.netem,
+            flows,
+            check_reachability=check_reachability,
+            reset_counters=reset_counters,
+        )
+        return report

@@ -1,7 +1,8 @@
 """Seeded-random fallback for the ``hypothesis`` property-testing API.
 
 The test suite uses a small slice of hypothesis: ``@given`` over
-``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.sampled_from`` plus
+``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.sampled_from`` /
+``st.booleans`` / ``st.tuples`` plus
 ``@settings(max_examples=..., deadline=...)``.  When the real package is
 not installed, :func:`install` registers this module under
 ``sys.modules["hypothesis"]`` so the test modules import and *run* instead
@@ -108,6 +109,14 @@ class _Booleans(SearchStrategy):
         return rng.random() < 0.5
 
 
+class _Tuples(SearchStrategy):
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def example(self, rng: random.Random, index: int) -> tuple:
+        return tuple(s.example(rng, index) for s in self.strategies)
+
+
 def integers(min_value: Optional[int] = None, max_value: Optional[int] = None) -> _Integers:
     return _Integers(min_value, max_value)
 
@@ -126,6 +135,10 @@ def lists(elements: SearchStrategy, **kwargs: Any) -> _Lists:
 
 def booleans() -> _Booleans:
     return _Booleans()
+
+
+def tuples(*strategies: SearchStrategy) -> _Tuples:
+    return _Tuples(*strategies)
 
 
 def settings(**config: Any):
@@ -185,7 +198,7 @@ def install() -> None:
     hyp.__doc__ = __doc__
     hyp.__fallback__ = True
     strat = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "lists", "booleans"):
+    for name in ("integers", "floats", "sampled_from", "lists", "booleans", "tuples"):
         setattr(strat, name, globals()[name])
     strat.SearchStrategy = SearchStrategy
     hyp.strategies = strat

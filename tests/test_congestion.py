@@ -1,0 +1,197 @@
+"""Flow-level congestion model tests (paper §5.5 / Fig. 14, ISSUE 2).
+
+Validates the vectorized max-min allocation against a straightforward
+per-flow reference implementation, the paper's ~800 Mbit/s effective
+spine-WAN throughput observable, and the WanTimingModel/GeoFabric wiring.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.congestion import (
+    build_link_load_matrix,
+    congestion_report,
+    max_min_rates,
+    route_and_analyze,
+)
+from repro.core.fabric import Fabric, FabricConfig
+from repro.core.flows import (
+    Flow,
+    all_to_all_flows,
+    ring_allreduce_flows,
+    route_flows_with_paths,
+)
+from repro.core.geo import GeoFabric
+from repro.core.ports import QueuePair
+from repro.core.wan import Netem, WanTimingModel
+
+
+def _flow(src, dst, nbytes=1_000_000, port=50_000):
+    return Flow(src, dst, nbytes, QueuePair(0, 1), port)
+
+
+class TestMaxMinAllocation:
+    def test_single_flow_gets_bottleneck_capacity(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        _, report = route_and_analyze(fabric, netem, [_flow("d1h1", "d2h1")])
+        assert report.rates_gbps[0] == pytest.approx(0.8)  # WAN cap
+
+    def test_intra_dc_flow_gets_lan_capacity(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        _, report = route_and_analyze(fabric, netem, [_flow("d1h1", "d1h2")])
+        assert report.rates_gbps[0] == pytest.approx(10.0)
+
+    def test_equal_shares_on_shared_bottleneck(self):
+        """K flows between the same host pair share one WAN path's 0.8."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = [_flow("d1h1", "d2h1", port=50_000) for _ in range(8)]
+        _, report = route_and_analyze(fabric, netem, flows)
+        # identical 5-tuples -> identical path -> strict 0.8/8 each
+        assert report.rates_gbps == pytest.approx(np.full(8, 0.1))
+
+    def test_saturated_wan_link_carries_exactly_capacity(self):
+        """Paper §5.5: contended spine WAN links deliver ~800 Mbit/s
+        effective throughput no matter the offered load."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = all_to_all_flows(list(fabric.hosts), 50_000_000)
+        _, report = route_and_analyze(fabric, netem, flows)
+        assert report.effective_wan_gbps == pytest.approx(0.8, rel=1e-6)
+        # and no link is ever allocated beyond its capacity
+        assert np.all(report.throughput_gbps <= report.capacity_gbps * (1 + 1e-9))
+
+    def test_max_min_fairness_property(self):
+        """No flow can be raised without lowering a slower flow: every flow
+        crosses at least one saturated link where it holds a maximal share."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = all_to_all_flows(list(fabric.hosts), 10_000_000)
+        _, paths = route_flows_with_paths(fabric, flows)
+        matrix = build_link_load_matrix(fabric, netem, paths)
+        rates = max_min_rates(matrix)
+        sat = np.zeros(len(matrix.links), dtype=bool)
+        thr = np.bincount(
+            matrix.mem_link, weights=rates[matrix.mem_flow],
+            minlength=len(matrix.links),
+        )
+        sat = thr >= matrix.capacity_gbps * (1 - 1e-6)
+        for f in range(matrix.num_flows):
+            on = matrix.mem_link[matrix.mem_flow == f]
+            bott = on[sat[on]]
+            assert bott.size, f"flow {f} crosses no saturated link"
+            for l in bott.tolist():
+                peers = rates[matrix.mem_flow[matrix.mem_link == l]]
+                if rates[f] >= peers.max() - 1e-9:
+                    break
+            else:
+                pytest.fail(f"flow {f} is not maximal on any of its bottlenecks")
+
+    def test_empty_flow_set(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        _, report = route_and_analyze(fabric, netem, [])
+        assert report.seconds == 0.0
+        assert report.rates_gbps.size == 0
+
+    def test_accepts_generator_input(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        _, report = route_and_analyze(
+            fabric, netem, (_flow("d1h1", "d2h1") for _ in range(3))
+        )
+        assert report.rates_gbps.size == 3
+
+
+class TestCompletionTimes:
+    def test_transfer_plus_propagation(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        nbytes = 100_000_000
+        _, report = route_and_analyze(
+            fabric, netem, [_flow("d1h1", "d2h1", nbytes=nbytes)]
+        )
+        transfer = nbytes * 8 / (0.8e9)
+        # one-way propagation ~11 ms across the single WAN hop (Fig. 8 / 2)
+        assert report.propagation_ms[0] == pytest.approx(
+            netem.base_rtt_ms("d1h1", "d2h1") / 2.0
+        )
+        assert report.completion_s[0] == pytest.approx(
+            transfer + report.propagation_ms[0] / 1e3
+        )
+
+    def test_zero_byte_flow_costs_only_propagation(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        _, report = route_and_analyze(
+            fabric, netem, [_flow("d1h1", "d2h1", nbytes=0)]
+        )
+        assert report.completion_s[0] == pytest.approx(
+            report.propagation_ms[0] / 1e3
+        )
+
+    def test_contended_slower_than_ideal(self):
+        """Contention can only slow a collective down vs the ideal fluid
+        estimate of the same routed byte counters."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        model = WanTimingModel(netem)
+        flows = ring_allreduce_flows(list(fabric.hosts), 64_000_003)
+        report = model.contended_transfer_time(flows)
+        ideal = model.transfer_time(dict(fabric.link_bytes))
+        assert report.seconds >= ideal.seconds * (1 - 1e-9)
+
+
+class TestPathsRecording:
+    def test_counters_match_plain_batched(self):
+        fabric = Fabric()
+        flows = all_to_all_flows(list(fabric.hosts), 3_000_007)
+        a, paths = route_flows_with_paths(fabric, flows)
+        fabric2 = Fabric()
+        from repro.core.flows import route_flows_batched
+
+        b = route_flows_batched(fabric2, flows)
+        assert a == b
+        assert paths.num_flows == len(flows)
+
+    def test_paths_match_sequential_walk(self):
+        fabric = Fabric()
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        _, paths = route_flows_with_paths(fabric, flows)
+        ref = Fabric()
+        for i, f in enumerate(flows):
+            seq = ref.send(f.src, f.dst, f.nbytes, src_port=f.src_port)
+            assert paths.flow_links(i) == list(zip(seq, seq[1:]))
+
+    def test_paths_under_link_failure(self):
+        fabric = Fabric()
+        wan = sorted(fabric.wan_links[0])
+        fabric.fail_link(wan[0], wan[1])
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        _, paths = route_flows_with_paths(fabric, flows)
+        for i in range(len(flows)):
+            assert (wan[0], wan[1]) not in paths.flow_links(i)
+            assert (wan[1], wan[0]) not in paths.flow_links(i)
+
+
+class TestGeoFabricCongestion:
+    def test_strategy_ordering_survives_contention(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=4, seed=3)
+        cost = {
+            s: geo.sync_cost(s, grad_bytes=312_000_000, jitter=False, congestion=True)
+            for s in ("allreduce", "ps", "hier", "hier_int8")
+        }
+        assert cost["ps"].wan_seconds > cost["allreduce"].wan_seconds
+        assert cost["hier"].wan_seconds < cost["allreduce"].wan_seconds
+        assert cost["hier_int8"].wan_seconds < cost["hier"].wan_seconds
+
+    def test_congested_at_least_ideal_transfer(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=4, seed=0)
+        ideal = geo.sync_cost("hier", grad_bytes=100_000_000, jitter=False)
+        contended = geo.sync_cost(
+            "hier", grad_bytes=100_000_000, jitter=False, congestion=True
+        )
+        assert contended.wan_bytes == ideal.wan_bytes  # same routed flows
+        assert contended.wan_seconds > 0

@@ -1,0 +1,249 @@
+"""Incremental failover re-convergence tests (ISSUE 2 tentpole).
+
+The contract: after *any* sequence of ``fail_link``/``restore_link``
+flaps, the incrementally maintained routing state must be byte-identical
+to a freshly built :class:`Fabric` carrying the same down-link set — while
+touching only the destinations whose BFS DAG crossed the flapped link and
+keeping the batched engine's interned pair/CRC/seed state warm.
+"""
+
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bfd import FailureDetector
+from repro.core.fabric import Fabric, FabricConfig, FiveTuple, RerouteStats
+from repro.core.flows import (
+    all_to_all_flows,
+    ring_allreduce_flows,
+    route_flows_batched,
+)
+
+#: A 3-DC fabric small enough for per-example fresh rebuilds but with real
+#: WAN path diversity (2 spines, 12 WAN links, 12 hosts).
+MID = FabricConfig(
+    num_dcs=3,
+    spines_per_dc=2,
+    leaves_per_dc=3,
+    hosts_per_leaf=((2, 1, 1), (1, 2, 1), (1, 1, 2)),
+)
+
+
+def _flap_sequence(fabric: Fabric, moves):
+    """Apply (link_index, fail?) moves; returns the resulting down set."""
+    links = [tuple(sorted(l)) for l in fabric.all_links()]
+    down = set()
+    for idx, do_fail in moves:
+        link = links[idx % len(links)]
+        if do_fail:
+            down.add(link)
+            fabric.fail_link(*link)
+        else:
+            down.discard(link)
+            fabric.restore_link(*link)
+    return down
+
+
+def _counters_or_error(fabric, flows):
+    try:
+        return route_flows_batched(fabric, flows), None
+    except RuntimeError as exc:
+        return None, str(exc)
+
+
+class TestFlapEquivalence:
+    """Satellite: property test for incremental-invalidation equivalence."""
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(st.integers(min_value=0, max_value=60), st.booleans()),
+            min_size=0,
+            max_size=12,
+        )
+    )
+    def test_any_flap_sequence_matches_fresh_fabric(self, moves):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 1_234_567)
+        route_flows_batched(fabric, flows)  # warm every cache pre-storm
+        down = _flap_sequence(fabric, moves)
+
+        fresh = Fabric(MID)
+        for link in sorted(down):
+            fresh.fail_link(*link)
+
+        inc, inc_err = _counters_or_error(fabric, flows)
+        ref, ref_err = _counters_or_error(fresh, flows)
+        assert (inc_err is None) == (ref_err is None), (inc_err, ref_err)
+        if inc_err is None:
+            assert inc == ref
+
+    def test_seed_topology_fail_restore_roundtrip(self):
+        fabric = Fabric()
+        flows = ring_allreduce_flows(list(fabric.hosts), 8_000_000)
+        before = route_flows_batched(fabric, flows)
+        wan = sorted(fabric.wan_links[0])
+        fabric.fail_link(wan[0], wan[1])
+        failed = route_flows_batched(fabric, flows)
+        assert all(
+            link != (wan[0], wan[1]) and link != (wan[1], wan[0])
+            for link, b in failed.items()
+            if b > 0
+        )
+        fabric.restore_link(wan[0], wan[1])
+        assert route_flows_batched(fabric, flows) == before
+
+
+class TestIncrementalScope:
+    """Flaps touch only dependent destinations; warm state survives."""
+
+    def test_wan_flap_patches_in_place(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        wan = sorted(fabric.wan_links[0])
+        stats = fabric.fail_link(wan[0], wan[1])
+        assert isinstance(stats, RerouteStats)
+        # full ECMP spine diversity: every affected table is patched in
+        # place, none needs a BFS rebuild
+        assert stats.patched > 0
+        assert stats.rebuilt == 0
+
+    def test_unrelated_destinations_retained(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        cached_before = set(fabric._dist_cache)
+        # d2<->d3 WAN link: destinations inside DC1 (and their distance
+        # maps) are equidistant from both endpoints -> provably unaffected
+        link = sorted(l for l in fabric.wan_links
+                      if all(not n.startswith("d1") for n in l))[0]
+        u, v = sorted(link)
+        stats = fabric.fail_link(u, v)
+        assert stats.retained > 0
+        d1_leaves = {d for d in cached_before if d.startswith("d1l")}
+        assert d1_leaves <= set(fabric._dist_cache)
+
+    def test_pair_registry_stays_warm_across_flaps(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        pairs = dict(fabric._pair_cache)
+        rows = list(fabric._pair_rows)
+        zcols = set(fabric._zcol_cache)
+        wan = sorted(fabric.wan_links[0])
+        fabric.fail_link(wan[0], wan[1])
+        fabric.restore_link(wan[0], wan[1])
+        assert fabric._pair_cache == pairs
+        assert fabric._pair_rows == rows
+        assert set(fabric._zcol_cache) == zcols
+
+    def test_host_link_flap_retains_everything(self):
+        """Host attachment links carry no transit traffic: flapping one must
+        not invalidate (or rebuild) any leaf-destination table."""
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        cached = set(fabric._dist_cache)
+        leaf = fabric.hosts["d1h1"].leaf
+        stats = fabric.fail_link("d1h1", leaf)
+        assert stats.touched == 0
+        assert stats.retained == len(cached)
+        assert set(fabric._dist_cache) == cached
+        fabric.restore_link("d1h1", leaf)
+        # and routing is still byte-identical to a fresh build
+        fresh = Fabric(MID)
+        assert route_flows_batched(fabric, flows) == route_flows_batched(
+            fresh, flows
+        )
+
+    def test_dist_only_cache_not_counted_as_patched(self):
+        """A destination with a cached distance map but no compiled next-hop
+        table needs no edit: it must show up as retained, not patched."""
+        fabric = Fabric(MID)
+        fabric.next_hops("d1l1", "d2l1")  # fills _dist_cache only
+        assert "d2l1" in fabric._dist_cache
+        assert "d2l1" not in fabric._nh_cache
+        wan = sorted(fabric.wan_links[0])
+        stats = fabric.fail_link(wan[0], wan[1])
+        assert stats.patched == 0
+        fabric.restore_link(wan[0], wan[1])
+
+    def test_losing_last_next_hop_rebuilds(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        # cut d1l1's first uplink (patch), then its last (distance change)
+        fabric.fail_link("d1l1", "d1s1")
+        stats = fabric.fail_link("d1l1", "d1s2")
+        assert stats.rebuilt > 0
+
+    def test_flush_routing_state_full_invalidation(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        before = route_flows_batched(fabric, flows)
+        fabric.flush_routing_state()
+        assert not fabric._dist_cache and not fabric._nh_cache
+        assert route_flows_batched(fabric, flows) == before  # rebuilt lazily
+
+
+class TestLinkValidation:
+    """Satellite: restore_link validates like fail_link."""
+
+    def test_restore_unknown_link_raises(self):
+        fabric = Fabric()
+        with pytest.raises(KeyError, match="no such link"):
+            fabric.restore_link("d1s1", "nonexistent")
+
+    def test_fail_unknown_link_raises(self):
+        fabric = Fabric()
+        with pytest.raises(KeyError, match="no such link"):
+            fabric.fail_link("d1s1", "nonexistent")
+
+    def test_redundant_flaps_are_noops(self):
+        fabric = Fabric()
+        wan = sorted(fabric.wan_links[0])
+        fabric.fail_link(wan[0], wan[1])
+        again = fabric.fail_link(wan[0], wan[1])
+        assert again.touched == 0
+        fabric.restore_link(wan[0], wan[1])
+        again = fabric.restore_link(wan[0], wan[1])
+        assert again.touched == 0
+        assert fabric.link_up(wan[0], wan[1])
+
+
+class TestHopGuard:
+    """Satellite: loop guard derived from topology, not a 64-hop constant."""
+
+    def test_limit_scales_with_switch_count(self):
+        small = Fabric()
+        assert small._hop_limit == len(small.spines) + len(small.leaves) + 2
+        big = Fabric(FabricConfig(
+            num_dcs=8, spines_per_dc=4, leaves_per_dc=6,
+            hosts_per_leaf=tuple(tuple(1 for _ in range(6)) for _ in range(8)),
+        ))
+        assert big._hop_limit > 64  # the old constant would be too tight
+
+    def test_scaled_fabric_routes_without_false_loop(self):
+        big = Fabric(FabricConfig(
+            num_dcs=8, spines_per_dc=4, leaves_per_dc=6,
+            hosts_per_leaf=tuple(tuple(1 for _ in range(6)) for _ in range(8)),
+        ))
+        tup = FiveTuple("a", "b", 50_000, 4791)
+        path = big.route_flow(tup, "d1l1", "d8l6")
+        assert path[0] == "d1l1" and path[-1] == "d8l6"
+
+
+class TestFailureDetectorIntegration:
+    def test_recovery_timeline_reports_reroute_stats(self):
+        fabric = Fabric(MID)
+        flows = all_to_all_flows(list(fabric.hosts), 999_999)
+        route_flows_batched(fabric, flows)
+        det = FailureDetector(fabric)
+        wan = sorted(fabric.wan_links[0])
+        tl = det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        assert tl.reroute is not None
+        assert tl.reroute.action == "fail"
+        assert tl.reroute.patched > 0
+        assert any("incremental" in msg for _, msg in tl.events)
+        det.restore((wan[0], wan[1]))
