@@ -7,9 +7,12 @@ framework itself:
 * computation — measured by running the REAL 82M-parameter model (one
   fwd+bwd+AdamW step, paper batch size) on this host, then scaled by the
   paper's GPU/CPU throughput ratio (documented constant);
-* synchronization — the fabric's fluid timing model over the routed QP
-  flows (the same pipeline as the paper's testbed: ring AllReduce crosses
-  the WAN twice; PS pushes+pulls through the DC1 server).
+* synchronization — the flow-level contended congestion model over the
+  routed QP flows (``sync_cost(congestion=True)``: max-min fair shares on
+  every link, per-flow path propagation — the same pipeline as the paper's
+  testbed: ring AllReduce crosses the WAN twice; PS pushes+pulls through
+  the DC1 server), with the ideal fluid estimate reported alongside as a
+  per-strategy fluid-vs-contended delta row.
 
 Paper observations to match: AllReduce ~5-11 s/batch, PS ~9-18 s/batch,
 PS slower with higher variance; gradient volumes ~312 MB (AR) vs ~459 MB
@@ -91,9 +94,25 @@ def run() -> List[BenchRow]:
     ]
     results = {}
     for strategy, nbytes in (("allreduce", AR_GRAD_BYTES), ("ps", PS_GRAD_BYTES)):
+        fluid = geo.sync_cost(strategy, nbytes, jitter=False)
+        contended = geo.sync_cost(strategy, nbytes, jitter=False, congestion=True)
+        rows.append(
+            BenchRow(
+                name=f"fig14_{strategy}_fluid_vs_contended",
+                us_per_call=float(contended.wan_seconds * 1e6),
+                derived=(
+                    f"fluid={fluid.wan_seconds:.2f}s "
+                    f"contended={contended.wan_seconds:.2f}s "
+                    f"delta={100 * (contended.wan_seconds / fluid.wan_seconds - 1):+.1f}% "
+                    f"bottleneck={contended.bottleneck_link} "
+                    f"{contended.bottleneck_bytes / 1e6:.0f}MB "
+                    f"util={contended.bottleneck_utilization:.2f}"
+                ),
+            )
+        )
         times = []
         for _ in range(BATCHES):
-            cost = geo.sync_cost(strategy, nbytes, jitter=True)
+            cost = geo.sync_cost(strategy, nbytes, jitter=True, congestion=True)
             if strategy == "ps":
                 # stochastic queueing at the server NIC (paper: PS shows
                 # the wider band)

@@ -1,9 +1,12 @@
 """Beyond-paper WAN sync strategies (EXPERIMENTS.md §Perf).
 
-Extends Fig. 14 with the strategies the paper's future-work section
-points toward: hierarchical (pod-leader) sync, int8-compressed WAN hops,
-and DiLoCo-style local SGD — same fabric, same gradient volume, so the
-numbers compose directly with the Fig. 14 baselines.
+Extends Fig. 14 with every schedule strategy in the
+:func:`repro.core.schedule.register_strategy` registry: the paper set
+(hierarchical pod-leader sync, int8-compressed WAN hops, DiLoCo-style
+local SGD) plus the phased/overlapped schedules (PS push-then-pull,
+pipelined RS+AG, flat and hierarchical MoE all-to-all) — same fabric,
+same gradient volume, so the numbers compose directly with the Fig. 14
+baselines.  Multi-phase strategies report their per-phase timeline.
 """
 
 from __future__ import annotations
@@ -12,7 +15,8 @@ from typing import List
 
 import numpy as np
 
-from repro.core.geo import SYNC_STRATEGIES, GeoFabric
+from repro.core.geo import GeoFabric
+from repro.core.schedule import strategy_names
 
 from .common import BenchRow, timed
 
@@ -23,11 +27,18 @@ def run() -> List[BenchRow]:
     geo = GeoFabric(num_pods=2, workers_per_pod=2, num_channels=4, seed=3)
     rows: List[BenchRow] = []
     base = None
-    for strategy in SYNC_STRATEGIES:
+    for strategy in strategy_names():
         cost, us = timed(lambda s=strategy: geo.sync_cost(s, GRAD_BYTES, jitter=False))
         if strategy == "allreduce":
             base = cost.amortized_seconds
         speedup = base / cost.amortized_seconds if cost.amortized_seconds > 0 else float("inf")
+        phased = (
+            " phases[" + " ".join(
+                f"{p.name}={p.duration_s:.2f}s" for p in cost.phases
+            ) + "]"
+            if len(cost.phases) > 1
+            else ""
+        )
         rows.append(
             BenchRow(
                 name=f"wan_sync_{strategy}",
@@ -36,6 +47,7 @@ def run() -> List[BenchRow]:
                     f"wan={cost.wan_seconds:.2f}s amortized={cost.amortized_seconds:.3f}s "
                     f"wan_bytes={cost.wan_bytes / 1e6:.0f}MB "
                     f"speedup_vs_allreduce={speedup:.1f}x"
+                    + phased
                 ),
             )
         )

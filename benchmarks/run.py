@@ -27,6 +27,7 @@ SUITES = (
     ("table1_tenancy", "benchmarks.bench_tenancy"),
     ("fig14_training", "benchmarks.bench_training"),
     ("wan_sync_beyond_paper", "benchmarks.bench_wan_sync"),
+    ("schedule_overlap", "benchmarks.bench_schedule"),
     ("roofline", "benchmarks.bench_roofline"),
 )
 

@@ -2,7 +2,9 @@
 
 1. Build the emulated 2-DC EVPN-VXLAN fabric, ping across the WAN.
 2. Allocate queue-pair source ports both ways (Algorithm 1 vs stock RXE).
-3. Cost every WAN gradient-sync strategy for a real model's gradients.
+3. Cost every registered WAN sync schedule (paper strategies + phased/
+   overlapped ones) for a real model's gradients under the event-driven
+   congestion model, with per-phase timelines for multi-phase schedules.
 4. Train a smoke-scale model for a few steps with the geo trainer.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -13,9 +15,9 @@ import jax
 from repro.configs import get_smoke_config
 from repro.core import (
     GeoFabric,
-    SYNC_STRATEGIES,
     allocate_ports,
     make_correlated_queue_pairs,
+    strategy_names,
 )
 from repro.launch.mesh import make_host_mesh
 from repro.launch.shapes import params_specs
@@ -41,10 +43,16 @@ def main() -> None:
         s.size * 4 for s in jax.tree.leaves(params_specs(cfg))
     )
     print(f"[sync]  gradient volume {grad_bytes / 1e6:.1f} MB across the WAN:")
-    for strategy in SYNC_STRATEGIES:
-        c = geo.sync_cost(strategy, grad_bytes, jitter=False)
-        print(f"        {strategy:10s} {c.amortized_seconds * 1e3:8.1f} ms/step "
-              f"({c.wan_bytes / 1e6:6.1f} MB on WAN links)")
+    for strategy in strategy_names():
+        c = geo.sync_cost(strategy, grad_bytes, jitter=False, congestion=True)
+        phased = (
+            " | ".join(f"{p.name} {p.duration_s * 1e3:.1f}ms" for p in c.phases)
+            if len(c.phases) > 1
+            else ""
+        )
+        print(f"        {strategy:14s} {c.amortized_seconds * 1e3:8.1f} ms/step "
+              f"({c.wan_bytes / 1e6:6.1f} MB on WAN links)"
+              + (f"  [{phased}]" if phased else ""))
 
     # -- 4. train -------------------------------------------------------------
     from repro.optim import AdamWConfig
@@ -59,8 +67,12 @@ def main() -> None:
     )
     result = trainer.run()
     losses = [m["loss"] for m in result["metrics"]]
-    print(f"[train] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps "
-          f"(checkpointed at step {result['last_checkpoint']})")
+    if losses:
+        print(f"[train] loss {losses[0]:.3f} -> {losses[-1]:.3f} over {len(losses)} steps "
+              f"(checkpointed at step {result['last_checkpoint']})")
+    else:
+        print(f"[train] nothing to do: restored checkpoint already at step "
+              f"{result['last_checkpoint']} (delete the checkpoint dir to retrain)")
 
 
 if __name__ == "__main__":

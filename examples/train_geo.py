@@ -19,6 +19,7 @@ import argparse
 
 from repro.configs import get_config, get_smoke_config
 from repro.core.geo import GeoFabric
+from repro.core.schedule import SYNC_STRATEGIES
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import GeoTrainer, TrainerConfig
 from repro.optim import AdamWConfig
@@ -27,8 +28,9 @@ from repro.optim import AdamWConfig
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--strategy", default="hier",
-                    choices=["allreduce", "ps", "hier", "hier_int8", "local_sgd"])
+    # the distributed step builders implement the paper strategies; the WAN
+    # estimator additionally accepts any registered schedule strategy
+    ap.add_argument("--strategy", default="hier", choices=list(SYNC_STRATEGIES))
     ap.add_argument("--paper-scale", action="store_true",
                     help="the real 82M model (slower on CPU)")
     ap.add_argument("--seq-len", type=int, default=128)

@@ -3,6 +3,16 @@
 The paper's primary contribution — an emulation framework for studying
 geo-distributed AI training over EVPN-VXLAN WAN overlays, plus the
 queue-pair-aware ECMP source-port allocator (Algorithm 1) — lives here.
+
+Synchronization costing is organized around phased schedules: collective
+patterns (:mod:`repro.core.flows`) are composed into
+:class:`~repro.core.schedule.CollectiveSchedule` DAGs by registered
+strategy builders (:mod:`repro.core.schedule`), routed through the
+vectorized ECMP engine (:mod:`repro.core.fabric`), and costed either with
+the fluid per-link model (:mod:`repro.core.wan`) or the event-driven
+time-varying max-min congestion simulator (:mod:`repro.core.congestion`) —
+``GeoFabric.sync_cost`` (:mod:`repro.core.geo`) is the facade over the
+whole pipeline.
 """
 
 from .bfd import BfdSession, BgpHoldTimer, FailureDetector, RecoveryTimeline
@@ -16,10 +26,13 @@ from .collision import (
 from .congestion import (
     CongestionReport,
     LinkLoadMatrix,
+    PhaseTiming,
+    ScheduleReport,
     build_link_load_matrix,
     congestion_report,
     max_min_rates,
     route_and_analyze,
+    simulate_schedule,
 )
 from .evpn import EvpnControlPlane, RouteType2, RouteType3
 from .fabric import (
@@ -35,6 +48,7 @@ from .flows import (
     Flow,
     all_gather_flows,
     all_to_all_flows,
+    hierarchical_all_to_all_flows,
     hierarchical_flows,
     parameter_server_flows,
     pipeline_p2p_flows,
@@ -45,7 +59,18 @@ from .flows import (
     route_flows_with_paths,
     split_bytes,
 )
-from .geo import SYNC_STRATEGIES, GeoFabric, SyncCost
+from .geo import GeoFabric, SyncCost
+from .schedule import (
+    SYNC_STRATEGIES,
+    CollectiveSchedule,
+    Phase,
+    StrategyContext,
+    build_schedule,
+    get_strategy,
+    register_strategy,
+    strategy_names,
+    with_compute_overlap,
+)
 from .metrics import LoadFactorResult, flow_entropy, load_factor
 from .ports import (
     ALIASING_STRIDE,
@@ -75,6 +100,7 @@ __all__ = [
     "ALIASING_STRIDE",
     "BfdSession",
     "BgpHoldTimer",
+    "CollectiveSchedule",
     "CongestionReport",
     "EvpnControlPlane",
     "Fabric",
@@ -91,12 +117,16 @@ __all__ = [
     "NUM_PORT_OFFSETS",
     "PAPER_LAN",
     "PAPER_WAN",
+    "Phase",
+    "PhaseTiming",
     "QueuePair",
     "RecoveryTimeline",
     "RerouteStats",
     "RouteType2",
     "RouteType3",
     "SYNC_STRATEGIES",
+    "ScheduleReport",
+    "StrategyContext",
     "SyncCost",
     "TenancyManager",
     "Tenant",
@@ -107,6 +137,7 @@ __all__ = [
     "all_to_all_flows",
     "allocate_ports",
     "build_link_load_matrix",
+    "build_schedule",
     "collision_index",
     "collision_reduction",
     "compare_schemes",
@@ -114,7 +145,9 @@ __all__ = [
     "ecmp_hash",
     "expected_collisions",
     "flow_entropy",
+    "get_strategy",
     "hash_32",
+    "hierarchical_all_to_all_flows",
     "hierarchical_flows",
     "load_factor",
     "make_correlated_queue_pairs",
@@ -126,12 +159,16 @@ __all__ = [
     "pipeline_p2p_flows",
     "qp_aware_port",
     "reduce_scatter_flows",
+    "register_strategy",
     "ring_allreduce_flows",
     "route_and_analyze",
     "route_flows",
     "route_flows_batched",
     "route_flows_with_paths",
     "rxe_baseline_port",
+    "simulate_schedule",
     "split_bytes",
+    "strategy_names",
+    "with_compute_overlap",
     "ROCE_V2_BASE_PORT",
 ]

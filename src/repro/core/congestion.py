@@ -26,8 +26,17 @@ together.  This module refines that into a *flow-level* model:
   a saturated spine WAN link carries exactly its ~800 Mbit/s capacity
   no matter how many flows contend for it.
 
+* :func:`simulate_schedule` — the event-driven *time-varying* extension:
+  a :class:`repro.core.schedule.CollectiveSchedule` DAG is replayed as a
+  fluid simulation in which phases start when their dependencies complete,
+  the max-min allocation is re-solved (over the active flows' CSR
+  membership rows) at every flow arrival/completion event, and the
+  :class:`ScheduleReport` carries per-phase/per-flow timelines.  A
+  single-phase schedule reproduces :func:`congestion_report` exactly.
+
 Wired into :meth:`repro.core.wan.WanTimingModel.contended_transfer_time`
-(and from there ``GeoFabric.sync_cost(congestion=True)``) so Fig. 14-style
+/ :meth:`~repro.core.wan.WanTimingModel.contended_schedule_time` (and from
+there ``GeoFabric.sync_cost(congestion=True)``) so Fig. 14-style
 per-collective timings reflect contention rather than ideal bisection.
 """
 
@@ -111,12 +120,32 @@ def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
     most ``len(links)`` rounds (>=1 link saturates per round); each round
     is O(active memberships) in NumPy with frozen rows compacted away.
     """
-    nflows, nlinks = matrix.num_flows, len(matrix.links)
+    return _max_min_rates_arrays(
+        matrix.mem_flow,
+        matrix.mem_link,
+        matrix.capacity_gbps,
+        matrix.num_flows,
+        len(matrix.links),
+    )
+
+
+def _max_min_rates_arrays(
+    mem_f: np.ndarray,
+    mem_l: np.ndarray,
+    capacity_gbps: np.ndarray,
+    nflows: int,
+    nlinks: int,
+) -> np.ndarray:
+    """:func:`max_min_rates` over raw membership arrays.
+
+    ``mem_f``/``mem_l`` may be any subset of a matrix's rows (the
+    event-driven simulator passes only the rows of currently-active
+    flows); flows with no rows get rate 0.
+    """
     rate = np.zeros(nflows)
-    mem_f, mem_l = matrix.mem_flow, matrix.mem_link
     if nflows == 0 or mem_f.size == 0:
         return rate
-    resid = matrix.capacity_gbps.astype(np.float64).copy()
+    resid = capacity_gbps.astype(np.float64).copy()
     level = 0.0
     for _ in range(nlinks + 1):
         if mem_f.size == 0:
@@ -138,6 +167,18 @@ def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
     if mem_f.size:  # numerical stragglers: freeze at the final level
         rate[np.unique(mem_f)] = level
     return rate
+
+
+def _propagation_ms(matrix: LinkLoadMatrix) -> np.ndarray:
+    """One-way path propagation per flow: per-link netem delays (two qdisc
+    passes each, already folded into ``delay_ms``) + per-transit-switch
+    forwarding latency."""
+    from .wan import SWITCH_FORWARDING_MS  # local: wan imports this module
+
+    prop = np.zeros(matrix.num_flows)
+    np.add.at(prop, matrix.mem_flow, matrix.delay_ms[matrix.mem_link])
+    prop += np.maximum(matrix.hops_per_flow - 1, 0) * SWITCH_FORWARDING_MS
+    return prop
 
 
 @dataclass(frozen=True)
@@ -190,17 +231,13 @@ def congestion_report(
     passes each) plus per-transit-switch forwarding latency — the same
     terms :func:`repro.core.wan.ping_rtt` samples, minus jitter.
     """
-    from .wan import SWITCH_FORWARDING_MS  # local: wan imports this module
-
     nb = np.asarray(list(nbytes), dtype=np.float64)
     if nb.size != matrix.num_flows:
         raise ValueError(
             f"{nb.size} byte counts for {matrix.num_flows} recorded paths"
         )
     rate = max_min_rates(matrix)
-    prop = np.zeros(matrix.num_flows)
-    np.add.at(prop, matrix.mem_flow, matrix.delay_ms[matrix.mem_link])
-    prop += np.maximum(matrix.hops_per_flow - 1, 0) * SWITCH_FORWARDING_MS
+    prop = _propagation_ms(matrix)
     with np.errstate(divide="ignore", invalid="ignore"):
         transfer = np.where(nb > 0, nb * 8.0 / (rate * 1e9), 0.0)
     throughput = np.bincount(
@@ -240,3 +277,377 @@ def route_and_analyze(
     matrix = build_link_load_matrix(fabric, netem, paths)
     report = congestion_report(matrix, [f.nbytes for f in flows])
     return link_bytes, report
+
+
+# -- event-driven time-varying simulation (CollectiveSchedule costing) -------
+
+#: Drains within this relative window of the earliest one are processed as a
+#: single event (merges the +/-1-byte stragglers of exact ``split_bytes``
+#: chunking, which would otherwise each trigger a nanosecond-apart re-solve).
+_DRAIN_GROUP_RTOL = 1e-8
+
+
+@dataclass(frozen=True)
+class PhaseTiming:
+    """When one :class:`repro.core.schedule.Phase` ran in a simulation.
+
+    ``flow_lo:flow_hi`` slices the report's per-flow arrays (flows are laid
+    out in the schedule's topological phase order).
+    """
+
+    name: str
+    start_s: float
+    end_s: float
+    flow_lo: int
+    flow_hi: int
+    wan_bytes: int
+    compute_seconds: float = 0.0
+
+    @property
+    def duration_s(self) -> float:
+        return self.end_s - self.start_s
+
+
+@dataclass(frozen=True)
+class ScheduleReport:
+    """Per-phase/per-flow timelines of a simulated :class:`CollectiveSchedule`.
+
+    The schedule-level counterpart of :class:`CongestionReport`: a
+    single-phase schedule's report reproduces it exactly (same ``seconds``,
+    completions, and peak link throughput), while multi-phase schedules add
+    the time dimension — phase start/end, per-flow start/drain/completion,
+    and each link's *peak* concurrent throughput across allocation epochs
+    (the §5.5 effective-WAN observable generalized to time-varying load).
+    """
+
+    schedule_name: str
+    phase_timings: Tuple[PhaseTiming, ...]
+    flow_start_s: np.ndarray  # (F,) phase-start time of each flow
+    flow_drain_s: np.ndarray  # (F,) transfer finished (capacity released)
+    completion_s: np.ndarray  # (F,) drain + one-way path propagation
+    propagation_ms: np.ndarray  # (F,)
+    flow_bytes: np.ndarray  # (F,)
+    links: Tuple[Link, ...]
+    capacity_gbps: np.ndarray  # (L,)
+    link_total_bytes: np.ndarray  # (L,) bytes carried over the whole schedule
+    peak_throughput_gbps: np.ndarray  # (L,) max concurrent allocation
+    is_wan: np.ndarray  # (L,) bool
+
+    @property
+    def seconds(self) -> float:
+        """Makespan: completion of the last phase (flows + compute tails)."""
+        if not self.phase_timings:
+            return 0.0
+        return float(max(p.end_s for p in self.phase_timings))
+
+    @property
+    def busy_seconds(self) -> np.ndarray:
+        """Per-link serial drain time (``bytes * 8 / capacity``) — how long
+        the link would need carrying its whole schedule load alone."""
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(
+                self.capacity_gbps > 0,
+                self.link_total_bytes * 8.0 / (self.capacity_gbps * 1e9),
+                0.0,
+            )
+
+    @property
+    def utilization(self) -> np.ndarray:
+        """Time-averaged utilization over the schedule makespan."""
+        total = self.seconds
+        if total <= 0:
+            return np.zeros(len(self.links))
+        return self.busy_seconds / total
+
+    @property
+    def bottleneck_link(self) -> Optional[Link]:
+        if not self.links:
+            return None
+        return self.links[int(np.argmax(self.busy_seconds))]
+
+    @property
+    def bottleneck_bytes(self) -> int:
+        if not self.links:
+            return 0
+        return int(self.link_total_bytes[int(np.argmax(self.busy_seconds))])
+
+    @property
+    def bottleneck_utilization(self) -> float:
+        if not self.links:
+            return 0.0
+        return float(self.utilization[int(np.argmax(self.busy_seconds))])
+
+    @property
+    def effective_wan_gbps(self) -> float:
+        """Peak per-link WAN throughput across the schedule (§5.5)."""
+        if not bool(self.is_wan.any()):
+            return 0.0
+        return float(self.peak_throughput_gbps[self.is_wan].max())
+
+    def phase(self, name: str) -> PhaseTiming:
+        for p in self.phase_timings:
+            if p.name == name:
+                return p
+        raise KeyError(f"no phase {name!r} in schedule {self.schedule_name!r}")
+
+
+def _phase_wan_bytes(
+    matrix: LinkLoadMatrix, nb: np.ndarray, lo: int, hi: int
+) -> int:
+    """Bytes the phase's flows place on WAN links (per-traversal, matching
+    the ``link_bytes`` WAN accounting of ``GeoFabric.sync_cost``)."""
+    rows = (
+        (matrix.mem_flow >= lo)
+        & (matrix.mem_flow < hi)
+        & matrix.is_wan[matrix.mem_link]
+    )
+    return int(nb[matrix.mem_flow[rows]].sum())
+
+
+def simulate_schedule(
+    fabric: Fabric,
+    netem,
+    schedule,
+    *,
+    check_reachability=None,
+    reset_counters: bool = True,
+) -> ScheduleReport:
+    """Event-driven time-varying max-min simulation of a phased schedule.
+
+    ``schedule`` is a :class:`repro.core.schedule.CollectiveSchedule`.  All
+    phases' flows are routed in one batch (counters accumulate the whole
+    schedule, same contract as :func:`route_and_analyze`); the simulation
+    then replays the DAG as a fluid model:
+
+    * a phase starts when its dependencies complete (+ its start offset);
+      its flows join the active set;
+    * the max-min fair allocation is re-solved — vectorized over the CSR
+      membership rows of the *active* flows only — at every flow
+      arrival/completion event, so flows arriving or leaving mid-collective
+      reshape everyone's fair share (the time-varying congestion the static
+      :func:`congestion_report` cannot express);
+    * a flow drains when its bytes are transferred at the evolving rates
+      and completes one path-propagation later; a phase completes when all
+      its flows have completed and its ``compute_seconds`` have elapsed.
+
+    A single-phase schedule takes a fast path through the static
+    :func:`congestion_report` — with one allocation epoch the two models
+    coincide, and the shortcut keeps the equivalence *exact* (bit-for-bit
+    the ``wan_seconds`` the pre-schedule ``sync_cost`` returned) rather
+    than within float tolerance of the event loop.
+    """
+    phases = schedule.phases
+    flows = schedule.all_flows()
+    slices: List[Tuple[int, int]] = []
+    lo = 0
+    for p in phases:
+        slices.append((lo, lo + len(p.flows)))
+        lo += len(p.flows)
+    if reset_counters:
+        fabric.reset_counters()
+    _, paths = fabric.route_flows_with_paths(
+        flows, check_reachability=check_reachability
+    )
+    matrix = build_link_load_matrix(fabric, netem, paths)
+    nb = np.asarray([f.nbytes for f in flows], dtype=np.float64)
+    nlinks = len(matrix.links)
+    link_total = np.bincount(
+        matrix.mem_link, weights=nb[matrix.mem_flow], minlength=nlinks
+    )
+
+    if schedule.is_single_phase:
+        rep = congestion_report(matrix, nb)
+        drain = rep.completion_s - rep.propagation_ms / 1e3
+        timing = PhaseTiming(
+            name=phases[0].name,
+            start_s=0.0,
+            end_s=rep.seconds,
+            flow_lo=0,
+            flow_hi=len(flows),
+            wan_bytes=_phase_wan_bytes(matrix, nb, 0, len(flows)),
+        )
+        return ScheduleReport(
+            schedule_name=schedule.name,
+            phase_timings=(timing,),
+            flow_start_s=np.zeros(len(flows)),
+            flow_drain_s=drain,
+            completion_s=rep.completion_s,
+            propagation_ms=rep.propagation_ms,
+            flow_bytes=nb,
+            links=matrix.links,
+            capacity_gbps=matrix.capacity_gbps,
+            link_total_bytes=link_total,
+            peak_throughput_gbps=rep.throughput_gbps,
+            is_wan=matrix.is_wan,
+        )
+
+    return _simulate_events(schedule, matrix, nb, slices, link_total)
+
+
+def _simulate_events(
+    schedule,
+    matrix: LinkLoadMatrix,
+    nb: np.ndarray,
+    slices: List[Tuple[int, int]],
+    link_total: np.ndarray,
+) -> ScheduleReport:
+    import heapq
+
+    phases = schedule.phases
+    nphases = len(phases)
+    nflows = int(nb.size)
+    nlinks = len(matrix.links)
+    mem_f, mem_l = matrix.mem_flow, matrix.mem_link
+    prop_ms = _propagation_ms(matrix)
+    name_to_idx = {p.name: i for i, p in enumerate(phases)}
+    dependents: List[List[int]] = [[] for _ in range(nphases)]
+    pending = np.zeros(nphases, dtype=np.int64)
+    for i, p in enumerate(phases):
+        pending[i] = len(p.deps)
+        for d in p.deps:
+            dependents[name_to_idx[d]].append(i)
+
+    remaining = nb * 8.0  # bits still to transfer
+    active = np.zeros(nflows, dtype=bool)
+    flow_phase = np.empty(nflows, dtype=np.int64)
+    for i, (plo, phi) in enumerate(slices):
+        flow_phase[plo:phi] = i
+    undrained = np.asarray([hi - lo for lo, hi in slices], dtype=np.int64)
+    flow_start = np.zeros(nflows)
+    flow_drain = np.zeros(nflows)
+    flow_complete = np.zeros(nflows)
+    phase_start = np.zeros(nphases)
+    phase_end = np.zeros(nphases)
+    peak_thr = np.zeros(nlinks)
+    rates = np.zeros(nflows)
+
+    _START, _COMPLETE = 0, 1
+    heap: List[Tuple[float, int, int, int]] = []
+    seq = 0
+    for i, p in enumerate(phases):
+        if not p.deps:
+            heapq.heappush(heap, (p.start_offset_s, seq, _START, i))
+            seq += 1
+
+    def finish_phase(i: int, t: float) -> float:
+        """Completion time of phase i once its last flow has drained."""
+        plo, phi = slices[i]
+        end = phase_start[i] + phases[i].compute_seconds
+        if phi > plo:
+            end = max(end, float(flow_complete[plo:phi].max()))
+        return max(end, t)
+
+    t = 0.0
+    stale = True
+    guard = 0
+    max_events = 4 * (nflows + nphases) + 64
+    while heap or bool(active.any()):
+        guard += 1
+        if guard > max_events:
+            raise RuntimeError(
+                f"schedule {schedule.name!r}: event budget exceeded "
+                f"({max_events}) — simulator stuck"
+            )
+        act_idx = np.nonzero(active)[0]
+        if stale and act_idx.size:
+            rows = active[mem_f]
+            rates = _max_min_rates_arrays(
+                mem_f[rows], mem_l[rows], matrix.capacity_gbps, nflows, nlinks
+            )
+            thr = np.bincount(
+                mem_l[rows], weights=rates[mem_f[rows]], minlength=nlinks
+            )
+            np.maximum(peak_thr, thr, out=peak_thr)
+            stale = False
+        if act_idx.size:
+            with np.errstate(divide="ignore", invalid="ignore"):
+                ttd = remaining[act_idx] / (rates[act_idx] * 1e9)
+            t_drain = float(ttd.min())
+        else:
+            ttd = None
+            t_drain = np.inf
+        t_heap = heap[0][0] if heap else np.inf
+        if not np.isfinite(t_drain) and not heap:
+            raise RuntimeError(
+                f"schedule {schedule.name!r}: active flows can make no "
+                "progress (zero-capacity path?)"
+            )
+        if t_heap <= t + t_drain:
+            # advance to the heap event; in-flight transfers progress
+            dt = max(t_heap - t, 0.0)
+            if act_idx.size and dt > 0:
+                remaining[act_idx] -= rates[act_idx] * 1e9 * dt
+            t = t_heap
+            while heap and heap[0][0] <= t:
+                _, _, kind, i = heapq.heappop(heap)
+                plo, phi = slices[i]
+                if kind == _START:
+                    phase_start[i] = t
+                    flow_start[plo:phi] = t
+                    zero = plo + np.nonzero(nb[plo:phi] <= 0)[0]
+                    if zero.size:
+                        flow_drain[zero] = t
+                        flow_complete[zero] = t + prop_ms[zero] / 1e3
+                        undrained[i] -= zero.size
+                    live = plo + np.nonzero(nb[plo:phi] > 0)[0]
+                    if live.size:
+                        active[live] = True
+                        stale = True
+                    if undrained[i] == 0:
+                        heapq.heappush(
+                            heap, (finish_phase(i, t), seq, _COMPLETE, i)
+                        )
+                        seq += 1
+                else:  # _COMPLETE
+                    phase_end[i] = t
+                    for q in dependents[i]:
+                        pending[q] -= 1
+                        if pending[q] == 0:
+                            start = (
+                                max(phase_end[name_to_idx[d]] for d in phases[q].deps)
+                                + phases[q].start_offset_s
+                            )
+                            heapq.heappush(heap, (start, seq, _START, q))
+                            seq += 1
+            continue
+        # advance to the next drain group
+        group = act_idx[ttd <= t_drain * (1.0 + _DRAIN_GROUP_RTOL) + 1e-15]
+        remaining[act_idx] -= rates[act_idx] * 1e9 * t_drain
+        t += t_drain
+        remaining[group] = 0.0
+        active[group] = False
+        flow_drain[group] = t
+        flow_complete[group] = t + prop_ms[group] / 1e3
+        stale = True
+        undrained -= np.bincount(flow_phase[group], minlength=nphases)
+        for i in np.unique(flow_phase[group]).tolist():
+            if undrained[i] == 0:
+                heapq.heappush(heap, (finish_phase(i, t), seq, _COMPLETE, i))
+                seq += 1
+
+    timings = tuple(
+        PhaseTiming(
+            name=p.name,
+            start_s=float(phase_start[i]),
+            end_s=float(phase_end[i]),
+            flow_lo=slices[i][0],
+            flow_hi=slices[i][1],
+            wan_bytes=_phase_wan_bytes(matrix, nb, *slices[i]),
+            compute_seconds=p.compute_seconds,
+        )
+        for i, p in enumerate(phases)
+    )
+    return ScheduleReport(
+        schedule_name=schedule.name,
+        phase_timings=timings,
+        flow_start_s=flow_start,
+        flow_drain_s=flow_drain,
+        completion_s=flow_complete,
+        propagation_ms=prop_ms,
+        flow_bytes=nb,
+        links=matrix.links,
+        capacity_gbps=matrix.capacity_gbps,
+        link_total_bytes=link_total,
+        peak_throughput_gbps=peak_thr,
+        is_wan=matrix.is_wan,
+    )

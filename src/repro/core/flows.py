@@ -22,7 +22,10 @@ baseline port-allocation comparison runs unchanged across all of them):
 * :func:`pipeline_p2p_flows` — GeoPipe-style stage-to-stage activation
   traffic between pipeline stages (arXiv 2510.12064);
 * :func:`hierarchical_flows` — the beyond-paper geo schedule: only the
-  1/N_local shard crosses the WAN between DC leaders.
+  1/N_local shard crosses the WAN between DC leaders;
+* :func:`hierarchical_all_to_all_flows` — two-phase MoE all-to-all
+  (intra-DC dispatch to the pod leader, leader-only WAN combine), built
+  for the :mod:`repro.core.schedule` phased scheduler.
 
 Per-pattern byte totals are exact: remainders from integer division are
 spread one byte at a time over the first channels (see
@@ -189,17 +192,29 @@ def parameter_server_flows(
     k_bins: int = 4,
     base_qpn: int = 0x11,
     qp_stride: int = 1,
+    direction: str = "both",
 ) -> List[Flow]:
-    """PS push+pull: every worker sends B to the server and receives B back."""
+    """PS push+pull: every worker sends B to the server and receives B back.
+
+    ``direction`` selects the ``"push"`` (worker -> server) or ``"pull"``
+    (server -> worker) half individually so a phased scheduler can compose
+    push-then-pull as two dependent phases; ``"both"`` (default) emits the
+    full concurrent set with identical QPs/ports either way.
+    """
+    if direction not in ("both", "push", "pull"):
+        raise ValueError(f"direction must be both|push|pull, got {direction!r}")
     flows: List[Flow] = []
     for wi, worker in enumerate(workers):
-        flows += _pair_flows(
-            worker, server, wi, grad_bytes, num_channels, scheme, k_bins, base_qpn, qp_stride
-        )
-        flows += _pair_flows(
-            server, worker, 1000 + wi, grad_bytes, num_channels, scheme, k_bins,
-            base_qpn, qp_stride,
-        )
+        if direction in ("both", "push"):
+            flows += _pair_flows(
+                worker, server, wi, grad_bytes, num_channels, scheme, k_bins,
+                base_qpn, qp_stride,
+            )
+        if direction in ("both", "pull"):
+            flows += _pair_flows(
+                server, worker, 1000 + wi, grad_bytes, num_channels, scheme, k_bins,
+                base_qpn, qp_stride,
+            )
     return flows
 
 
@@ -278,6 +293,74 @@ def pipeline_p2p_flows(
                 src, dst, pair_id, per_rank, num_channels, scheme, k_bins,
                 base_qpn, qp_stride,
             )
+            pair_id += 1
+    return flows
+
+
+def hierarchical_all_to_all_flows(
+    pods: Sequence[Sequence[str]],
+    total_bytes: int,
+    *,
+    phase: str = "both",
+    num_channels: int = 4,
+    scheme: str = "qp_aware",
+    k_bins: int = 4,
+    base_qpn: int = 0x11,
+    qp_stride: int = 1,
+) -> List[Flow]:
+    """Hierarchical MoE all-to-all: intra-DC dispatch + leader-only WAN combine.
+
+    ``pods`` is one worker list per DC (first member is the pod leader).
+    Each worker holds ``total_bytes`` of expert-bound tokens split uniformly
+    across pods (:func:`split_bytes`, so totals are exact); the flat
+    all-to-all would push every worker's remote shard straight across the
+    WAN.  The hierarchical schedule instead runs two phases:
+
+    * ``"dispatch"`` — every non-leader worker forwards its remote-destined
+      bytes (``total_bytes`` minus its own pod's shard) to the pod leader
+      over the local fabric;
+    * ``"combine"`` — leaders exchange the pod-aggregated shards
+      (``n_local * shard`` per destination pod) as a leader-only all-to-all,
+      the only traffic that crosses the WAN.
+
+    ``phase`` selects one half for a phased scheduler (QP numbering is
+    stable across selections, so dispatch/combine flows built separately are
+    identical to the matching halves of ``"both"``); the per-pod WAN volume
+    is ``n_local * (P-1)/P * B`` concentrated on the leader, versus the flat
+    all-to-all's identical volume spread over ``n_local`` distinct
+    host-level WAN paths — same bytes, fewer contending WAN flows.
+    """
+    if phase not in ("both", "dispatch", "combine"):
+        raise ValueError(f"phase must be both|dispatch|combine, got {phase!r}")
+    norm: List[List[str]] = [list(p) for p in pods]
+    if any(not p for p in norm):
+        raise ValueError("every pod needs at least one worker")
+    n_pods = len(norm)
+    if n_pods < 2:
+        return []
+    shards = split_bytes(int(total_bytes), n_pods)
+    flows: List[Flow] = []
+    pair_id = 0
+    for p, members in enumerate(norm):
+        leader = members[0]
+        remote_bytes = int(total_bytes) - shards[p]
+        for worker in members[1:]:
+            if phase in ("both", "dispatch"):
+                flows += _pair_flows(
+                    worker, leader, pair_id, remote_bytes, num_channels, scheme,
+                    k_bins, base_qpn, qp_stride,
+                )
+            pair_id += 1  # advances regardless of phase: stable QP identity
+    pair_id = 100_000  # combine pair ids disjoint from any dispatch count
+    for p, members in enumerate(norm):
+        for q in range(n_pods):
+            if p == q:
+                continue
+            if phase in ("both", "combine"):
+                flows += _pair_flows(
+                    members[0], norm[q][0], pair_id, len(members) * shards[q],
+                    num_channels, scheme, k_bins, base_qpn, qp_stride,
+                )
             pair_id += 1
     return flows
 

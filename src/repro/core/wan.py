@@ -13,7 +13,10 @@ module reproduces both:
   :meth:`WanTimingModel.contended_transfer_time`, which replaces the ideal
   aggregate-bytes fluid estimate with the flow-level max-min congestion
   model of :mod:`repro.core.congestion` (paper §5.5's ~800 Mbit/s
-  effective spine throughput emerges from it rather than being assumed).
+  effective spine throughput emerges from it rather than being assumed),
+  and :meth:`WanTimingModel.contended_schedule_time`, its event-driven
+  generalization to phased :class:`repro.core.schedule.CollectiveSchedule`
+  DAGs with time-varying flow sets.
 
 All randomness flows through a seeded ``numpy`` Generator: runs are
 bit-reproducible.
@@ -188,3 +191,33 @@ class WanTimingModel:
             reset_counters=reset_counters,
         )
         return report
+
+    def contended_schedule_time(
+        self,
+        schedule,
+        *,
+        check_reachability=None,
+        reset_counters: bool = True,
+    ):
+        """Contended timing for a phased :class:`CollectiveSchedule`.
+
+        Routes every phase's flows (one batch, counters accumulate the
+        whole schedule) and runs the event-driven time-varying max-min
+        simulation of :func:`repro.core.congestion.simulate_schedule`:
+        phases enter the active set as their dependencies complete, the
+        fair-share allocation is re-solved at every arrival/completion
+        event, and the returned
+        :class:`repro.core.congestion.ScheduleReport` carries per-phase
+        and per-flow timelines (``.seconds`` is the makespan).  For a
+        single-phase schedule this is exactly
+        :meth:`contended_transfer_time` on its flow set.
+        """
+        from .congestion import simulate_schedule  # congestion imports wan
+
+        return simulate_schedule(
+            self.fabric,
+            self.netem,
+            schedule,
+            check_reachability=check_reachability,
+            reset_counters=reset_counters,
+        )

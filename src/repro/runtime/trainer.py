@@ -23,6 +23,7 @@ import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, CheckpointStore
 from repro.core.geo import GeoFabric
+from repro.core.schedule import CollectiveSchedule, strategy_names
 from repro.data import loader_for_model
 from repro.distributed import init_train_state, make_train_step
 from repro.launch.shapes import params_specs
@@ -132,9 +133,15 @@ class GeoTrainer:
         params, state, start = self.init_or_restore()
         tc = self.tc
         last_ckpt = start
+        # WAN cost estimate via the schedule-strategy registry.  Note
+        # make_train_step currently restricts tc.strategy to the paper five
+        # (all registered), so today this always costs; the registry check
+        # keeps the estimate in sync if the step builders grow strategies
+        # that have no schedule (or vice versa).
         wan_cost = (
             self.geo.sync_cost(tc.strategy, self.grad_bytes, jitter=False)
-            if tc.strategy in ("allreduce", "ps", "hier", "hier_int8", "local_sgd")
+            if isinstance(tc.strategy, CollectiveSchedule)
+            or tc.strategy in strategy_names()
             else None
         )
         recovery_drills = []
@@ -203,4 +210,7 @@ class GeoTrainer:
             "recovery_drills": recovery_drills,
             "sync_efficiency": self.stragglers.sync_efficiency(),
             "last_checkpoint": last_ckpt,
+            "wan_phases": (
+                {p.name: p.duration_s for p in wan_cost.phases} if wan_cost else {}
+            ),
         }
