@@ -16,8 +16,7 @@ warm) and asserts the two produce byte-identical counters.
 
 from __future__ import annotations
 
-import time
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Tuple
 
 import numpy as np
 

@@ -12,6 +12,13 @@ against full cache invalidation, gated on >=10x speedup with
 byte-identical ``route_flows_batched`` counters — plus the flow-level
 congestion model's reproduction of the ~800 Mbit/s effective spine-WAN
 throughput (§5.5).
+
+ISSUE 4 tentpole: the same storm (plus a leaf-isolation episode, the one
+event class that actually partitions the BGP session graph) drives the
+*control plane* — ``EvpnControlPlane.resync_incremental`` piggybacking on
+each flap's ``RerouteStats`` must touch <20% of VTEPs on average while
+ending byte-identical (RIBs + MAC/IP/flood tables) to a control plane
+that full-``resync()``s after every event.
 """
 
 from __future__ import annotations
@@ -39,6 +46,7 @@ SCALED8 = FabricConfig(
 
 STORM_GRAD_BYTES = 16_000_001
 MIN_STORM_SPEEDUP = 10.0
+MAX_EVPN_TOUCHED_FRAC = 0.20
 
 
 def _storm_events(fabric: Fabric) -> List[Tuple[str, Tuple[str, str]]]:
@@ -60,18 +68,80 @@ def _storm_events(fabric: Fabric) -> List[Tuple[str, Tuple[str, str]]]:
     return events
 
 
+def _evpn_storm_events(fabric: Fabric) -> List[Tuple[str, Tuple[str, str]]]:
+    """The data-plane storm plus a leaf-isolation episode: d5l1 loses all
+    four uplinks one BFD flap at a time (only the fourth partitions the
+    BGP session graph), then gets them back — the only event class whose
+    EVPN blast radius is non-empty."""
+    events = list(_storm_events(fabric))
+    uplinks = [("d5l1", f"d5s{j}") for j in range(1, 5)]
+    events += [("fail", link) for link in uplinks]
+    events += [("restore", link) for link in uplinks]
+    return events
+
+
+def _learned_control_plane(fabric: Fabric) -> EvpnControlPlane:
+    evpn = EvpnControlPlane(fabric)
+    for host in sorted(fabric.hosts):
+        evpn.learn_host(host, 100)
+    return evpn
+
+
+def _evpn_state(evpn: EvpnControlPlane):
+    """The full control-plane session state, for byte-identity checks."""
+    return (
+        {name: frozenset(sp.rib) for name, sp in evpn.speakers.items()},
+        evpn.mac_table,
+        evpn.ip_table,
+        evpn.flood_list,
+    )
+
+
+def _run_evpn_storm(
+    fabric: Fabric,
+    evpn: EvpnControlPlane,
+    events: List[Tuple[str, Tuple[str, str]]],
+    *,
+    full_resync: bool,
+) -> Tuple[float, List[float], int]:
+    """Apply the storm, resyncing the control plane after every flap.
+
+    Returns (EVPN resync seconds, per-event VTEP-touched fractions, total
+    speakers touched) — the data-plane reroute itself is excluded from the
+    timing so the comparison isolates control-plane cost.
+    """
+    touched_fracs: List[float] = []
+    touched_total = 0
+    elapsed = 0.0
+    for action, (u, v) in events:
+        stats = (
+            fabric.fail_link(u, v) if action == "fail" else fabric.restore_link(u, v)
+        )
+        t0 = time.perf_counter()
+        if full_resync:
+            evpn.resync()
+        else:
+            es = evpn.resync_incremental(stats)
+            touched_fracs.append(es.vtep_touched_frac)
+            touched_total += es.touched
+        elapsed += time.perf_counter() - t0
+    return elapsed, touched_fracs, touched_total
+
+
 def _run_storm(
     fabric: Fabric,
     events: List[Tuple[str, Tuple[str, str]]],
     leaves: List[str],
     *,
     full_invalidation: bool,
-) -> Tuple[float, int, int]:
+) -> Tuple[float, int, int, int]:
     """Apply the storm; after every BFD event, re-converge the routing
     tables for every egress leaf the live flows use.  Returns (seconds,
-    tables patched in place, tables rebuilt)."""
+    tables patched in place, tables rebuilt, distinct destinations in the
+    emitted blast radius — ``RerouteStats.affected_dsts``)."""
     det = FailureDetector(fabric)
     patched = rebuilt = 0
+    blast: set = set()
     t0 = time.perf_counter()
     for action, (u, v) in events:
         if action == "fail":
@@ -83,8 +153,9 @@ def _run_storm(
         else:
             patched += stats.patched
             rebuilt += stats.rebuilt
+            blast.update(stats.affected_dsts)
         fabric.compile_routes(leaves)
-    return time.perf_counter() - t0, patched, rebuilt
+    return time.perf_counter() - t0, patched, rebuilt, len(blast)
 
 
 def run() -> List[BenchRow]:
@@ -102,6 +173,7 @@ def run() -> List[BenchRow]:
             us_per_call=us1,
             derived=f"recovery={tl_bfd.recovery_ms:.0f}ms (paper ~110ms); "
             f"detect={tl_bfd.detected_at_ms - tl_bfd.failure_at_ms:.0f}ms",
+            metrics={"recovery_ms": tl_bfd.recovery_ms},
         )
     )
 
@@ -112,6 +184,7 @@ def run() -> List[BenchRow]:
             name="fig13_bgp_recovery",
             us_per_call=us2,
             derived=f"recovery={tl_bgp.recovery_ms / 1e3:.1f}s (paper ~180s)",
+            metrics={"recovery_seconds": tl_bgp.recovery_ms / 1e3},
         )
     )
 
@@ -164,10 +237,10 @@ def run() -> List[BenchRow]:
     route_flows_batched(fab_inc, storm_flows)
     route_flows_batched(fab_full, storm_flows)
 
-    inc_s, patched, rebuilt = _run_storm(
+    inc_s, patched, rebuilt, blast_dsts = _run_storm(
         fab_inc, events, leaves, full_invalidation=False
     )
-    full_s, _, _ = _run_storm(fab_full, events, leaves, full_invalidation=True)
+    full_s, _, _, _ = _run_storm(fab_full, events, leaves, full_invalidation=True)
     speedup = full_s / inc_s
 
     # byte-identical routing across the storm: both survivors must match a
@@ -190,7 +263,9 @@ def run() -> List[BenchRow]:
             us_per_call=inc_s * 1e6 / len(events),
             derived=(
                 f"{len(events)} BFD flaps, {len(storm_flows)} live flows | "
-                f"{patched} tables patched in place, {rebuilt} rebuilt"
+                f"{patched} tables patched in place, {rebuilt} rebuilt, "
+                f"blast radius {blast_dsts}/{len(leaves)} egress leaves "
+                f"(RerouteStats.affected_dsts)"
             ),
         )
     )
@@ -218,6 +293,47 @@ def run() -> List[BenchRow]:
             f"{MIN_STORM_SPEEDUP:.0f}x target"
         )
 
+    # -- incremental EVPN resync storm (ISSUE 4 control-plane tentpole) ------
+    fab_einc = Fabric(SCALED8)
+    fab_efull = Fabric(SCALED8)
+    evpn_inc = _learned_control_plane(fab_einc)
+    evpn_full = _learned_control_plane(fab_efull)
+    evpn_events = _evpn_storm_events(fab_einc)
+    inc_evpn_s, fracs, touched_total = _run_evpn_storm(
+        fab_einc, evpn_inc, evpn_events, full_resync=False
+    )
+    full_evpn_s, _, _ = _run_evpn_storm(
+        fab_efull, evpn_full, evpn_events, full_resync=True
+    )
+    if _evpn_state(evpn_inc) != _evpn_state(evpn_full):
+        raise AssertionError(
+            "incremental EVPN resync diverged from full resync session state"
+        )
+    mean_frac = sum(fracs) / len(fracs)
+    evpn_speedup = full_evpn_s / inc_evpn_s if inc_evpn_s > 0 else float("inf")
+    rows.append(
+        BenchRow(
+            name="evpn_resync_incremental_storm",
+            us_per_call=inc_evpn_s * 1e6 / len(evpn_events),
+            derived=(
+                f"{len(evpn_events)} flaps (incl. d5l1 isolation), "
+                f"{len(fab_einc.leaves)} VTEPs | mean touched "
+                f"{100 * mean_frac:.1f}% of VTEPs (gate <"
+                f"{100 * MAX_EVPN_TOUCHED_FRAC:.0f}%), max "
+                f"{100 * max(fracs):.0f}%, {touched_total} speaker RIB edits | "
+                f"incremental {inc_evpn_s * 1e3:.1f}ms vs full resync "
+                f"{full_evpn_s * 1e3:.1f}ms = {evpn_speedup:.1f}x; "
+                f"session state byte-identical"
+            ),
+            metrics={"evpn_mean_touched_frac": mean_frac},
+        )
+    )
+    if mean_frac >= MAX_EVPN_TOUCHED_FRAC:
+        raise AssertionError(
+            f"EVPN incremental resync touched {100 * mean_frac:.1f}% of VTEPs "
+            f"on average, gate is <{100 * MAX_EVPN_TOUCHED_FRAC:.0f}%"
+        )
+
     # -- flow-level congestion model: effective spine-WAN throughput (§5.5) --
     cfab = Fabric()
     model = WanTimingModel(Netem(cfab))
@@ -234,6 +350,10 @@ def run() -> List[BenchRow]:
                 f"{report.seconds:.2f}s vs ideal "
                 f"{model.transfer_time(dict(cfab.link_bytes)).seconds:.2f}s"
             ),
+            metrics={
+                "effective_wan_mbps": eff * 1e3,
+                "completion_seconds": report.seconds,
+            },
         )
     )
     if not 0.72 <= eff <= 0.8 * (1 + 1e-6):

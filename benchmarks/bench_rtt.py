@@ -6,7 +6,6 @@ d1h1 and d2h1 with visible jitter.
 
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core.fabric import Fabric
 from repro.core.wan import Netem, ping_rtt

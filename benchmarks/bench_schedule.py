@@ -76,6 +76,10 @@ def _overlap_gate(rows: List[BenchRow]) -> None:
                 f"saved={(serial.wan_seconds - overlap.wan_seconds) * 1e3:.1f}ms "
                 f"(max<overlap<serial gate)"
             ),
+            metrics={
+                "overlap_seconds": overlap.wan_seconds,
+                "serial_seconds": serial.wan_seconds,
+            },
         )
     )
     rows.append(
@@ -138,6 +142,10 @@ def _moe_rows(rows: List[BenchRow]) -> None:
                 f"({hier.wan_bytes / 1e6:.0f}MB vs {flat.wan_bytes / 1e6:.0f}MB), "
                 f"{wan_flows}"
             ),
+            metrics={
+                "hier_alltoall_seconds": hier.wan_seconds,
+                "flat_alltoall_seconds": flat.wan_seconds,
+            },
         )
     )
 

@@ -17,6 +17,12 @@ framework itself:
 Paper observations to match: AllReduce ~5-11 s/batch, PS ~9-18 s/batch,
 PS slower with higher variance; gradient volumes ~312 MB (AR) vs ~459 MB
 (PS).
+
+Beyond the paper (ROADMAP item, ISSUE 4): a schedule-aware sweep over
+``with_compute_overlap`` fractions (0, 0.25, 0.5, 0.75) through the
+event-driven congestion simulator, gated on step time decreasing
+monotonically with the overlap fraction — communication hidden behind
+backprop must never make a step slower.
 """
 
 from __future__ import annotations
@@ -28,7 +34,7 @@ import numpy as np
 
 from repro.core.geo import GeoFabric
 
-from .common import BenchRow, timed
+from .common import BenchRow
 
 #: DistilGPT2 fp32 gradient volume (paper: ~312 MB with DDP).
 AR_GRAD_BYTES = 312_000_000
@@ -108,6 +114,7 @@ def run() -> List[BenchRow]:
                     f"{contended.bottleneck_bytes / 1e6:.0f}MB "
                     f"util={contended.bottleneck_utilization:.2f}"
                 ),
+                metrics={"contended_sync_seconds": contended.wan_seconds},
             )
         )
         times = []
@@ -149,6 +156,62 @@ def run() -> List[BenchRow]:
                 f"AR/PS mean ratio={ar.mean() / ps.mean():.2f} "
                 f"(paper ~0.55); PS bottleneck=server leaf links"
             ),
+            metrics={
+                "ar_mean_batch_seconds": float(ar.mean()),
+                "ps_mean_batch_seconds": float(ps.mean()),
+            },
         )
     )
+    rows.extend(_overlap_sweep_rows(geo))
     return rows
+
+
+#: ROADMAP's sweep over with_compute_overlap fractions.
+OVERLAP_FRACTIONS = (0.0, 0.25, 0.5, 0.75)
+
+
+def _overlap_sweep_rows(geo: GeoFabric) -> List[BenchRow]:
+    """Step time vs overlap fraction through the event-driven simulator.
+
+    The schedule is the flat AllReduce grafted with the calibrated compute
+    phase (``with_compute_overlap`` DAG structure, not the old scalar
+    discount); the gate demands monotonically non-increasing step times —
+    exposing more of the sync behind backprop can only help — and a strict
+    end-to-end win since this workload's comm exceeds compute at every
+    fraction.
+    """
+    steps = {
+        frac: geo.step_time(
+            "allreduce",
+            AR_GRAD_BYTES,
+            CALIBRATED_COMPUTE_S,
+            overlap_fraction=frac,
+            jitter=False,
+            congestion=True,
+        )
+        for frac in OVERLAP_FRACTIONS
+    }
+    for lo, hi in zip(OVERLAP_FRACTIONS, OVERLAP_FRACTIONS[1:]):
+        if steps[hi] > steps[lo] + 1e-9:
+            raise AssertionError(
+                f"step time must not grow with overlap: f={lo} -> "
+                f"{steps[lo]:.3f}s but f={hi} -> {steps[hi]:.3f}s"
+            )
+    if not steps[OVERLAP_FRACTIONS[-1]] < steps[0]:
+        raise AssertionError(
+            "comm exceeds compute here, so 75% overlap must strictly beat 0%"
+        )
+    return [
+        BenchRow(
+            name="fig14_overlap_sweep",
+            us_per_call=float(steps[OVERLAP_FRACTIONS[-1]] * 1e6),
+            derived=" ".join(
+                f"f={frac}:{steps[frac]:.2f}s" for frac in OVERLAP_FRACTIONS
+            )
+            + " (monotone non-increasing gate)",
+            metrics={
+                f"step_f{int(frac * 100):02d}_seconds": steps[frac]
+                for frac in OVERLAP_FRACTIONS
+            },
+        )
+    ]

@@ -1,10 +1,19 @@
-"""Shared benchmark plumbing: timing + the run.py CSV contract."""
+"""Shared benchmark plumbing: timing + the run.py CSV contract.
+
+``BenchRow.metrics`` carries the *gated* quantities a suite wants the CI
+regression gate (``benchmarks/compare.py``) to track against the committed
+``benchmarks/baselines/BENCH_*.json`` snapshots.  Only put
+machine-independent, seeded model outputs there (seconds of modeled WAN
+time, load factors, Mbit/s observables, VTEPs-touched fractions) — never
+wall-clock timings like ``us_per_call``, which vary across runners and are
+excluded from gating by design.
+"""
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, Dict
 
 
 @dataclasses.dataclass
@@ -12,6 +21,10 @@ class BenchRow:
     name: str
     us_per_call: float
     derived: str
+    #: deterministic metrics gated by benchmarks/compare.py (see module doc);
+    #: direction (higher/lower is better) is inferred from the metric name —
+    #: see ``benchmarks.compare.metric_direction``.
+    metrics: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     def csv(self) -> str:
         return f"{self.name},{self.us_per_call:.1f},{self.derived}"

@@ -1,0 +1,238 @@
+"""Bench-baseline regression gate for CI (``python -m benchmarks.compare``).
+
+Compares the ``BENCH_<suite>.json`` files produced by
+``python -m benchmarks.run --json-dir <new>`` against the committed
+snapshots in ``benchmarks/baselines/`` and **fails (exit 1) when any gated
+metric regresses more than ``--threshold`` (default 20%)** — the CI
+tripwire that keeps model-quality observables (modeled WAN seconds, load
+factors, effective-throughput Mbit/s, EVPN resync blast radius) from
+silently drifting as the simulator evolves.
+
+What is gated: only the ``metrics`` dict of each ``BenchRow`` (see
+``benchmarks/common.py``).  Wall-clock fields (``us_per_call``) are never
+gated — they measure the runner, not the model.  Direction is inferred
+from the metric name by :func:`metric_direction`:
+
+* ``*_gbps``, ``*_mbps``, ``*_speedup``, ``*_improvement_pct`` — higher is
+  better (a >threshold drop regresses);
+* ``*_s``, ``*_ms``, ``*_seconds``, ``*_factor``, ``*_frac``, ``*_bytes``
+  — lower is better (a >threshold rise regresses);
+* anything else — treated as a pinned reproducibility observable: a
+  >threshold move in *either* direction regresses.
+
+A suite present in the baseline but missing (or errored) in the new run
+fails, and so does any individual baseline (row, metric) pair the new run
+no longer reports — renaming a row or dropping a gated metric cannot
+silently disable its gate.  New suites/rows/metrics with no baseline pass
+silently — commit a refreshed baseline to start gating them.
+
+A markdown delta table goes to stdout and, with ``--summary FILE``
+(pointed at ``$GITHUB_STEP_SUMMARY`` in CI), to the job summary.
+
+Refreshing baselines after an intentional model change::
+
+    PYTHONPATH=src python -m benchmarks.run --json-dir benchmarks/baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import pathlib
+import sys
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+HIGHER_IS_BETTER_SUFFIXES = ("_gbps", "_mbps", "_speedup", "_improvement_pct")
+LOWER_IS_BETTER_SUFFIXES = ("_s", "_ms", "_seconds", "_factor", "_frac", "_bytes")
+
+
+def metric_direction(name: str) -> str:
+    """``"higher"`` | ``"lower"`` | ``"pinned"`` — which way is *better*."""
+    if name.endswith(HIGHER_IS_BETTER_SUFFIXES):
+        return "higher"
+    if name.endswith(LOWER_IS_BETTER_SUFFIXES):
+        return "lower"
+    return "pinned"
+
+
+@dataclass(frozen=True)
+class Delta:
+    """One (suite, row, metric) comparison against its baseline."""
+
+    suite: str
+    row: str
+    metric: str
+    baseline: float
+    new: float
+    direction: str
+
+    @property
+    def change_frac(self) -> float:
+        """Signed relative change vs baseline (+0.25 = 25% higher)."""
+        if self.baseline == 0.0:
+            return 0.0 if self.new == 0.0 else math.inf
+        return (self.new - self.baseline) / abs(self.baseline)
+
+    def regressed(self, threshold: float) -> bool:
+        c = self.change_frac
+        if self.direction == "higher":
+            return c < -threshold
+        if self.direction == "lower":
+            return c > threshold
+        return abs(c) > threshold
+
+
+def _load_suite(path: pathlib.Path) -> dict:
+    return json.loads(path.read_text())
+
+
+def _row_metrics(payload: dict) -> Dict[Tuple[str, str], float]:
+    out: Dict[Tuple[str, str], float] = {}
+    for row in payload.get("rows", ()):
+        for metric, value in (row.get("metrics") or {}).items():
+            out[(row["name"], metric)] = float(value)
+    return out
+
+
+def iter_deltas(
+    baseline_dir: pathlib.Path, new_dir: pathlib.Path
+) -> Iterator[Tuple[str, Optional[str], List[Delta], List[Tuple[str, str]]]]:
+    """Yield ``(suite, error, deltas, missing)`` per baseline suite.
+
+    ``error`` is non-None when the new run is missing or errored, and
+    ``missing`` lists baseline (row, metric) pairs the new run no longer
+    reports — both are automatic regressions regardless of metric values
+    (dropping a gated metric must not silently disable its gate).
+    """
+    for base_path in sorted(baseline_dir.glob("BENCH_*.json")):
+        suite = base_path.stem[len("BENCH_") :]
+        base = _load_suite(base_path)
+        new_path = new_dir / base_path.name
+        if not new_path.exists():
+            yield suite, f"suite missing from {new_dir}", [], []
+            continue
+        new = _load_suite(new_path)
+        if "error" in new:
+            yield suite, f"suite errored: {new['error']}", [], []
+            continue
+        base_metrics = _row_metrics(base)
+        new_metrics = _row_metrics(new)
+        deltas = [
+            Delta(
+                suite=suite,
+                row=row,
+                metric=metric,
+                baseline=value,
+                new=new_metrics[(row, metric)],
+                direction=metric_direction(metric),
+            )
+            for (row, metric), value in sorted(base_metrics.items())
+            if (row, metric) in new_metrics
+        ]
+        missing = sorted(set(base_metrics) - set(new_metrics))
+        yield suite, None, deltas, missing
+
+
+def render_table(
+    results: List[Tuple[str, Optional[str], List[Delta], List[Tuple[str, str]]]],
+    threshold: float,
+) -> str:
+    lines = [
+        "## Bench baseline comparison",
+        "",
+        f"Gate: any gated metric regressing > {threshold:.0%} vs "
+        "`benchmarks/baselines/` fails.",
+        "",
+        "| suite | row | metric | baseline | new | change | gate |",
+        "|---|---|---|---|---|---|---|",
+    ]
+    for suite, error, deltas, missing in results:
+        if error is not None:
+            lines.append(f"| {suite} | — | — | — | — | — | FAIL ({error}) |")
+            continue
+        for d in deltas:
+            bad = d.regressed(threshold)
+            arrow = {"higher": "↑ better", "lower": "↓ better", "pinned": "pinned"}
+            lines.append(
+                f"| {d.suite} | {d.row} | {d.metric} ({arrow[d.direction]}) "
+                f"| {d.baseline:.6g} | {d.new:.6g} "
+                f"| {d.change_frac:+.1%} | {'**FAIL**' if bad else 'ok'} |"
+            )
+        for row, metric in missing:
+            lines.append(
+                f"| {suite} | {row} | {metric} | — | *missing* | — "
+                f"| **FAIL** (gated metric dropped) |"
+            )
+    return "\n".join(lines) + "\n"
+
+
+def compare(
+    baseline_dir: pathlib.Path,
+    new_dir: pathlib.Path,
+    threshold: float = 0.20,
+) -> Tuple[str, List[str]]:
+    """Returns (markdown table, list of regression descriptions)."""
+    results = list(iter_deltas(baseline_dir, new_dir))
+    regressions: List[str] = []
+    for suite, error, deltas, missing in results:
+        if error is not None:
+            regressions.append(f"{suite}: {error}")
+        for d in deltas:
+            if d.regressed(threshold):
+                regressions.append(
+                    f"{suite}/{d.row}/{d.metric}: {d.baseline:.6g} -> "
+                    f"{d.new:.6g} ({d.change_frac:+.1%}, {d.direction} is better)"
+                )
+        for row, metric in missing:
+            regressions.append(
+                f"{suite}/{row}/{metric}: gated metric missing from the new "
+                "run (renamed row or dropped metric disables its gate)"
+            )
+    return render_table(results, threshold), regressions
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.split("\n\n")[0])
+    ap.add_argument(
+        "--baseline",
+        default="benchmarks/baselines",
+        help="directory of committed BENCH_*.json snapshots",
+    )
+    ap.add_argument(
+        "--new", dest="new_dir", required=True,
+        help="directory of freshly produced BENCH_*.json files",
+    )
+    ap.add_argument(
+        "--threshold", type=float, default=0.20,
+        help="relative regression tolerance (default 0.20 = 20%%)",
+    )
+    ap.add_argument(
+        "--summary", default=None,
+        help="append the markdown delta table to this file "
+        "(point at $GITHUB_STEP_SUMMARY in CI)",
+    )
+    args = ap.parse_args(argv)
+    table, regressions = compare(
+        pathlib.Path(args.baseline), pathlib.Path(args.new_dir), args.threshold
+    )
+    print(table)
+    if args.summary:
+        with open(args.summary, "a") as fh:
+            fh.write(table + "\n")
+    if regressions:
+        print(
+            f"{len(regressions)} gated metric(s) regressed beyond "
+            f"{args.threshold:.0%}:",
+            file=sys.stderr,
+        )
+        for r in regressions:
+            print(f"  - {r}", file=sys.stderr)
+        return 1
+    print("All gated metrics within tolerance.")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -15,7 +15,6 @@ from repro.core.fabric import Fabric
 from repro.core.flows import Flow, route_flows_batched
 from repro.core.metrics import load_factor
 from repro.core.ports import (
-    ALIASING_STRIDE,
     make_correlated_queue_pairs,
     make_queue_pairs,
     qp_aware_ports,

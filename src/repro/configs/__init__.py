@@ -9,7 +9,7 @@ over ``init_params`` — exact, allocation-free).
 from __future__ import annotations
 
 import importlib
-from typing import Callable, Dict, List, Tuple
+from typing import Dict, Tuple
 
 from repro.models.config import ModelConfig
 

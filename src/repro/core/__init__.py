@@ -30,12 +30,14 @@ from .congestion import (
     ScheduleReport,
     build_link_load_matrix,
     congestion_report,
+    ecmp_flow_weights,
     max_min_rates,
     route_and_analyze,
     simulate_schedule,
 )
-from .evpn import EvpnControlPlane, RouteType2, RouteType3
+from .evpn import EvpnControlPlane, EvpnResyncStats, RouteType2, RouteType3
 from .fabric import (
+    ECMP_HASH_BUCKETS,
     Fabric,
     FabricConfig,
     FiveTuple,
@@ -102,7 +104,9 @@ __all__ = [
     "BgpHoldTimer",
     "CollectiveSchedule",
     "CongestionReport",
+    "ECMP_HASH_BUCKETS",
     "EvpnControlPlane",
+    "EvpnResyncStats",
     "Fabric",
     "FabricConfig",
     "FailureDetector",
@@ -142,6 +146,7 @@ __all__ = [
     "collision_reduction",
     "compare_schemes",
     "congestion_report",
+    "ecmp_flow_weights",
     "ecmp_hash",
     "expected_collisions",
     "flow_entropy",

@@ -22,9 +22,9 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import List, Optional, Tuple
 
-from .evpn import EvpnControlPlane
+from .evpn import EvpnControlPlane, EvpnResyncStats
 from .fabric import Fabric, RerouteStats
 
 
@@ -104,6 +104,9 @@ class RecoveryTimeline:
     #: what the FIB reprogram actually did: incremental re-convergence
     #: stats from the fabric (None for timelines built before any reroute).
     reroute: Optional[RerouteStats] = None
+    #: what the control plane did alongside: incremental EVPN resync stats
+    #: (None when no EVPN control plane is attached).
+    evpn_resync: Optional[EvpnResyncStats] = None
 
     @property
     def recovery_ms(self) -> float:
@@ -170,8 +173,20 @@ class FailureDetector:
                 f"{stats.rebuilt} rebuilt, {stats.retained} untouched)",
             )
         )
+        evpn_stats: Optional[EvpnResyncStats] = None
         if self.evpn is not None:
-            self.evpn.resync()
+            # control plane re-converges as surgically as the FIB: only
+            # VTEPs whose route reachability crossed the failed link.
+            evpn_stats = self.evpn.resync_incremental(stats)
+            events.append(
+                (
+                    t,
+                    "EVPN resynced incrementally "
+                    f"({evpn_stats.patched} RIBs patched, "
+                    f"{evpn_stats.rebuilt} VTEP tables rebuilt, "
+                    f"{evpn_stats.retained} speakers untouched)",
+                )
+            )
         return RecoveryTimeline(
             failure_at_ms=failure_at_ms,
             detected_at_ms=detected,
@@ -179,10 +194,11 @@ class FailureDetector:
             mechanism=mechanism,
             events=events,
             reroute=stats,
+            evpn_resync=evpn_stats,
         )
 
     def restore(self, link: Tuple[str, str]) -> RerouteStats:
         stats = self.fabric.restore_link(*link)
         if self.evpn is not None:
-            self.evpn.resync()
+            self.evpn.resync_incremental(stats)
         return stats

@@ -17,18 +17,12 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 from functools import lru_cache
-from typing import Callable, Dict, List, Sequence, Tuple
+from typing import Dict, Sequence
 
 import numpy as np
 
 from .fabric import FiveTuple, ecmp_hash
-from .ports import (
-    NUM_PORT_OFFSETS,
-    ROCE_V2_BASE_PORT,
-    QueuePair,
-    allocate_ports,
-    make_queue_pairs,
-)
+from .ports import NUM_PORT_OFFSETS, ROCE_V2_BASE_PORT, allocate_ports, make_queue_pairs
 
 
 @lru_cache(maxsize=32)

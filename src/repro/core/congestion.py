@@ -18,7 +18,21 @@ together.  This module refines that into a *flow-level* model:
   round all unfrozen flows rise together until the tightest link saturates,
   freezing its flows at the current level; each round is pure NumPy
   (``bincount`` / boolean masks) over the membership arrays, so 10k+ flows
-  allocate in a handful of array ops per bottleneck level;
+  allocate in a handful of array ops per bottleneck level.  With a
+  ``weights`` vector the filling is *weighted*: flow ``f`` rises at
+  ``weights[f]`` times the common level, so its share of any saturated
+  link is proportional to its weight (uniform weights reproduce the
+  unweighted allocator byte-for-byte);
+* :func:`ecmp_flow_weights` — ECMP-awareness for the weighted allocator
+  (paper §4, §5.5): :meth:`repro.core.fabric.Fabric.route_flows_with_paths`
+  records each traversal's hash-slot occupancy (how many flows of the
+  batch hashed into the same :data:`repro.core.fabric.ECMP_HASH_BUCKETS`
+  bucket of the same member link); flows sharing a slot are one scheduling
+  entity to the switch pipeline, so a flow colliding with ``k - 1`` others
+  at its worst hop carries weight ``1 / k`` — the hash-skew contention the
+  paper's queue-pair-aware port allocation exists to avoid, now expressed
+  as allocation weights instead of being invisible to the fair-share
+  model;
 * :func:`congestion_report` — per-flow completion time
   (``bytes / fair rate`` + propagation along the recorded path, the Corning
   fiber-latency argument of arXiv:2605.19169) and per-link throughput /
@@ -43,7 +57,7 @@ per-collective timings reflect contention rather than ideal bisection.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -61,6 +75,11 @@ class LinkLoadMatrix:
     (an index into ``links``).  ``delay_ms`` is the one-way propagation of
     a single traversal — two netem qdisc passes, as in
     :meth:`repro.core.wan.Netem.one_way_delay_ms` (jitter-free).
+
+    ``slot_occ`` (row-aligned) carries the recorded ECMP hash-slot
+    occupancy of each traversal when the paths were recorded by the
+    batched router (ones when unavailable) — see
+    :class:`repro.core.fabric.FlowPaths`.
     """
 
     mem_flow: np.ndarray  # (R,) int64
@@ -71,6 +90,16 @@ class LinkLoadMatrix:
     is_wan: np.ndarray  # (L,) bool
     num_flows: int
     hops_per_flow: np.ndarray  # (F,) int64 links traversed per flow
+    slot_occ: Optional[np.ndarray] = None  # (R,) int64 hash-slot occupancy
+
+    @property
+    def max_slot_occ(self) -> np.ndarray:
+        """Per-link worst hash-slot occupancy — the observed ECMP hash
+        imbalance (1 everywhere when no collision was recorded)."""
+        out = np.ones(len(self.links), dtype=np.int64)
+        if self.slot_occ is not None and self.mem_link.size:
+            np.maximum.at(out, self.mem_link, self.slot_occ)
+        return out
 
 
 def build_link_load_matrix(
@@ -108,10 +137,39 @@ def build_link_load_matrix(
         is_wan=is_wan,
         num_flows=nflows,
         hops_per_flow=hops.astype(np.int64),
+        slot_occ=paths.slot_occ,
     )
 
 
-def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
+def ecmp_flow_weights(paths) -> np.ndarray:
+    """Per-flow allocation weights from observed ECMP hash imbalance.
+
+    ``paths`` is a :class:`repro.core.fabric.FlowPaths` (or a
+    :class:`LinkLoadMatrix` built from one).  A flow whose worst traversal
+    shares its hash slot with ``k - 1`` other flows weighs ``1 / k``:
+    same-slot flows are one entity to the switch's hash pipeline, so they
+    split one slot's service among themselves wherever bandwidth gets
+    scarce.  Flows that never collide weigh 1.0, and a batch with no
+    collisions yields the uniform vector — whose weighted allocation is
+    byte-identical to the unweighted one.
+    """
+    if isinstance(paths, LinkLoadMatrix):
+        nflows, occ, mem_flow = paths.num_flows, paths.slot_occ, paths.mem_flow
+    else:
+        nflows = paths.num_flows
+        occ = paths.slot_occ
+        mem_flow = np.repeat(
+            np.arange(nflows, dtype=np.int64), np.diff(paths.ptr)
+        )
+    worst = np.ones(nflows)
+    if occ is not None and mem_flow.size:
+        np.maximum.at(worst, mem_flow, occ.astype(np.float64))
+    return 1.0 / worst
+
+
+def max_min_rates(
+    matrix: LinkLoadMatrix, weights: Optional[np.ndarray] = None
+) -> np.ndarray:
     """Max-min fair per-flow rates (Gbit/s) by vectorized water-filling.
 
     Progressive filling: all unfrozen flows increase at the same rate; the
@@ -119,6 +177,13 @@ def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
     first and freezes its flows at the current level.  Terminates in at
     most ``len(links)`` rounds (>=1 link saturates per round); each round
     is O(active memberships) in NumPy with frozen rows compacted away.
+
+    With ``weights`` (one positive weight per flow, e.g.
+    :func:`ecmp_flow_weights`) the filling is weighted: flow ``f`` rises
+    at ``weights[f] * level`` and a saturated link's capacity splits
+    proportionally to the weights of the flows crossing it.  ``None`` (and
+    the all-ones vector, byte-for-byte) is the classic unweighted
+    allocation.
     """
     return _max_min_rates_arrays(
         matrix.mem_flow,
@@ -126,7 +191,19 @@ def max_min_rates(matrix: LinkLoadMatrix) -> np.ndarray:
         matrix.capacity_gbps,
         matrix.num_flows,
         len(matrix.links),
+        weights,
     )
+
+
+def _check_weights(weights: Optional[np.ndarray], nflows: int) -> None:
+    if weights is None:
+        return
+    if weights.shape != (nflows,):
+        raise ValueError(
+            f"weights shape {weights.shape} != ({nflows},) flows"
+        )
+    if not np.all(weights > 0):
+        raise ValueError("allocation weights must be strictly positive")
 
 
 def _max_min_rates_arrays(
@@ -135,22 +212,28 @@ def _max_min_rates_arrays(
     capacity_gbps: np.ndarray,
     nflows: int,
     nlinks: int,
+    weights: Optional[np.ndarray] = None,
 ) -> np.ndarray:
     """:func:`max_min_rates` over raw membership arrays.
 
     ``mem_f``/``mem_l`` may be any subset of a matrix's rows (the
     event-driven simulator passes only the rows of currently-active
-    flows); flows with no rows get rate 0.
+    flows); flows with no rows get rate 0.  ``weights`` is always indexed
+    by global flow id, so a rows subset composes with it unchanged.
     """
     rate = np.zeros(nflows)
     if nflows == 0 or mem_f.size == 0:
         return rate
+    _check_weights(weights, nflows)
     resid = capacity_gbps.astype(np.float64).copy()
     level = 0.0
     for _ in range(nlinks + 1):
         if mem_f.size == 0:
             break
-        n_l = np.bincount(mem_l, minlength=nlinks)
+        if weights is None:
+            n_l = np.bincount(mem_l, minlength=nlinks)
+        else:
+            n_l = np.bincount(mem_l, weights=weights[mem_f], minlength=nlinks)
         has = n_l > 0
         share = np.full(nlinks, np.inf)
         share[has] = np.maximum(resid[has], 0.0) / n_l[has]
@@ -161,11 +244,12 @@ def _max_min_rates_arrays(
         resid -= step * n_l
         saturated = has & (share <= step * (1.0 + _SATURATION_RTOL))
         newly = np.unique(mem_f[saturated[mem_l]])
-        rate[newly] = level
+        rate[newly] = level if weights is None else level * weights[newly]
         keep = ~np.isin(mem_f, newly)
         mem_f, mem_l = mem_f[keep], mem_l[keep]
     if mem_f.size:  # numerical stragglers: freeze at the final level
-        rate[np.unique(mem_f)] = level
+        last = np.unique(mem_f)
+        rate[last] = level if weights is None else level * weights[last]
     return rate
 
 
@@ -183,7 +267,12 @@ def _propagation_ms(matrix: LinkLoadMatrix) -> np.ndarray:
 
 @dataclass(frozen=True)
 class CongestionReport:
-    """Per-flow rates/completions and per-link throughput under contention."""
+    """Per-flow rates/completions and per-link throughput under contention.
+
+    ``weights`` records the allocation weights the rates were solved under
+    (``None`` = unweighted); ``max_slot_occ`` the per-link worst observed
+    ECMP hash-slot occupancy (``None`` when paths carried no occupancy).
+    """
 
     rates_gbps: np.ndarray  # (F,) max-min fair allocation
     completion_s: np.ndarray  # (F,) transfer + propagation
@@ -192,6 +281,8 @@ class CongestionReport:
     capacity_gbps: np.ndarray  # (L,)
     throughput_gbps: np.ndarray  # (L,) sum of allocated rates on the link
     is_wan: np.ndarray  # (L,) bool
+    weights: Optional[np.ndarray] = None  # (F,) allocation weights
+    max_slot_occ: Optional[np.ndarray] = None  # (L,) worst hash-slot occupancy
 
     @property
     def seconds(self) -> float:
@@ -222,7 +313,9 @@ class CongestionReport:
 
 
 def congestion_report(
-    matrix: LinkLoadMatrix, nbytes: Sequence[int]
+    matrix: LinkLoadMatrix,
+    nbytes: Sequence[int],
+    weights: Optional[np.ndarray] = None,
 ) -> CongestionReport:
     """Allocate rates and estimate per-flow completion + propagation.
 
@@ -230,13 +323,30 @@ def congestion_report(
     propagation sums the recorded path's per-link netem delays (two qdisc
     passes each) plus per-transit-switch forwarding latency — the same
     terms :func:`repro.core.wan.ping_rtt` samples, minus jitter.
+
+    Zero-byte flows do not occupy capacity: they complete after their
+    propagation alone and are excluded from the water-filling, exactly as
+    the event-driven simulator drains them for free — the two allocators
+    share one convention (a zero-byte chunk is an artifact of exact
+    ``split_bytes`` chunking, not a bandwidth consumer).
+
+    ``weights`` (e.g. :func:`ecmp_flow_weights`) selects the weighted
+    allocation; ``None`` is the classic unweighted model.
     """
     nb = np.asarray(list(nbytes), dtype=np.float64)
     if nb.size != matrix.num_flows:
         raise ValueError(
             f"{nb.size} byte counts for {matrix.num_flows} recorded paths"
         )
-    rate = max_min_rates(matrix)
+    live = nb[matrix.mem_flow] > 0
+    rate = _max_min_rates_arrays(
+        matrix.mem_flow[live],
+        matrix.mem_link[live],
+        matrix.capacity_gbps,
+        matrix.num_flows,
+        len(matrix.links),
+        weights,
+    )
     prop = _propagation_ms(matrix)
     with np.errstate(divide="ignore", invalid="ignore"):
         transfer = np.where(nb > 0, nb * 8.0 / (rate * 1e9), 0.0)
@@ -251,6 +361,10 @@ def congestion_report(
         capacity_gbps=matrix.capacity_gbps,
         throughput_gbps=throughput,
         is_wan=matrix.is_wan,
+        weights=weights,
+        max_slot_occ=(
+            matrix.max_slot_occ if matrix.slot_occ is not None else None
+        ),
     )
 
 
@@ -261,12 +375,17 @@ def route_and_analyze(
     *,
     check_reachability=None,
     reset_counters: bool = True,
+    ecmp_weighted: bool = False,
 ) -> Tuple[Dict[Link, int], CongestionReport]:
     """Route ``flows`` with path recording and run the congestion model.
 
     Returns the batch's link byte counters (same contract as
     :func:`repro.core.flows.route_flows_batched`, including the optional
     counter reset) alongside the :class:`CongestionReport`.
+
+    ``ecmp_weighted=True`` derives :func:`ecmp_flow_weights` from the
+    recorded hash-slot occupancy and solves the weighted allocation;
+    the default keeps the classic unweighted model.
     """
     flows = list(flows)  # consumed twice: routing, then per-flow byte counts
     if reset_counters:
@@ -275,7 +394,8 @@ def route_and_analyze(
         flows, check_reachability=check_reachability
     )
     matrix = build_link_load_matrix(fabric, netem, paths)
-    report = congestion_report(matrix, [f.nbytes for f in flows])
+    weights = ecmp_flow_weights(matrix) if ecmp_weighted else None
+    report = congestion_report(matrix, [f.nbytes for f in flows], weights)
     return link_bytes, report
 
 
@@ -332,6 +452,8 @@ class ScheduleReport:
     link_total_bytes: np.ndarray  # (L,) bytes carried over the whole schedule
     peak_throughput_gbps: np.ndarray  # (L,) max concurrent allocation
     is_wan: np.ndarray  # (L,) bool
+    weights: Optional[np.ndarray] = None  # (F,) allocation weights
+    max_slot_occ: Optional[np.ndarray] = None  # (L,) worst hash-slot occupancy
 
     @property
     def seconds(self) -> float:
@@ -411,6 +533,7 @@ def simulate_schedule(
     *,
     check_reachability=None,
     reset_counters: bool = True,
+    ecmp_weighted: bool = False,
 ) -> ScheduleReport:
     """Event-driven time-varying max-min simulation of a phased schedule.
 
@@ -435,6 +558,11 @@ def simulate_schedule(
     coincide, and the shortcut keeps the equivalence *exact* (bit-for-bit
     the ``wan_seconds`` the pre-schedule ``sync_cost`` returned) rather
     than within float tolerance of the event loop.
+
+    ``ecmp_weighted=True`` solves every allocation epoch as the *weighted*
+    max-min of :func:`ecmp_flow_weights` — hash-slot collisions recorded
+    while routing the whole schedule batch down-weight the colliding flows
+    in each epoch they are active.
     """
     phases = schedule.phases
     flows = schedule.all_flows()
@@ -449,6 +577,7 @@ def simulate_schedule(
         flows, check_reachability=check_reachability
     )
     matrix = build_link_load_matrix(fabric, netem, paths)
+    weights = ecmp_flow_weights(matrix) if ecmp_weighted else None
     nb = np.asarray([f.nbytes for f in flows], dtype=np.float64)
     nlinks = len(matrix.links)
     link_total = np.bincount(
@@ -456,7 +585,7 @@ def simulate_schedule(
     )
 
     if schedule.is_single_phase:
-        rep = congestion_report(matrix, nb)
+        rep = congestion_report(matrix, nb, weights)
         drain = rep.completion_s - rep.propagation_ms / 1e3
         timing = PhaseTiming(
             name=phases[0].name,
@@ -479,9 +608,11 @@ def simulate_schedule(
             link_total_bytes=link_total,
             peak_throughput_gbps=rep.throughput_gbps,
             is_wan=matrix.is_wan,
+            weights=weights,
+            max_slot_occ=rep.max_slot_occ,
         )
 
-    return _simulate_events(schedule, matrix, nb, slices, link_total)
+    return _simulate_events(schedule, matrix, nb, slices, link_total, weights)
 
 
 def _simulate_events(
@@ -490,6 +621,7 @@ def _simulate_events(
     nb: np.ndarray,
     slices: List[Tuple[int, int]],
     link_total: np.ndarray,
+    weights: Optional[np.ndarray] = None,
 ) -> ScheduleReport:
     import heapq
 
@@ -552,7 +684,8 @@ def _simulate_events(
         if stale and act_idx.size:
             rows = active[mem_f]
             rates = _max_min_rates_arrays(
-                mem_f[rows], mem_l[rows], matrix.capacity_gbps, nflows, nlinks
+                mem_f[rows], mem_l[rows], matrix.capacity_gbps, nflows, nlinks,
+                weights,
             )
             thr = np.bincount(
                 mem_l[rows], weights=rates[mem_f[rows]], minlength=nlinks
@@ -650,4 +783,8 @@ def _simulate_events(
         link_total_bytes=link_total,
         peak_throughput_gbps=peak_thr,
         is_wan=matrix.is_wan,
+        weights=weights,
+        max_slot_occ=(
+            matrix.max_slot_occ if matrix.slot_occ is not None else None
+        ),
     )

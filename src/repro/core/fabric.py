@@ -58,9 +58,9 @@ from __future__ import annotations
 
 import zlib
 from collections import defaultdict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from functools import lru_cache
-from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, FrozenSet, Iterable, List, Optional, Tuple
 
 import numpy as np
 
@@ -95,6 +95,15 @@ def ecmp_hash(tup: FiveTuple, seed: int, num_choices: int) -> int:
 # VXLAN outer UDP destination port (RFC 7348) and RoCEv2 destination port.
 VXLAN_DST_PORT = 4789
 ROCE_DST_PORT = 4791
+
+#: ECMP member-table bucket space per (switch, destination) group.  Commodity
+#: ASICs resolve the 5-tuple hash into a small per-group member table (tens to
+#: a few hundred buckets) before mapping buckets onto egress members; two
+#: flows whose hashes land in the same bucket are indistinguishable to the
+#: pipeline — they always pick the same member and share its scheduling slot.
+#: ``route_flows_with_paths`` records that slot occupancy per traversal, the
+#: observable the weighted congestion model derives allocation weights from.
+ECMP_HASH_BUCKETS = 64
 
 @lru_cache(maxsize=64)
 def _digit_gamma(tail: int) -> "np.ndarray":
@@ -176,6 +185,16 @@ class RerouteStats:
     ``rebuilt``  — cached destinations evicted for a full BFS rebuild;
     ``retained`` — cached destinations left untouched (unaffected by the
     flap, or affected but carrying no compiled table to edit).
+
+    ``affected_dsts`` names the destinations that were patched or evicted —
+    the data plane's blast radius, emitted so observability layers (the
+    failover benchmark's storm accounting, recovery-timeline reporting)
+    don't re-derive it from the dependency index.  The EVPN control plane
+    piggybacks on the *stats object itself*
+    (:meth:`repro.core.evpn.EvpnControlPlane.resync_incremental` consumes
+    ``link``/``action``): BGP flood reachability is a session-graph
+    property, so the control plane diffs session-graph components rather
+    than underlay routing destinations.
     """
 
     link: Tuple[str, str]
@@ -183,6 +202,7 @@ class RerouteStats:
     patched: int
     rebuilt: int
     retained: int
+    affected_dsts: Tuple[str, ...] = ()
 
     @property
     def touched(self) -> int:
@@ -198,12 +218,22 @@ class FlowPaths:
     order, as integer node ids decodable through ``nodes``.  This is the
     flow x link incidence the congestion model's max-min allocation
     consumes without any per-flow Python loop.
+
+    ``slot_occ`` (row-aligned with ``link_u``/``link_v``) is the ECMP
+    hash-slot occupancy of each traversal: how many flows of the batch
+    hashed into the same :data:`ECMP_HASH_BUCKETS` bucket of the same
+    member link at that decision point (1 for non-ECMP hops such as host
+    attachments or single-choice forwarding).  Values > 1 are observed
+    hash collisions — the imbalance the weighted congestion model
+    (:func:`repro.core.congestion.ecmp_flow_weights`) turns into per-flow
+    allocation weights.
     """
 
     link_u: "np.ndarray"  # (R,) int64 node ids
     link_v: "np.ndarray"  # (R,) int64 node ids
     ptr: "np.ndarray"  # (F + 1,) int64 CSR offsets
     nodes: Tuple[str, ...]  # node id -> name
+    slot_occ: Optional["np.ndarray"] = None  # (R,) int64 hash-slot occupancy
 
     @property
     def num_flows(self) -> int:
@@ -468,6 +498,7 @@ class Fabric:
         cached_before = len(self._dist_cache)
         affected = sorted(self._link_deps.get(key, ()))
         patched = rebuilt = 0
+        touched_dsts: List[str] = []
         for dst in affected:
             dist = self._dist_cache.get(dst)
             if dist is None:  # stale index entry; nothing cached to fix
@@ -486,11 +517,14 @@ class Fabric:
                     # no edit at all and stays in the retained count.
                     if self._patch_row(dst, far):
                         patched += 1
+                        touched_dsts.append(dst)
                     continue
             self._evict(dst)
             rebuilt += 1
+            touched_dsts.append(dst)
         stats = RerouteStats(
-            link, action, patched, rebuilt, cached_before - patched - rebuilt
+            link, action, patched, rebuilt, cached_before - patched - rebuilt,
+            affected_dsts=tuple(touched_dsts),
         )
         self.last_reroute = stats
         return stats
@@ -665,6 +699,12 @@ class Fabric:
         len_slot = np.searchsorted(uniq_lens, lens)
         dst_id = self._node_id[dst_leaf]
         active = np.nonzero(cur != dst_id)[0]
+        # per-hop ECMP fragments of this group: (flow_ids, seq, ci, pick,
+        # bucket, fan, live) — buckets feed the hash-slot occupancy computed
+        # once the whole group has walked (collisions span hops: two flows
+        # meeting at the same switch at different depths still share the
+        # bucket).
+        grec: List[Tuple] = []
         for _hop in range(self._hop_limit):
             if active.size == 0:
                 break
@@ -678,16 +718,44 @@ class Fabric:
             np.add.at(counters, (ci, pick), nb[active])
             touched[ci, pick] = True
             if rec is not None:
-                rec.append((flow_ids[active], _hop + 1, ci, pick))
+                bucket = (h % np.uint32(ECMP_HASH_BUCKETS)).astype(np.int64)
+                grec.append(
+                    (flow_ids[active], _hop + 1, ci, pick, bucket, fan,
+                     nb[active] > 0)
+                )
             cur[active] = pick
             active = active[pick != dst_id]
         else:
             raise RuntimeError("routing loop detected")
+        if rec is not None and grec:
+            # hash-slot occupancy over the whole group: flows sharing the
+            # same (switch, member link, bucket) occupy one scheduling slot.
+            # Zero-byte chunk flows transmit nothing, so they occupy no
+            # slot (same convention as the congestion allocators, which
+            # drain them for free); fan-1 forwarding involves no hash
+            # decision, so its occupancy stays 1 no matter how many flows
+            # cross the link.
+            n = len(self._node_order)
+            ug = np.concatenate([g[2] for g in grec])
+            vg = np.concatenate([g[3] for g in grec])
+            bg = np.concatenate([g[4] for g in grec])
+            fg = np.concatenate([g[5] for g in grec])
+            live = np.concatenate([g[6] for g in grec])
+            key = (ug * n + vg) * ECMP_HASH_BUCKETS + bg
+            _, inv = np.unique(key, return_inverse=True)
+            live_counts = np.bincount(inv, weights=live.astype(np.int64))
+            occ = np.where(fg > 1, np.maximum(live_counts[inv], 1), 1).astype(
+                np.int64
+            )
+            lo = 0
+            for ids, seq, ci, pick, _, _, _ in grec:
+                rec.append((ids, seq, ci, pick, occ[lo : lo + ids.size]))
+                lo += ids.size
         egress = np.full(dst_hosts.size, dst_id)
         np.add.at(counters, (egress, dst_hosts), nb)
         touched[egress, dst_hosts] = True
         if rec is not None:
-            rec.append((flow_ids, self._hop_limit + 2, egress, dst_hosts))
+            rec.append((flow_ids, self._hop_limit + 2, egress, dst_hosts, None))
 
     def route_flows_batched(
         self,
@@ -768,7 +836,7 @@ class Fabric:
         if not pidx_l:
             paths = (
                 FlowPaths(empty, empty, np.zeros(1, dtype=np.int64),
-                          tuple(self._node_order))
+                          tuple(self._node_order), empty)
                 if collect_paths else None
             )
             return {}, paths
@@ -783,14 +851,21 @@ class Fabric:
         ports = np.asarray(ports_l, dtype=np.int64)
         nb = np.asarray(nb_l, dtype=np.int64)
 
-        # per-flow (flow id, hop seq, u, v) fragments for FlowPaths assembly
+        # per-flow (flow id, hop seq, u, v, slot occupancy) fragments for
+        # FlowPaths assembly (occupancy None = non-ECMP hop, occupancy 1)
         rec: Optional[List] = [] if collect_paths else None
         nflows = pidx.size
         np.add.at(counters, (cols["src_host"][pidx], cols["src_leaf"][pidx]), nb)
         touched[cols["src_host"][pidx], cols["src_leaf"][pidx]] = True
         if rec is not None:
             rec.append(
-                (np.arange(nflows), 0, cols["src_host"][pidx], cols["src_leaf"][pidx])
+                (
+                    np.arange(nflows),
+                    0,
+                    cols["src_host"][pidx],
+                    cols["src_leaf"][pidx],
+                    None,
+                )
             )
         same = cols["same_leaf"][pidx]
         si = np.nonzero(same)[0]
@@ -799,7 +874,7 @@ class Fabric:
             np.add.at(counters, (cols["dst_leaf"][sp], cols["dst_host"][sp]), nb[si])
             touched[cols["dst_leaf"][sp], cols["dst_host"][sp]] = True
             if rec is not None:
-                rec.append((si, 1, cols["dst_leaf"][sp], cols["dst_host"][sp]))
+                rec.append((si, 1, cols["dst_leaf"][sp], cols["dst_host"][sp], None))
         ri = np.nonzero(~same)[0]
         if ri.size:
             rp = pidx[ri]
@@ -861,10 +936,18 @@ class Fabric:
             )
             lu = np.concatenate([np.asarray(r[2], dtype=np.int64) for r in rec])
             lv = np.concatenate([np.asarray(r[3], dtype=np.int64) for r in rec])
+            occ = np.concatenate(
+                [
+                    np.asarray(r[4], dtype=np.int64)
+                    if r[4] is not None
+                    else np.ones(len(r[0]), dtype=np.int64)
+                    for r in rec
+                ]
+            )
             sort = np.lexsort((seq, fl))  # group by flow, hop order within
             ptr = np.zeros(nflows + 1, dtype=np.int64)
             np.cumsum(np.bincount(fl, minlength=nflows), out=ptr[1:])
-            paths = FlowPaths(lu[sort], lv[sort], ptr, tuple(order))
+            paths = FlowPaths(lu[sort], lv[sort], ptr, tuple(order), occ[sort])
         return out, paths
 
     # -- data plane ---------------------------------------------------------

@@ -40,7 +40,7 @@ engine, and produces byte-identical link counters.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Sequence, Tuple, Union
 
 from .fabric import Fabric, FlowPaths, Link
 from .ports import QueuePair, allocate_ports

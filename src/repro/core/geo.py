@@ -24,8 +24,8 @@ collectives concentrate WAN traffic on pod leaders.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
@@ -35,7 +35,6 @@ from .evpn import EvpnControlPlane
 from .fabric import Fabric, FabricConfig
 from .metrics import LoadFactorResult, load_factor
 from .schedule import (
-    SYNC_STRATEGIES,
     CollectiveSchedule,
     StrategyContext,
     build_schedule,
@@ -178,6 +177,7 @@ class GeoFabric:
         int8_ratio: float = 0.25,  # fp32 -> int8 + per-block scales
         jitter: bool = True,
         congestion: bool = False,
+        ecmp_weighted: bool = False,
     ) -> SyncCost:
         """Cost one gradient synchronization under ``strategy``.
 
@@ -199,6 +199,14 @@ class GeoFabric:
         flows enter as their phase's dependencies complete, fair shares are
         re-solved at every arrival/completion, and per-flow path
         propagation is already included (so no separate RTT term).
+
+        ``ecmp_weighted=True`` (congestion branch only) solves *weighted*
+        max-min fair shares: the router's recorded hash-slot occupancy
+        down-weights hash-collided flows
+        (:func:`repro.core.congestion.ecmp_flow_weights`), and the returned
+        ``bottleneck_utilization`` reflects the weighted allocation.  The
+        default keeps the unweighted model (bit-identical to the
+        historical congestion branch).
         """
         schedule = self.build_schedule(
             strategy, grad_bytes, sync_every=sync_every, int8_ratio=int8_ratio
@@ -206,7 +214,9 @@ class GeoFabric:
         jit = float(self.netem.rng.uniform(0, 2.0)) if jitter else 0.0
         if congestion:
             report = self.timing.contended_schedule_time(
-                schedule, check_reachability=self.tenancy.reachable
+                schedule,
+                check_reachability=self.tenancy.reachable,
+                ecmp_weighted=ecmp_weighted,
             )
             link_bytes = dict(self.fabric.link_bytes)
             seconds = report.seconds + jit / 1e3

@@ -9,7 +9,7 @@ reachability matrix the paper reports in Table 1.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Sequence, Tuple
 
 from .evpn import EvpnControlPlane
 from .fabric import Fabric, UnreachableError

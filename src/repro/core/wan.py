@@ -25,7 +25,7 @@ bit-reproducible.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -168,6 +168,7 @@ class WanTimingModel:
         *,
         check_reachability=None,
         reset_counters: bool = True,
+        ecmp_weighted: bool = False,
     ):
         """Flow-level contended timing for a set of concurrent flows.
 
@@ -180,6 +181,10 @@ class WanTimingModel:
         estimate of :meth:`transfer_time`.  Returns the
         :class:`repro.core.congestion.CongestionReport` (``.seconds`` is
         the completion time; propagation is already included per flow).
+
+        ``ecmp_weighted=True`` weights the fair shares by the observed
+        ECMP hash-slot occupancy
+        (:func:`repro.core.congestion.ecmp_flow_weights`).
         """
         from .congestion import route_and_analyze  # congestion imports wan
 
@@ -189,6 +194,7 @@ class WanTimingModel:
             flows,
             check_reachability=check_reachability,
             reset_counters=reset_counters,
+            ecmp_weighted=ecmp_weighted,
         )
         return report
 
@@ -198,6 +204,7 @@ class WanTimingModel:
         *,
         check_reachability=None,
         reset_counters: bool = True,
+        ecmp_weighted: bool = False,
     ):
         """Contended timing for a phased :class:`CollectiveSchedule`.
 
@@ -220,4 +227,5 @@ class WanTimingModel:
             schedule,
             check_reachability=check_reachability,
             reset_counters=reset_counters,
+            ecmp_weighted=ecmp_weighted,
         )

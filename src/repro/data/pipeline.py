@@ -15,7 +15,7 @@ Sharding: each host draws only its slice of the global batch
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Iterator, Optional, Tuple
+from typing import Dict, Iterator
 
 import numpy as np
 

@@ -17,7 +17,7 @@ Policy (training *and* serving — 2-D weight sharding):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
@@ -184,8 +184,6 @@ def cache_pspecs(cache_shapes, mesh: Mesh):
       wkv:  [B, H, N, N]     -> batch over data, heads over model
       conv/h/shift: [B, ...] -> batch over data
     """
-    model = "model" if True else None
-
     def spec(path, leaf):
         names = [getattr(k, "key", getattr(k, "name", None)) for k in path]
         leaf_name = names[-1]

@@ -16,8 +16,7 @@ launcher, the dry-run, and the checkpointing layer all agree on placement.
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,7 +33,6 @@ from .compression import init_error_feedback
 from .sharding import (
     batch_pspecs,
     batch_shardings,
-    cache_pspecs,
     cache_shardings,
     params_pspecs,
     params_shardings,

@@ -28,8 +28,7 @@ manual (see ``repro.distributed.steps``).
 
 from __future__ import annotations
 
-import functools
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -172,7 +171,6 @@ def sync_ps(grads, params, apply_update: Callable, *, axis: str = "pod", axis_in
     Returns the broadcast updated params.
     """
     idx = jax.lax.axis_index(axis) if axis_index is None else axis_index
-    n = jax.lax.psum(1, axis)
     # push: server receives every pod's gradients
     gathered = jax.tree.map(
         lambda g: all_gather_compat(g, axis, axis_index=idx), grads

@@ -13,7 +13,6 @@ opposite sides of the WAN).
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

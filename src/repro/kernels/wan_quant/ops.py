@@ -55,9 +55,6 @@ def dequantize(q, s, *, orig_shape: Tuple[int, ...], interpret: bool = True):
     full = wan_dequant(q, s, row_tile=rt, interpret=interpret)
     last = orig_shape[-1] if orig_shape else 1
     if full.ndim and orig_shape:
-        lead = 1
-        for d in orig_shape[:-1]:
-            lead *= d
         full = full[:, :last] if full.shape[-1] != last else full
         return full.reshape(orig_shape)
     return full.reshape(orig_shape)

@@ -42,7 +42,6 @@ from repro.distributed import (
     cache_shardings,
     make_train_step,
     params_shardings,
-    state_pspecs,
 )
 from repro.distributed.act_sharding import activation_sharding
 from repro.launch.hlo_stats import parse_collectives, scan_trip_counts
@@ -54,8 +53,7 @@ from repro.launch.shapes import (
     params_specs,
     shape_supported,
 )
-from repro.models import decode_step, loss_fn, prefill
-from repro.models.transformer import init_decode_cache
+from repro.models import decode_step, prefill
 from repro.optim import AdamWConfig
 
 ARTIFACTS = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -81,8 +79,7 @@ def _lower_train(cfg, mesh, batch_specs):
         batch_shapes=batch_specs["batch"],
         donate=False,
     )
-    from repro.distributed.steps import init_train_state, TrainState
-    from repro.optim.adamw import AdamWState
+    from repro.distributed.steps import init_train_state
 
     state_shapes = jax.eval_shape(
         lambda p: init_train_state(
@@ -112,7 +109,6 @@ def _lower_prefill(cfg, mesh, batch_specs):
 
 def _lower_decode(cfg, mesh, shape_name: str):
     p_shapes = params_specs(cfg)
-    spec = SHAPES[shape_name]
     cache_shapes = decode_cache_specs(cfg, shape_name)
     tok = input_specs(cfg, shape_name)["tokens_t"]
     p_shard = params_shardings(p_shapes, mesh)

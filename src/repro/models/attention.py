@@ -8,7 +8,7 @@ flash-attention kernel (``repro.kernels.flash_attention``) when
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -324,7 +324,6 @@ def attention_decode(
     window: Optional[int],
 ):
     """One decode step against (and updating) a rolling KV cache."""
-    B = x_t.shape[0]
     q, k_new, v_new = _project_qkv(params, x_t, cfg)
     pos_arr = jnp.full((1,), position, dtype=jnp.int32)
     q = apply_rope(q, pos_arr, theta=cfg.rope_theta, fraction=cfg.rope_fraction)

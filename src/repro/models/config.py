@@ -10,8 +10,7 @@ keeps ``lax.scan``-over-layers applicable to heterogeneous stacks.
 
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 import jax.numpy as jnp

@@ -14,7 +14,7 @@ Decode is O(1): state = (lru hidden [B, Dr], conv tail [B, 3, Dr]).
 
 from __future__ import annotations
 
-from typing import Dict, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,7 @@ Decode is O(1): carry ``(wkv_state, shift_att, shift_ffn)`` per layer.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Tuple
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

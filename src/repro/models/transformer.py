@@ -17,19 +17,12 @@ Entry points (all pure functions over a params pytree):
 
 from __future__ import annotations
 
-import functools
 from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from .attention import (
-    attention_decode,
-    attention_forward,
-    init_attention,
-    init_cache,
-    make_cache_from_prefill,
-)
+from .attention import attention_decode, attention_forward, init_attention, init_cache
 from .config import ATTN, LOCAL, RECURRENT, RWKV, ModelConfig
 from .ffn import dense_ffn, init_dense_ffn, init_moe, moe_ffn
 from .layers import apply_norm, dense_init, embed_init, init_norm, softcap
@@ -69,7 +62,6 @@ def _init_layer(key, kind: str, cfg: ModelConfig) -> Params:
 
 def init_params(key, cfg: ModelConfig) -> Params:
     keys = jax.random.split(key, 8)
-    pdt = jnp.dtype(cfg.param_dtype)
     # Embedding tables stay fp32 even under bf16 params: standard for
     # quality, and the fp32->bf16 convert between table and token gather is
     # load-bearing — without it the gather's operand is the sharded

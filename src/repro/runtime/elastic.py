@@ -13,12 +13,12 @@ batch (synchronous semantics unchanged; data order is deterministic in
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 import jax
 from jax.sharding import Mesh
 
-from repro.distributed.sharding import params_pspecs, params_shardings
+from repro.distributed.sharding import params_shardings
 from repro.launch.mesh import make_mesh
 
 

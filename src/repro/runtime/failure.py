@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Dict, List
 
 from repro.core.bfd import BfdSession, BfdState
 

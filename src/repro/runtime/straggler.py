@@ -16,7 +16,7 @@ flags stragglers, and picks a mitigation:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 

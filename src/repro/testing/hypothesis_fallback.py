@@ -2,7 +2,7 @@
 
 The test suite uses a small slice of hypothesis: ``@given`` over
 ``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.sampled_from`` /
-``st.booleans`` / ``st.tuples`` plus
+``st.booleans`` / ``st.tuples`` / ``st.composite`` plus
 ``@settings(max_examples=..., deadline=...)``.  When the real package is
 not installed, :func:`install` registers this module under
 ``sys.modules["hypothesis"]`` so the test modules import and *run* instead
@@ -141,6 +141,37 @@ def tuples(*strategies: SearchStrategy) -> _Tuples:
     return _Tuples(*strategies)
 
 
+class _CompositeStrategy(SearchStrategy):
+    """Strategy built by a ``@composite`` function calling ``draw``."""
+
+    def __init__(self, fn, args: tuple, kwargs: dict):
+        self.fn = fn
+        self.args = args
+        self.kwargs = kwargs
+
+    def example(self, rng: random.Random, index: int) -> Any:
+        def draw(strategy: SearchStrategy) -> Any:
+            return strategy.example(rng, index)
+
+        return self.fn(draw, *self.args, **self.kwargs)
+
+
+def composite(fn):
+    """``@st.composite``: ``fn(draw, *args)`` becomes a strategy factory.
+
+    Matches the real API shape — the decorated function is *called* (with
+    any extra arguments) to produce a strategy; inside, ``draw(strategy)``
+    yields one example.  Boundary indices propagate to every inner draw,
+    so index 0/1 still pin each sub-strategy to its min/max example.
+    """
+
+    @functools.wraps(fn)
+    def builder(*args: Any, **kwargs: Any) -> _CompositeStrategy:
+        return _CompositeStrategy(fn, args, kwargs)
+
+    return builder
+
+
 def settings(**config: Any):
     """Decorator recording execution knobs for a later ``@given``."""
 
@@ -198,7 +229,15 @@ def install() -> None:
     hyp.__doc__ = __doc__
     hyp.__fallback__ = True
     strat = types.ModuleType("hypothesis.strategies")
-    for name in ("integers", "floats", "sampled_from", "lists", "booleans", "tuples"):
+    for name in (
+        "integers",
+        "floats",
+        "sampled_from",
+        "lists",
+        "booleans",
+        "tuples",
+        "composite",
+    ):
         setattr(strat, name, globals()[name])
     strat.SearchStrategy = SearchStrategy
     hyp.strategies = strat

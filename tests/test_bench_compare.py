@@ -1,0 +1,174 @@
+"""CI bench-baseline regression gate tests (ISSUE 4 satellite).
+
+Covers the acceptance demonstration: a synthetic 25% regression on a
+gated metric makes ``benchmarks.compare`` exit non-zero, while a 10%
+wobble and genuine improvements pass.
+"""
+
+import copy
+import json
+
+
+from benchmarks.compare import Delta, compare, main, metric_direction
+
+BASE_SUITE = {
+    "suite": "fig9_13_failover",
+    "module": "benchmarks.bench_failover",
+    "rows": [
+        {
+            "name": "fig9_bfd_recovery",
+            "us_per_call": 88.0,
+            "derived": "recovery=109ms",
+            "metrics": {"recovery_ms": 109.0},
+        },
+        {
+            "name": "congestion_spine_throughput",
+            "us_per_call": 2100.0,
+            "derived": "eff wan 800",
+            "metrics": {"effective_wan_mbps": 800.0},
+        },
+    ],
+}
+
+
+def _dirs(tmp_path, mutate):
+    base = tmp_path / "baselines"
+    new = tmp_path / "new"
+    base.mkdir(exist_ok=True)
+    new.mkdir(exist_ok=True)
+    (base / "BENCH_fig9_13_failover.json").write_text(json.dumps(BASE_SUITE))
+    fresh = copy.deepcopy(BASE_SUITE)
+    mutate(fresh)
+    (new / "BENCH_fig9_13_failover.json").write_text(json.dumps(fresh))
+    return base, new
+
+
+class TestMetricDirection:
+    def test_suffix_table(self):
+        assert metric_direction("effective_wan_mbps") == "higher"
+        assert metric_direction("flap_storm_speedup") == "higher"
+        assert metric_direction("leaf_peak_improvement_pct") == "higher"
+        assert metric_direction("recovery_ms") == "lower"
+        assert metric_direction("evpn_mean_touched_frac") == "lower"
+        assert metric_direction("leaf_qp_aware_factor") == "lower"
+        assert metric_direction("step_f75_seconds") == "lower"
+        assert metric_direction("mystery_quantity") == "pinned"
+
+    def test_delta_directionality(self):
+        up = Delta("s", "r", "x_ms", baseline=100.0, new=130.0, direction="lower")
+        assert up.regressed(0.20)
+        assert not up.regressed(0.35)
+        down = Delta("s", "r", "x_mbps", baseline=800.0, new=560.0, direction="higher")
+        assert down.regressed(0.20)
+        improved = Delta("s", "r", "x_ms", baseline=100.0, new=50.0, direction="lower")
+        assert not improved.regressed(0.20)
+        pinned = Delta("s", "r", "x", baseline=100.0, new=130.0, direction="pinned")
+        assert pinned.regressed(0.20)
+
+
+class TestCompare:
+    def test_synthetic_25pct_regression_fails(self, tmp_path):
+        """The acceptance-criteria demonstration: recovery_ms +25%."""
+
+        def worsen(payload):
+            payload["rows"][0]["metrics"]["recovery_ms"] = 109.0 * 1.25
+
+        base, new = _dirs(tmp_path, worsen)
+        _, regressions = compare(base, new)
+        assert len(regressions) == 1
+        assert "recovery_ms" in regressions[0]
+        # and the CLI exits non-zero, which is what fails the CI job
+        assert main(["--baseline", str(base), "--new", str(new)]) == 1
+
+    def test_10pct_wobble_passes(self, tmp_path):
+        def wobble(payload):
+            payload["rows"][0]["metrics"]["recovery_ms"] = 109.0 * 1.10
+            payload["rows"][1]["metrics"]["effective_wan_mbps"] = 800.0 * 0.9
+
+        base, new = _dirs(tmp_path, wobble)
+        table, regressions = compare(base, new)
+        assert regressions == []
+        assert main(["--baseline", str(base), "--new", str(new)]) == 0
+        assert "recovery_ms" in table  # delta table still reports it
+
+    def test_improvement_passes_any_size(self, tmp_path):
+        def improve(payload):
+            payload["rows"][0]["metrics"]["recovery_ms"] = 40.0  # -63%
+            payload["rows"][1]["metrics"]["effective_wan_mbps"] = 1600.0
+
+        base, new = _dirs(tmp_path, improve)
+        _, regressions = compare(base, new)
+        assert regressions == []
+
+    def test_missing_suite_fails(self, tmp_path):
+        base, new = _dirs(tmp_path, lambda p: None)
+        (new / "BENCH_fig9_13_failover.json").unlink()
+        _, regressions = compare(base, new)
+        assert len(regressions) == 1
+        assert "missing" in regressions[0]
+
+    def test_errored_suite_fails(self, tmp_path):
+        def error(payload):
+            payload.clear()
+            payload.update({"suite": "fig9_13_failover", "error": "boom"})
+
+        base, new = _dirs(tmp_path, error)
+        _, regressions = compare(base, new)
+        assert len(regressions) == 1
+        assert "errored" in regressions[0]
+
+    def test_us_per_call_never_gated(self, tmp_path):
+        """Wall-clock noise must not trip the gate."""
+
+        def slower_runner(payload):
+            payload["rows"][0]["us_per_call"] = 88.0 * 50
+
+        base, new = _dirs(tmp_path, slower_runner)
+        _, regressions = compare(base, new)
+        assert regressions == []
+
+    def test_dropped_gated_metric_fails(self, tmp_path):
+        """Renaming a row or dropping a gated metric must not silently
+        disable its gate."""
+
+        def drop_metric(payload):
+            payload["rows"][0]["metrics"].pop("recovery_ms")
+
+        base, new = _dirs(tmp_path, drop_metric)
+        _, regressions = compare(base, new)
+        assert len(regressions) == 1
+        assert "missing from the new run" in regressions[0]
+
+        def rename_row(payload):
+            payload["rows"][1]["name"] = "renamed_row"
+
+        base, new = _dirs(tmp_path, rename_row)
+        table, regressions = compare(base, new)
+        assert any("effective_wan_mbps" in r for r in regressions)
+        assert "gated metric dropped" in table
+
+    def test_new_metrics_without_baseline_pass(self, tmp_path):
+        def add_metric(payload):
+            payload["rows"][0]["metrics"]["brand_new_ms"] = 1.0
+
+        base, new = _dirs(tmp_path, add_metric)
+        _, regressions = compare(base, new)
+        assert regressions == []
+
+    def test_summary_file_written(self, tmp_path):
+        base, new = _dirs(tmp_path, lambda p: None)
+        summary = tmp_path / "summary.md"
+        assert (
+            main(
+                [
+                    "--baseline",
+                    str(base),
+                    "--new",
+                    str(new),
+                    "--summary",
+                    str(summary),
+                ]
+            )
+            == 0
+        )
+        assert "Bench baseline comparison" in summary.read_text()

@@ -10,11 +10,10 @@ import pytest
 
 from repro.core.congestion import (
     build_link_load_matrix,
-    congestion_report,
     max_min_rates,
     route_and_analyze,
 )
-from repro.core.fabric import Fabric, FabricConfig
+from repro.core.fabric import Fabric
 from repro.core.flows import (
     Flow,
     all_to_all_flows,
@@ -131,6 +130,48 @@ class TestCompletionTimes:
         assert report.completion_s[0] == pytest.approx(
             report.propagation_ms[0] / 1e3
         )
+
+    def test_zero_byte_flows_occupy_no_share(self):
+        """ROADMAP open item (ISSUE 4 satellite): the static allocator must
+        drop zero-byte chunk flows exactly like the event loop drains them
+        free — adding a zero-byte flow changes nobody's rate, and the
+        zero-byte flow itself gets no allocation."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        live = [_flow("d1h1", "d2h1", port=50_000 + i) for i in range(4)]
+        _, without = route_and_analyze(fabric, netem, live)
+        _, with_zero = route_and_analyze(
+            fabric, netem, live + [_flow("d1h1", "d2h1", nbytes=0)]
+        )
+        assert np.array_equal(with_zero.rates_gbps[:4], without.rates_gbps)
+        assert with_zero.rates_gbps[4] == 0.0
+        # per-link throughput carries no phantom zero-byte allocation
+        assert np.all(
+            with_zero.throughput_gbps <= with_zero.capacity_gbps * (1 + 1e-9)
+        )
+
+    def test_zero_byte_convention_matches_event_loop(self):
+        """A single-phase schedule containing zero-byte chunks now costs
+        the same through the static fast path and the forced event loop —
+        the two conventions are unified."""
+        from repro.core.congestion import simulate_schedule
+        from repro.core.schedule import CollectiveSchedule, Phase
+
+        fabric = Fabric()
+        netem = Netem(fabric)
+        # 1 byte over 4 channels: exact split yields zero-byte chunks
+        flows = ring_allreduce_flows(sorted(fabric.hosts), 1)
+        assert any(f.nbytes == 0 for f in flows)
+        fast = simulate_schedule(
+            fabric, netem, CollectiveSchedule.single("p", flows)
+        )
+        looped = simulate_schedule(
+            fabric,
+            netem,
+            CollectiveSchedule("p2", (Phase("p", flows), Phase("end", deps=("p",)))),
+        )
+        assert fast.seconds == pytest.approx(looped.seconds, rel=1e-9)
+        assert np.allclose(fast.completion_s, looped.completion_s, rtol=1e-9)
 
     def test_contended_slower_than_ideal(self):
         """Contention can only slow a collective down vs the ideal fluid

@@ -20,12 +20,10 @@ from hypothesis import strategies as st
 
 from repro.distributed.compression import (
     BLOCK,
-    apply_error_feedback,
     compressed_bytes,
     init_error_feedback,
     int8_compress,
     int8_decompress,
-    residual,
     topk_densify,
     topk_sparsify,
 )

@@ -1,0 +1,210 @@
+"""Incremental EVPN resync tests (ISSUE 4 tentpole, control-plane half).
+
+The contract mirrors ``test_failover_incremental.py`` one layer up: after
+*any* flap sequence in which every flap is synced through
+``resync_incremental(RerouteStats)``, the control-plane session state
+(per-speaker RIBs + derived MAC/IP/flood tables) must be byte-identical to
+a control plane that ran a full ``resync()`` after every event — while the
+common non-partitioning flap retains every speaker untouched.
+"""
+
+import copy
+
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.bfd import FailureDetector
+from repro.core.evpn import EvpnControlPlane, EvpnResyncStats
+from repro.core.fabric import Fabric, FabricConfig
+
+#: 3-DC fabric with enough leaves for a real blast-radius contrast.
+MID = FabricConfig(
+    num_dcs=3,
+    spines_per_dc=2,
+    leaves_per_dc=3,
+    hosts_per_leaf=((2, 1, 1), (1, 2, 1), (1, 1, 2)),
+)
+
+
+def _stack(config=None):
+    fabric = Fabric(config)
+    evpn = EvpnControlPlane(fabric)
+    for host in sorted(fabric.hosts):
+        evpn.learn_host(host, 100)
+    return fabric, evpn
+
+
+def _state(evpn):
+    # deep copies, so same-instance before/after comparisons see real
+    # snapshots rather than aliases of the live (mutable) tables
+    return (
+        {name: frozenset(sp.rib) for name, sp in evpn.speakers.items()},
+        copy.deepcopy(evpn.mac_table),
+        copy.deepcopy(evpn.ip_table),
+        copy.deepcopy(evpn.flood_list),
+    )
+
+
+def _apply(fabric, evpn, action, link, *, full):
+    stats = (
+        fabric.fail_link(*link) if action == "fail" else fabric.restore_link(*link)
+    )
+    if full:
+        evpn.resync()
+        return None
+    return evpn.resync_incremental(stats)
+
+
+class TestNonPartitioningFlaps:
+    def test_wan_flap_retains_everything(self):
+        """A single WAN-link flap never partitions the full-bipartite
+        session graph: zero RIB edits, zero table rebuilds."""
+        fabric, evpn = _stack()
+        wan = sorted(fabric.wan_links[0])
+        before = _state(evpn)
+        stats = _apply(fabric, evpn, "fail", (wan[0], wan[1]), full=False)
+        assert isinstance(stats, EvpnResyncStats)
+        assert stats.touched == 0
+        assert stats.retained == len(evpn.speakers)
+        assert stats.origins_recomputed == 0
+        assert stats.vtep_touched_frac == 0.0
+        assert _state(evpn) == before
+        stats = _apply(fabric, evpn, "restore", (wan[0], wan[1]), full=False)
+        assert stats.touched == 0
+
+    def test_host_link_flap_is_noop(self):
+        """Host attachments carry no BGP session: nothing to diff."""
+        fabric, evpn = _stack()
+        leaf = fabric.hosts["d1h1"].leaf
+        stats = _apply(fabric, evpn, "fail", ("d1h1", leaf), full=False)
+        assert stats.touched == 0
+        assert stats.retained == len(evpn.speakers)
+        fabric.restore_link("d1h1", leaf)
+
+    def test_leaf_spine_flap_with_redundancy_retains(self):
+        fabric, evpn = _stack()
+        stats = _apply(fabric, evpn, "fail", ("d1l1", "d1s1"), full=False)
+        assert stats.touched == 0  # d1l1 still peers via d1s2
+
+
+class TestPartitioningFlaps:
+    def test_leaf_isolation_withdraws_and_restores(self):
+        fabric, evpn = _stack()
+        # only the LAST uplink failure partitions; earlier ones retain
+        s1 = _apply(fabric, evpn, "fail", ("d1l1", "d1s1"), full=False)
+        assert s1.touched == 0
+        s2 = _apply(fabric, evpn, "fail", ("d1l1", "d1s2"), full=False)
+        assert s2.touched > 0
+        assert s2.origins_recomputed > 0
+        assert not evpn.reachable("d2h1", "d1h1")
+        # reconnect: routes re-flood to exactly the re-joined speakers
+        s3 = _apply(fabric, evpn, "restore", ("d1l1", "d1s1"), full=False)
+        assert s3.touched > 0
+        assert evpn.reachable("d2h1", "d1h1")
+        fabric.restore_link("d1l1", "d1s2")
+
+    def test_stats_partition_speaker_counts(self):
+        fabric, evpn = _stack()
+        fabric.fail_link("d1l1", "d1s1")
+        stats = _apply(fabric, evpn, "fail", ("d1l1", "d1s2"), full=False)
+        assert stats.patched + stats.rebuilt + stats.retained == len(
+            evpn.speakers
+        )
+        assert stats.total_vteps == len(fabric.leaves)
+        # rebuilt counts leaf VTEPs, patched counts spine RIB edits
+        assert stats.rebuilt <= len(fabric.leaves)
+
+
+class TestFullResyncEquivalence:
+    def _twins(self, config=None):
+        return _stack(config), _stack(config)
+
+    def test_isolation_episode_matches_full_resync(self):
+        (f_inc, e_inc), (f_full, e_full) = self._twins(MID)
+        uplinks = [("d2l2", "d2s1"), ("d2l2", "d2s2")]
+        seq = [("fail", link) for link in uplinks] + [
+            ("restore", link) for link in uplinks
+        ]
+        for action, link in seq:
+            _apply(f_inc, e_inc, action, link, full=False)
+            _apply(f_full, e_full, action, link, full=True)
+            assert _state(e_inc) == _state(e_full)
+
+    def test_advertisement_during_outage_matches_full_resync(self):
+        """Routes advertised while a leaf is isolated flood partially;
+        the incremental restore must extend them exactly like a full
+        resync would."""
+        (f_inc, e_inc), (f_full, e_full) = self._twins()
+        for f, e in ((f_inc, e_inc), (f_full, e_full)):
+            _apply(f, e, "fail", ("d2l1", "d2s1"), full=e is e_full)
+            _apply(f, e, "fail", ("d2l1", "d2s2"), full=e is e_full)
+            # new tenant appears mid-outage
+            e.learn_host("d1h2", 200)
+            e.learn_host("d2h1", 200)  # d2h1 sits on isolated d2l1
+            _apply(f, e, "restore", ("d2l1", "d2s1"), full=e is e_full)
+            _apply(f, e, "restore", ("d2l1", "d2s2"), full=e is e_full)
+        assert _state(e_inc) == _state(e_full)
+        assert e_inc.reachable("d1h2", "d2h1")
+
+    @settings(max_examples=15, deadline=None)
+    @given(
+        st.lists(
+            st.tuples(
+                st.booleans(),  # True = fail, False = restore
+                st.integers(min_value=0, max_value=17),
+            ),
+            min_size=1,
+            max_size=12,
+        )
+    )
+    def test_random_flap_sequences_match_full_resync(self, seq):
+        """Property: any session-link flap sequence leaves incremental and
+        full-resync control planes in byte-identical state."""
+        (f_inc, e_inc), (f_full, e_full) = self._twins(MID)
+        links = sorted(tuple(sorted(l)) for l in f_inc.wan_links)
+        # mix in leaf-spine session links (indices past the WAN list)
+        links += [("d1l1", "d1s1"), ("d1l1", "d1s2"), ("d2l2", "d2s1"),
+                  ("d2l2", "d2s2"), ("d3l3", "d3s1")]
+        for is_fail, idx in seq:
+            link = links[idx % len(links)]
+            action = "fail" if is_fail else "restore"
+            _apply(f_inc, e_inc, action, link, full=False)
+            _apply(f_full, e_full, action, link, full=True)
+        assert _state(e_inc) == _state(e_full)
+
+
+class TestDetectorIntegration:
+    def test_fail_and_recover_carries_resync_stats(self):
+        fabric, evpn = _stack()
+        det = FailureDetector(fabric, evpn)
+        wan = sorted(fabric.wan_links[0])
+        tl = det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        assert tl.evpn_resync is not None
+        assert tl.evpn_resync.action == "fail"
+        assert tl.evpn_resync.touched == 0
+        assert any("EVPN resynced incrementally" in msg for _, msg in tl.events)
+        det.restore((wan[0], wan[1]))
+        assert evpn.last_resync is not None
+        assert evpn.last_resync.action == "restore"
+
+    def test_recovery_timing_unchanged(self):
+        """Swapping full resync for incremental must not move the Fig. 9
+        recovery timeline."""
+        fabric, evpn = _stack()
+        det = FailureDetector(fabric, evpn)
+        wan = sorted(fabric.wan_links[0])
+        tl = det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        assert 90.0 < tl.recovery_ms < 130.0
+
+    def test_withdraw_leaf_not_resurrected(self):
+        fabric, evpn = _stack()
+        evpn.withdraw_leaf("d1l1")
+        assert not evpn.reachable("d2h1", "d1h1")
+        # neither a full nor an incremental resync may bring them back
+        evpn.resync()
+        assert not evpn.reachable("d2h1", "d1h1")
+        det = FailureDetector(fabric, evpn)
+        wan = sorted(fabric.wan_links[0])
+        det.fail_and_recover((wan[0], wan[1]), mechanism="bfd")
+        det.restore((wan[0], wan[1]))
+        assert not evpn.reachable("d2h1", "d1h1")

@@ -1,16 +1,11 @@
 """Launch-layer units: HLO collective parsing, shapes/specs, mesh helpers."""
 
 import jax
-import jax.numpy as jnp
 import pytest
 
-from repro.configs import get_config, get_smoke_config
-from repro.launch.hlo_stats import (
-    CollectiveStats,
-    parse_collectives,
-    shape_bytes,
-)
-from repro.launch.mesh import batch_axes, chips_per_pod, make_mesh, num_pods
+from repro.configs import get_config
+from repro.launch.hlo_stats import parse_collectives, shape_bytes
+from repro.launch.mesh import batch_axes, chips_per_pod, num_pods
 from repro.launch.shapes import SHAPES, decode_cache_specs, input_specs, params_specs
 
 

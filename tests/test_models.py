@@ -1,7 +1,6 @@
 """Model-stack unit tests: attention equivalences, MoE internals, RWKV/RG-LRU
 recurrence properties, cache mechanics, and hypothesis invariants."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -10,17 +9,9 @@ import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
-from repro.models import (
-    ModelConfig,
-    MoEConfig,
-    decode_step,
-    forward,
-    init_params,
-    loss_fn,
-    prefill,
-)
+from repro.models import ModelConfig, MoEConfig, forward, init_params, loss_fn
 from repro.models.attention import _sdpa_chunked, _sdpa_dense, sdpa
-from repro.models.rwkv6 import _wkv_with_initial_state, init_rwkv_state
+from repro.models.rwkv6 import _wkv_with_initial_state
 from repro.models.rglru import rg_lru
 
 
@@ -245,11 +236,8 @@ class TestRgLru:
 class TestCacheMechanics:
     def test_rolling_window_slot_invariant(self):
         """Windowed cache: position p always lands at slot p % size."""
-        from repro.models.attention import init_cache, make_cache_from_prefill
+        from repro.models.attention import make_cache_from_prefill
 
-        cfg = ModelConfig(name="c", family="dense", num_layers=1, d_model=32,
-                          num_heads=2, num_kv_heads=2, d_ff=64, vocab_size=64,
-                          window=8, dtype="float32")
         k = jnp.arange(2 * 12 * 2 * 16, dtype=jnp.float32).reshape(2, 12, 2, 16)
         cache = make_cache_from_prefill(k, k, jnp.arange(12), window=8, max_len=20)
         assert cache["k"].shape[1] == 8

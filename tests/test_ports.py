@@ -1,7 +1,7 @@
 """Unit + property tests for source-port allocation (paper Algorithm 1)."""
 
 import pytest
-from hypothesis import given, settings
+from hypothesis import given
 from hypothesis import strategies as st
 
 from repro.core.ports import (
@@ -15,7 +15,6 @@ from repro.core.ports import (
     hash_32,
     make_queue_pairs,
     qp_aware_port,
-    qp_aware_ports,
     rxe_baseline_port,
 )
 

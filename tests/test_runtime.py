@@ -2,7 +2,6 @@
 and the end-to-end GeoTrainer loop (single device)."""
 
 import dataclasses
-import os
 
 import jax
 import jax.numpy as jnp

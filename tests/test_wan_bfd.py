@@ -3,11 +3,11 @@
 import numpy as np
 import pytest
 
-from repro.core.bfd import BfdSession, BfdState, BgpHoldTimer, FailureDetector
+from repro.core.bfd import BfdSession, BfdState, FailureDetector
 from repro.core.evpn import EvpnControlPlane
 from repro.core.fabric import Fabric
 from repro.core.geo import GeoFabric
-from repro.core.wan import Netem, NetemProfile, PAPER_WAN, WanTimingModel, ping_rtt
+from repro.core.wan import Netem, WanTimingModel, ping_rtt
 
 
 class TestNetemRtt:

@@ -1,0 +1,270 @@
+"""ECMP-aware weighted max-min allocation tests (ISSUE 4 tentpole).
+
+Three contracts:
+
+* **Back-compat pin** — uniform weights (and ``weights=None``) reproduce
+  the pre-weighting allocator byte-for-byte, across random flow x link
+  matrices and real routed collectives.
+* **Hash-slot derivation** — ``route_flows_with_paths`` records slot
+  occupancy, ``ecmp_flow_weights`` turns the worst collision into a
+  ``1/k`` weight, and a crafted 2-flows-on-one-uplink collision halves the
+  colliding flows' rate relative to an uncollided flow sharing the same
+  bottleneck.
+* **Conservation** — the weighted allocation still fills every saturated
+  link to exactly its capacity and never over-allocates any link.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core.congestion import (
+    _max_min_rates_arrays,
+    build_link_load_matrix,
+    congestion_report,
+    ecmp_flow_weights,
+    max_min_rates,
+    route_and_analyze,
+    simulate_schedule,
+)
+from repro.core.fabric import Fabric
+from repro.core.flows import (
+    Flow,
+    all_to_all_flows,
+    ring_allreduce_flows,
+    route_flows_with_paths,
+)
+from repro.core.geo import GeoFabric
+from repro.core.ports import QueuePair
+from repro.core.schedule import CollectiveSchedule
+from repro.core.wan import Netem
+
+
+def _flow(src, dst, nbytes=1_000_000, port=50_000):
+    return Flow(src, dst, nbytes, QueuePair(0, 1), port)
+
+
+@st.composite
+def _random_matrix(draw):
+    """A random membership (mem_f, mem_l, capacity, nflows, nlinks)."""
+    nflows = draw(st.integers(min_value=1, max_value=12))
+    nlinks = draw(st.integers(min_value=1, max_value=8))
+    rows = draw(
+        st.lists(
+            st.tuples(
+                st.integers(min_value=0, max_value=nflows - 1),
+                st.integers(min_value=0, max_value=nlinks - 1),
+            ),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    caps = draw(
+        st.lists(
+            st.floats(min_value=0.1, max_value=100.0),
+            min_size=nlinks,
+            max_size=nlinks,
+        )
+    )
+    mem_f = np.array([r[0] for r in rows], dtype=np.int64)
+    mem_l = np.array([r[1] for r in rows], dtype=np.int64)
+    return mem_f, mem_l, np.array(caps), nflows, nlinks
+
+
+class TestUniformWeightsPin:
+    @settings(max_examples=60, deadline=None)
+    @given(_random_matrix())
+    def test_uniform_weights_byte_identical_to_unweighted(self, m):
+        """The satellite property test: ones == None, byte-for-byte."""
+        mem_f, mem_l, caps, nflows, nlinks = m
+        unweighted = _max_min_rates_arrays(mem_f, mem_l, caps, nflows, nlinks)
+        uniform = _max_min_rates_arrays(
+            mem_f, mem_l, caps, nflows, nlinks, np.ones(nflows)
+        )
+        assert np.array_equal(unweighted, uniform)  # exact, not approx
+
+    def test_uniform_pin_on_routed_collective(self):
+        """End-to-end pin: a real routed collective's report is bit-identical
+        whether weights are absent or explicitly uniform."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = all_to_all_flows(list(fabric.hosts), 50_000_000)
+        _, paths = route_flows_with_paths(fabric, flows)
+        matrix = build_link_load_matrix(fabric, netem, paths)
+        nb = [f.nbytes for f in flows]
+        a = congestion_report(matrix, nb)
+        b = congestion_report(matrix, nb, np.ones(len(flows)))
+        assert np.array_equal(a.rates_gbps, b.rates_gbps)
+        assert np.array_equal(a.completion_s, b.completion_s)
+        assert np.array_equal(a.throughput_gbps, b.throughput_gbps)
+
+    def test_collision_free_batch_weights_are_uniform(self):
+        """Spread ports -> no slot collisions -> the derived vector is all
+        ones, so the weighted model degenerates to the unweighted one."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        for stride in range(211, 1000):
+            flows = [
+                _flow("d1h1", "d2h1", port=50_000 + stride * i) for i in range(3)
+            ]
+            _, paths = route_flows_with_paths(fabric, flows)
+            if np.all(paths.slot_occ == 1):
+                break
+        else:
+            pytest.fail("no collision-free port triple in the search range")
+        assert np.array_equal(ecmp_flow_weights(paths), np.ones(3))
+        f2 = Fabric()
+        _, unweighted = route_and_analyze(f2, netem, flows)
+        _, weighted = route_and_analyze(f2, netem, flows, ecmp_weighted=True)
+        assert np.array_equal(unweighted.rates_gbps, weighted.rates_gbps)
+
+    def test_rejects_bad_weights(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = [_flow("d1h1", "d2h1")]
+        _, paths = route_flows_with_paths(fabric, flows)
+        matrix = build_link_load_matrix(fabric, netem, paths)
+        with pytest.raises(ValueError):
+            max_min_rates(matrix, np.zeros(1))
+        with pytest.raises(ValueError):
+            max_min_rates(matrix, np.ones(5))
+
+
+def _colliding_and_clean_flows(fabric):
+    """Two identical-5-tuple flows plus one distinct-port flow that the
+    hash sends down the *same* path (shared WAN bottleneck, own slot)."""
+    a = _flow("d1h1", "d2h1", port=50_000)
+    _, ref = route_flows_with_paths(fabric, [a])
+    ref_links = ref.flow_links(0)
+    for port in range(50_001, 56_000):
+        c = _flow("d1h1", "d2h1", port=port)
+        _, paths = route_flows_with_paths(fabric, [a, a, c])
+        if paths.flow_links(2) != ref_links:
+            continue  # different ECMP path: no shared bottleneck
+        occ = paths.slot_occ
+        lo, hi = int(paths.ptr[2]), int(paths.ptr[3])
+        if np.all(occ[lo:hi] == 1):  # c kept its own hash slot everywhere
+            return [a, a, c], paths
+    pytest.fail("no clean same-path port found in the search range")
+
+
+class TestHashSkewWeights:
+    def test_slot_occupancy_recorded_for_identical_tuples(self):
+        fabric = Fabric()
+        a = _flow("d1h1", "d2h1")
+        _, paths = route_flows_with_paths(fabric, [a, a])
+        # ECMP hops (leaf->spine, spine->WAN-spine) see both flows in one
+        # slot; host-attach and fan-1 hops stay at occupancy 1
+        assert int(paths.slot_occ.max()) == 2
+        assert np.array_equal(ecmp_flow_weights(paths), [0.5, 0.5])
+
+    def test_zero_byte_flows_occupy_no_hash_slot(self):
+        """A zero-byte chunk flow transmits nothing, so it must not count
+        as a slot collider: a live flow sharing its bucket with only a
+        zero-byte ghost keeps weight 1.0 (same convention as the
+        allocators, which drain zero-byte flows for free)."""
+        fabric = Fabric()
+        live = _flow("d1h1", "d2h1")
+        ghost = _flow("d1h1", "d2h1", nbytes=0)  # identical tuple: same slot
+        _, paths = route_flows_with_paths(fabric, [live, ghost])
+        w = ecmp_flow_weights(paths)
+        assert w[0] == 1.0
+        # two live identical-tuple flows still collide
+        _, paths2 = route_flows_with_paths(fabric, [live, live, ghost])
+        assert np.array_equal(ecmp_flow_weights(paths2)[:2], [0.5, 0.5])
+
+    def test_two_flow_hash_collision_halves_rate(self):
+        """The ISSUE's skew case: two flows colliding into one uplink slot
+        each run at half the rate of the uncollided flow sharing their
+        bottleneck link — and the unweighted model can't see it."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows, paths = _colliding_and_clean_flows(fabric)
+        assert np.allclose(ecmp_flow_weights(paths), [0.5, 0.5, 1.0])
+        _, unweighted = route_and_analyze(fabric, netem, flows)
+        _, weighted = route_and_analyze(fabric, netem, flows, ecmp_weighted=True)
+        # unweighted: strict thirds of the 0.8 Gbit/s WAN bottleneck
+        assert unweighted.rates_gbps == pytest.approx(np.full(3, 0.8 / 3))
+        # weighted: the collided pair at 0.2 each, the clean flow at 0.4 —
+        # the collision halves per-flow rate relative to the clean flow
+        assert weighted.rates_gbps == pytest.approx([0.2, 0.2, 0.4])
+        assert weighted.rates_gbps[0] == pytest.approx(
+            weighted.rates_gbps[2] / 2
+        )
+        # the saturated WAN link still carries exactly its capacity
+        assert weighted.effective_wan_gbps == pytest.approx(0.8)
+
+    def test_weighted_never_overallocates(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = all_to_all_flows(list(fabric.hosts), 40_000_000)
+        _, report = route_and_analyze(fabric, netem, flows, ecmp_weighted=True)
+        assert np.all(
+            report.throughput_gbps <= report.capacity_gbps * (1 + 1e-9)
+        )
+        assert report.effective_wan_gbps == pytest.approx(0.8, rel=1e-6)
+
+    def test_weighted_rates_proportional_on_shared_bottleneck(self):
+        """On one saturated link, frozen-at-that-link flows' rates are
+        proportional to their weights."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows, _ = _colliding_and_clean_flows(fabric)
+        _, report = route_and_analyze(fabric, netem, flows, ecmp_weighted=True)
+        w = report.weights
+        assert report.rates_gbps / w == pytest.approx(
+            np.full(3, report.rates_gbps[2] / w[2])
+        )
+
+
+class TestWeightedPipelines:
+    def test_simulate_schedule_single_phase_matches_static(self):
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = ring_allreduce_flows(sorted(fabric.hosts), 64_000_000)
+        schedule = CollectiveSchedule.single("ring", flows)
+        rep = simulate_schedule(fabric, netem, schedule, ecmp_weighted=True)
+        _, ref = route_and_analyze(fabric, netem, flows, ecmp_weighted=True)
+        assert rep.seconds == ref.seconds
+        assert np.array_equal(rep.completion_s, ref.completion_s)
+        assert np.array_equal(rep.weights, ref.weights)
+
+    def test_event_loop_threads_weights(self):
+        """Forcing the event loop (trailing flowless phase) stays within
+        float noise of the weighted static model."""
+        from repro.core.schedule import Phase
+
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = ring_allreduce_flows(sorted(fabric.hosts), 64_000_000)
+        fast = simulate_schedule(
+            fabric,
+            netem,
+            CollectiveSchedule.single("p", flows),
+            ecmp_weighted=True,
+        )
+        looped = simulate_schedule(
+            fabric,
+            netem,
+            CollectiveSchedule("p2", (Phase("p", flows), Phase("end", deps=("p",)))),
+            ecmp_weighted=True,
+        )
+        assert looped.seconds == pytest.approx(fast.seconds, rel=1e-6)
+
+    def test_sync_cost_surfaces_weighted_utilization(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=4, seed=0)
+        plain = geo.sync_cost(
+            "allreduce", 100_000_000, jitter=False, congestion=True
+        )
+        weighted = geo.sync_cost(
+            "allreduce",
+            100_000_000,
+            jitter=False,
+            congestion=True,
+            ecmp_weighted=True,
+        )
+        assert weighted.wan_bytes == plain.wan_bytes  # same routed flows
+        assert 0.0 < weighted.bottleneck_utilization <= 1.0 + 1e-9
+        # weighting can slow the slowest flow but never speeds it up
+        assert weighted.wan_seconds >= plain.wan_seconds * (1 - 1e-9)
