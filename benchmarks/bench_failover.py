@@ -5,6 +5,13 @@ Paper: BFD (10 ms x 3) recovers in ~110 ms; default BGP hold timers take
 link, and reports the training-layer recovery economics (the TPU-side
 adaptation, runtime/failure.py).
 
+Thin wrapper over the scenario library (ISSUE 5): the scaled topology
+(``SCALED8``), the deterministic flap scripts (``storm_events`` /
+``evpn_storm_events``) and the storm gradient volume live in
+``repro.scenario.library``; this module keeps only the measurement harness
+(incremental vs full-invalidation timing, byte-identity checks) and a
+scenario-driven recovery row.
+
 Beyond the paper's 2-DC scale (ISSUE 2 tentpole): an 8-DC BFD flap storm
 with >=10k live flows compares the fabric's incremental re-convergence
 (link->destination dependency index + in-place next-hop-table patches)
@@ -28,56 +35,22 @@ from typing import List, Tuple
 
 from repro.core.bfd import FailureDetector
 from repro.core.evpn import EvpnControlPlane
-from repro.core.fabric import Fabric, FabricConfig
+from repro.core.fabric import Fabric
 from repro.core.flows import all_to_all_flows, ring_allreduce_flows, route_flows_batched
 from repro.core.wan import Netem, WanTimingModel
 from repro.runtime.failure import plan_recovery
+from repro.scenario import get_scenario, run_scenario
+from repro.scenario.library import (
+    SCALED8,
+    STORM_GRAD_BYTES,
+    evpn_storm_events as _evpn_storm_events,
+    storm_events as _storm_events,
+)
 
 from .common import BenchRow, timed
 
-#: 8-DC scaled fabric for the flap storm: 32 spines, 32 leaves, 64 hosts,
-#: 28 DC pairs x 16 spine-pair WAN links = 448 WAN links.
-SCALED8 = FabricConfig(
-    num_dcs=8,
-    spines_per_dc=4,
-    leaves_per_dc=4,
-    hosts_per_leaf=tuple(tuple(2 for _ in range(4)) for _ in range(8)),
-)
-
-STORM_GRAD_BYTES = 16_000_001
 MIN_STORM_SPEEDUP = 10.0
 MAX_EVPN_TOUCHED_FRAC = 0.20
-
-
-def _storm_events(fabric: Fabric) -> List[Tuple[str, Tuple[str, str]]]:
-    """Deterministic BFD-cadence flap schedule: isolated WAN flaps spread
-    over the DC pairs, one correlated burst (3 of d1s1's 4 links toward
-    DC2), and a leaf-spine flap; a few links stay down at the end."""
-    wan = sorted(tuple(sorted(l)) for l in fabric.wan_links)
-    events: List[Tuple[str, Tuple[str, str]]] = []
-    for k in range(8):
-        link = wan[(k * 53) % len(wan)]
-        events.append(("fail", link))
-        events.append(("restore", link))
-    burst = [l for l in wan if l[0] == "d1s1" and l[1].startswith("d2s")]
-    for link in burst[:3]:
-        events.append(("fail", link))
-    for link in burst[:2]:
-        events.append(("restore", link))
-    events.append(("fail", ("d3l2", "d3s1")))
-    return events
-
-
-def _evpn_storm_events(fabric: Fabric) -> List[Tuple[str, Tuple[str, str]]]:
-    """The data-plane storm plus a leaf-isolation episode: d5l1 loses all
-    four uplinks one BFD flap at a time (only the fourth partitions the
-    BGP session graph), then gets them back — the only event class whose
-    EVPN blast radius is non-empty."""
-    events = list(_storm_events(fabric))
-    uplinks = [("d5l1", f"d5s{j}") for j in range(1, 5)]
-    events += [("fail", link) for link in uplinks]
-    events += [("restore", link) for link in uplinks]
-    return events
 
 
 def _learned_control_plane(fabric: Fabric) -> EvpnControlPlane:
@@ -333,6 +306,28 @@ def run() -> List[BenchRow]:
             f"EVPN incremental resync touched {100 * mean_frac:.1f}% of VTEPs "
             f"on average, gate is <{100 * MAX_EVPN_TOUCHED_FRAC:.0f}%"
         )
+
+    # -- the storm as a declarative scenario (ISSUE 5) -----------------------
+    storm = run_scenario(get_scenario("bfd_flap_storm"))
+    assert len(storm.recoveries) == 12, len(storm.recoveries)
+    mean_rec = sum(t.recovery_ms for t in storm.recoveries) / len(storm.recoveries)
+    rows.append(
+        BenchRow(
+            name="scenario_bfd_flap_storm",
+            us_per_call=0.0,
+            derived=(
+                f"{len(storm.steps)} storm steps via run_scenario: "
+                f"{len(storm.recoveries)} recoveries (mean {mean_rec:.0f}ms), "
+                f"{len(storm.evpn_resyncs)} EVPN resyncs (mean touched "
+                f"{100 * storm.evpn_mean_touched_frac:.1f}%), leader sync "
+                f"{storm.mean_step_seconds:.3f}s/step through the storm"
+            ),
+            metrics={
+                "storm_mean_recovery_ms": mean_rec,
+                "storm_mean_step_seconds": storm.mean_step_seconds,
+            },
+        )
+    )
 
     # -- flow-level congestion model: effective spine-WAN throughput (§5.5) --
     cfab = Fabric()

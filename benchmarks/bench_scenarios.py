@@ -1,0 +1,127 @@
+"""Scenario-library suite: every named scenario, executed and gated.
+
+ISSUE 5 satellite: runs each entry of ``repro.scenario.library`` through
+``run_scenario`` and emits its deterministic ``ScenarioResult.metrics()``
+as gated ``BenchRow.metrics`` — wired into ``benchmarks/run.py`` and the
+``benchmarks/compare.py`` baseline gate (``BENCH_scenarios.json``), so a
+regression in any library study fails CI exactly like the hand-written
+suites.
+
+Cross-scenario gates (the study conclusions, not just the numbers):
+
+* ``rs_ag_overlap`` strictly beats ``rs_then_ag`` (pipelining wins on
+  shared WAN bottlenecks);
+* the ``compute_overlap`` sweep is monotone non-increasing in the overlap
+  fraction;
+* ``ecmp_collision``: at the paper's sensitive 4-channel regime the
+  ``qp_aware`` allocator prices strictly below ``baseline`` under the
+  ECMP-weighted congestion model;
+* ``bfd_flap_storm`` / ``multi_tenant_churn``: every flap produces a
+  recovery timeline / EVPN resync record, and recovery stays in the BFD
+  class (~110 ms), not the BGP class.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.scenario import ScenarioResult, get_scenario, run_scenario, scenario_names
+
+from .common import BenchRow, timed
+
+OVERLAP_FRACTIONS = (0.0, 0.5)  # the full sweep is gated in fig14_training
+
+
+def _row(name: str, result: ScenarioResult, us: float) -> BenchRow:
+    bits = [f"{len(result.steps)} steps"]
+    if result.sync is not None:
+        bits.append(f"sync={result.sync.wan_seconds:.3f}s")
+    if result.recoveries:
+        bits.append(f"{len(result.recoveries)} recoveries")
+    if result.evpn_resyncs:
+        bits.append(
+            f"evpn touched {100 * result.evpn_mean_touched_frac:.1f}%"
+        )
+    return BenchRow(
+        name=f"scenario_{name}",
+        us_per_call=us,
+        derived=" ".join(bits) + f" | {result.scenario.description[:60]}",
+        metrics=result.metrics(),
+    )
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+    results: Dict[str, ScenarioResult] = {}
+    for name in scenario_names():
+        if name == "compute_overlap":
+            for frac in OVERLAP_FRACTIONS:
+                key = f"compute_overlap_f{int(frac * 100):02d}"
+                results[key], us = timed(
+                    lambda f=frac: run_scenario(
+                        get_scenario("compute_overlap", overlap_fraction=f)
+                    )
+                )
+                rows.append(_row(key, results[key], us))
+        elif name == "ecmp_collision":
+            for scheme in ("baseline", "qp_aware"):
+                key = f"ecmp_collision_{scheme}"
+                results[key], us = timed(
+                    lambda s=scheme: run_scenario(
+                        get_scenario("ecmp_collision", port_scheme=s)
+                    )
+                )
+                rows.append(_row(key, results[key], us))
+        else:
+            results[name], us = timed(
+                lambda n=name: run_scenario(get_scenario(n))
+            )
+            rows.append(_row(name, results[name], us))
+
+    # -- study-conclusion gates ----------------------------------------------
+    overlap = results["rs_ag_overlap"].sync.wan_seconds
+    serial = results["rs_then_ag"].sync.wan_seconds
+    if not overlap < serial:
+        raise AssertionError(
+            f"rs_ag_overlap ({overlap:.3f}s) must beat rs_then_ag ({serial:.3f}s)"
+        )
+    f0 = results["compute_overlap_f00"].steps[0].seconds
+    f50 = results["compute_overlap_f50"].steps[0].seconds
+    if f50 > f0 + 1e-9:
+        raise AssertionError(f"overlap must not slow steps: f=0 {f0:.3f}s f=0.5 {f50:.3f}s")
+    base = results["ecmp_collision_baseline"].sync.wan_seconds
+    qp = results["ecmp_collision_qp_aware"].sync.wan_seconds
+    if not qp < base:
+        raise AssertionError(
+            f"qp_aware ({qp:.3f}s) must price below baseline ({base:.3f}s) "
+            "at the 4-channel collision regime"
+        )
+    storm = results["bfd_flap_storm"]
+    n_fail = sum(
+        1 for e in storm.scenario.events if e.kind == "fail_link"
+    )
+    if len(storm.recoveries) != n_fail:
+        raise AssertionError("every storm failure must produce a recovery timeline")
+    mean_rec = sum(t.recovery_ms for t in storm.recoveries) / len(storm.recoveries)
+    if not mean_rec < 1000.0:
+        raise AssertionError(f"BFD-class recovery expected, got {mean_rec:.0f}ms")
+    churn = results["multi_tenant_churn"]
+    if not churn.evpn_resyncs:
+        raise AssertionError("churn scenario must surface EvpnResyncStats")
+    rows.append(
+        BenchRow(
+            name="scenario_gates",
+            us_per_call=0.0,
+            derived=(
+                f"overlap {overlap:.3f}<{serial:.3f} serial | overlap sweep "
+                f"monotone ({f0:.2f}->{f50:.2f}s) | ecmp qp_aware {qp:.3f}"
+                f"<{base:.3f} baseline | storm mean recovery {mean_rec:.0f}ms "
+                f"(BFD class) | churn resyncs {len(churn.evpn_resyncs)}"
+            ),
+            metrics={
+                "overlap_vs_serial_ratio": overlap / serial,
+                "ecmp_qp_aware_vs_baseline_ratio": qp / base,
+            },
+        )
+    )
+    return rows

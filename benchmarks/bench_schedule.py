@@ -1,5 +1,11 @@
 """CollectiveSchedule gates: overlapped sync costing + simulator overhead.
 
+Thin wrapper over ``repro.scenario`` (ISSUE 5): the serial-vs-pipelined
+ring study is the library's ``rs_then_ag`` / ``rs_ag_overlap`` scenario
+pair, and the compute-overlap row is the ``compute_overlap`` scenario —
+this module keeps the standalone-phase floor computation and the
+event-loop overhead harness (a pure wall-clock measurement, not a study).
+
 Two hard gates for the phased schedule API (ISSUE 3 acceptance):
 
 * **Overlap wins, physically.**  On the 2-DC fabric, where reduce-scatter
@@ -17,8 +23,7 @@ Two hard gates for the phased schedule API (ISSUE 3 acceptance):
   allocation epochs must not change the costing's complexity class.
 
 Plus comparison rows for the hierarchical MoE all-to-all (intra-DC
-dispatch + leader-only WAN combine) against the flat all-to-all, and a
-compute-overlap step-time row exercising the DAG compute phase.
+dispatch + leader-only WAN combine) against the flat all-to-all.
 """
 
 from __future__ import annotations
@@ -28,34 +33,39 @@ from typing import List
 from repro.core.congestion import route_and_analyze, simulate_schedule
 from repro.core.fabric import Fabric
 from repro.core.flows import all_gather_flows, reduce_scatter_flows
-from repro.core.geo import GeoFabric
 from repro.core.schedule import CollectiveSchedule, Phase
 from repro.core.wan import Netem
+from repro.scenario import TopologySpec, get_scenario, run_scenario
+from repro.scenario.library import AR_GRAD_BYTES, CALIBRATED_COMPUTE_S
 
 from .bench_collectives import SCALED
 from .common import BenchRow, timed
 
-GRAD_BYTES = 312_000_000
 MOE_BYTES = 64_000_000
 MAX_SIM_OVERHEAD = 10.0
 
 
 def _overlap_gate(rows: List[BenchRow]) -> None:
-    geo = GeoFabric(num_pods=2, workers_per_pod=2, num_channels=4, seed=3)
-    kw = dict(jitter=False, congestion=True)
-    serial = geo.sync_cost("rs_then_ag", GRAD_BYTES, **kw)
-    overlap = geo.sync_cost("rs_ag_overlap", GRAD_BYTES, **kw)
+    serial_res = run_scenario(get_scenario("rs_then_ag"))
+    overlap_res = run_scenario(get_scenario("rs_ag_overlap"))
+    serial, overlap = serial_res.sync, overlap_res.sync
     # the standalone halves, as single-phase schedules on the same fabric
+    geo = overlap_res.geo
     ctx = geo.strategy_context()
     workers = list(ctx.workers)
     fkw = ctx.flow_kw
+    opts = overlap_res.scenario.options
     rs = geo.sync_cost(
-        CollectiveSchedule.single("rs", reduce_scatter_flows(workers, GRAD_BYTES, **fkw)),
-        **kw,
+        CollectiveSchedule.single(
+            "rs", reduce_scatter_flows(workers, AR_GRAD_BYTES, **fkw)
+        ),
+        options=opts,
     )
     ag = geo.sync_cost(
-        CollectiveSchedule.single("ag", all_gather_flows(workers, GRAD_BYTES, **fkw)),
-        **kw,
+        CollectiveSchedule.single(
+            "ag", all_gather_flows(workers, AR_GRAD_BYTES, **fkw)
+        ),
+        options=opts,
     )
     floor = max(rs.wan_seconds, ag.wan_seconds)
     assert overlap.wan_seconds < serial.wan_seconds, (
@@ -97,8 +107,8 @@ def _simulator_overhead_gate(rows: List[BenchRow]) -> None:
     fabric = Fabric(SCALED)
     netem = Netem(fabric)
     workers = sorted(fabric.hosts)[::4]  # 32 of 128 hosts, spread over DCs
-    rs = reduce_scatter_flows(workers, GRAD_BYTES, num_channels=4)
-    ag = all_gather_flows(workers, GRAD_BYTES, num_channels=4)
+    rs = reduce_scatter_flows(workers, AR_GRAD_BYTES, num_channels=4)
+    ag = all_gather_flows(workers, AR_GRAD_BYTES, num_channels=4)
     schedule = CollectiveSchedule("rs_ag_overlap", (Phase("rs", rs), Phase("ag", ag)))
     # warm the routing tables so both sides time steady-state costing
     route_and_analyze(fabric, netem, rs + ag)
@@ -125,10 +135,12 @@ def _simulator_overhead_gate(rows: List[BenchRow]) -> None:
 
 
 def _moe_rows(rows: List[BenchRow]) -> None:
-    geo = GeoFabric(num_pods=2, workers_per_pod=4, num_channels=4, seed=3)
-    kw = dict(jitter=False, congestion=True)
-    flat = geo.sync_cost("alltoall", MOE_BYTES, **kw)
-    hier = geo.sync_cost("hier_alltoall", MOE_BYTES, **kw)
+    # the MoE pair needs 4 workers per pod: widen the library topology,
+    # keep its costing options
+    opts = get_scenario("rs_then_ag").options
+    moe_geo = TopologySpec(num_pods=2, workers_per_pod=4, num_channels=4, seed=3).build()
+    flat = moe_geo.sync_cost("alltoall", MOE_BYTES, options=opts)
+    hier = moe_geo.sync_cost("hier_alltoall", MOE_BYTES, options=opts)
     wan_flows = "leader-only WAN flows vs per-host WAN flows"
     rows.append(
         BenchRow(
@@ -151,19 +163,20 @@ def _moe_rows(rows: List[BenchRow]) -> None:
 
 
 def _compute_overlap_row(rows: List[BenchRow]) -> None:
-    geo = GeoFabric(num_pods=2, workers_per_pod=2, num_channels=4, seed=3)
-    comm = geo.sync_cost("hier", GRAD_BYTES, jitter=False).wan_seconds
-    compute = 2.2  # the Fig. 14 calibrated compute floor
-    serial = geo.step_time("hier", GRAD_BYTES, compute, overlap_fraction=0.0, jitter=False)
-    full = geo.step_time("hier", GRAD_BYTES, compute, overlap_fraction=1.0, jitter=False)
+    spec0 = get_scenario("compute_overlap", overlap_fraction=0.0)
+    spec1 = get_scenario("compute_overlap", overlap_fraction=1.0)
+    serial = run_scenario(spec0).steps[0].seconds
+    res1 = run_scenario(spec1)
+    full = res1.steps[0].seconds
+    comm = res1.sync.wan_seconds
     rows.append(
         BenchRow(
             name="schedule_compute_overlap_step",
             us_per_call=float(full * 1e6),
             derived=(
-                f"comm={comm:.3f}s compute={compute}s: step f=0 {serial:.3f}s, "
-                f"f=1 {full:.3f}s = max(compute, comm) — comm is never "
-                f"overlapped below its bandwidth floor"
+                f"comm={comm:.3f}s compute={CALIBRATED_COMPUTE_S}s: step f=0 "
+                f"{serial:.3f}s, f=1 {full:.3f}s = max(compute, comm) — comm "
+                f"is never overlapped below its bandwidth floor"
             ),
         )
     )

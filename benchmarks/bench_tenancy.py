@@ -1,4 +1,13 @@
-"""Table 1 reproduction: VNI multi-tenancy reachability matrix.
+"""Table 1 reproduction: VNI multi-tenancy reachability matrix, plus the
+multi-tenant churn study (ROADMAP item, ISSUE 5 satellite).
+
+Thin wrapper over ``repro.scenario`` (ISSUE 5): the Table-1 tenant layout
+is a declarative event script (``tenant_attach`` events at step 0 on the
+paper's Fig. 1 fabric with no default tenant) executed by
+``run_scenario``; the churn study is the library's ``multi_tenant_churn``
+scenario — per-step tenant detach/attach plus a leaf-isolation flap
+episode — whose :class:`repro.core.evpn.EvpnResyncStats` rollups are
+surfaced here as deterministic gated metrics.
 
 Paper host/VNI assignment: d1h1, d1h2, d2h1 on VNI 100; d1h3, d1h5 on
 VNI 200 (plus d2h4 in our richer check); d1h4 on VNI 300.  Intra-VNI
@@ -10,27 +19,43 @@ from __future__ import annotations
 
 from typing import List
 
-from repro.core.evpn import EvpnControlPlane
-from repro.core.fabric import Fabric
-from repro.core.tenancy import TenancyManager
+from repro.core.fabric import FabricConfig
 from repro.core.wan import Netem
+from repro.scenario import (
+    Scenario,
+    ScenarioEvent,
+    TopologySpec,
+    WorkloadSpec,
+    get_scenario,
+    run_scenario,
+)
 
 from .common import BenchRow, timed
 
+#: The paper's Table-1 layout as one declarative spec: no default tenant,
+#: three jobs attached host by host at step 0.
+TABLE1 = Scenario(
+    name="table1_tenancy",
+    topology=TopologySpec(fabric=FabricConfig(), default_tenant=False, seed=1),
+    workload=WorkloadSpec(strategy=None, steps=0),
+    events=tuple(
+        ScenarioEvent(kind="tenant_attach", at_step=0, tenant=t, vni=v, host=h)
+        for t, v, hosts in (
+            ("job-a", 100, ("d1h1", "d1h2", "d2h1")),
+            ("job-b", 200, ("d1h3", "d1h5", "d2h4")),
+            ("job-c", 300, ("d1h4",)),
+        )
+        for h in hosts
+    ),
+    description="Table 1: three jobs on VNIs 100/200/300, isolation matrix.",
+)
+
 
 def run() -> List[BenchRow]:
-    fabric = Fabric()
-    evpn = EvpnControlPlane(fabric)
-    tenancy = TenancyManager(fabric, evpn)
-    netem = Netem(fabric, seed=1)
-    tenancy.create_tenant("job-a", vni=100)
-    tenancy.create_tenant("job-b", vni=200)
-    tenancy.create_tenant("job-c", vni=300)
-    for h in ("d1h1", "d1h2", "d2h1"):
-        tenancy.attach("job-a", h)
-    for h in ("d1h3", "d1h5", "d2h4"):
-        tenancy.attach("job-b", h)
-    tenancy.attach("job-c", "d1h4")
+    result = run_scenario(TABLE1)
+    geo = result.geo
+    tenancy = geo.tenancy
+    netem = Netem(geo.fabric, seed=1)
 
     # the four rows of Table 1
     table = [
@@ -65,4 +90,56 @@ def run() -> List[BenchRow]:
             derived=f"all {n_pairs} ordered pairs verified (intra ok, inter blocked)",
         )
     )
+    rows.extend(_churn_rows())
+    return rows
+
+
+def _churn_rows() -> List[BenchRow]:
+    """Multi-tenant churn through the scenario library: per-event tenant
+    detach/attach on the training tenant plus the d1l3 isolation episode,
+    with the control plane's incremental resync stats gated."""
+    result, us = timed(lambda: run_scenario(get_scenario("multi_tenant_churn")))
+    spec = result.scenario
+    churn_events = [e for e in spec.events if e.kind.startswith("tenant_")]
+    flap_events = [e for e in spec.events if e.kind.endswith("_link")]
+    # the workload must keep syncing through every churn step
+    assert len(result.steps) == spec.workload.steps
+    assert all(s.sync_seconds > 0 for s in result.steps)
+    # churn must not leak state: after the final re-attach + restores the
+    # full isolation matrix still holds
+    result.geo.tenancy.verify_isolation()
+    resyncs = result.evpn_resyncs
+    assert len(resyncs) == len(flap_events), (len(resyncs), len(flap_events))
+    partitions = [s for s in resyncs if s.rebuilt > 0]
+    rows = [
+        BenchRow(
+            name="tenancy_churn_scenario",
+            us_per_call=us,
+            derived=(
+                f"{len(churn_events)} tenant churn events + "
+                f"{len(flap_events)} flaps over {len(result.steps)} steps; "
+                f"sync {result.mean_step_seconds:.3f}s/step; isolation matrix "
+                f"clean after churn"
+            ),
+            metrics={"churn_mean_step_seconds": result.mean_step_seconds},
+        ),
+        BenchRow(
+            name="tenancy_churn_evpn_resync",
+            us_per_call=0.0,
+            derived=(
+                f"EvpnResyncStats over the churn: {len(resyncs)} resyncs, "
+                f"{len(partitions)} with non-empty blast radius "
+                f"(leaf-isolation episode), mean touched "
+                f"{100 * result.evpn_mean_touched_frac:.1f}% of VTEPs, "
+                f"total {sum(s.rebuilt for s in resyncs)} VTEP table rebuilds "
+                f"+ {sum(s.patched for s in resyncs)} RIB patches"
+            ),
+            metrics={
+                "churn_evpn_mean_touched_frac": result.evpn_mean_touched_frac,
+                "churn_evpn_rebuilt_total": float(
+                    sum(s.rebuilt for s in resyncs)
+                ),
+            },
+        ),
+    ]
     return rows

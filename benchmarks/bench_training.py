@@ -1,6 +1,12 @@
 """Fig. 14 reproduction: AllReduce vs Parameter-Server geo-training of
 DistilGPT2-82M over the emulated 800 Mbit/s / 22 ms WAN.
 
+Thin wrapper over the declarative scenario library (ISSUE 5): the
+topology, gradient volumes and costing options come from
+``repro.scenario.library``'s ``fig14_allreduce`` / ``fig14_ps`` /
+``compute_overlap`` entries — this module only adds the Fig-14 statistical
+dressing (per-batch jitter, the PS server-contention band) and the gates.
+
 Per-batch time = gradient computation + synchronization, both from the
 framework itself:
 
@@ -8,46 +14,38 @@ framework itself:
   fwd+bwd+AdamW step, paper batch size) on this host, then scaled by the
   paper's GPU/CPU throughput ratio (documented constant);
 * synchronization — the flow-level contended congestion model over the
-  routed QP flows (``sync_cost(congestion=True)``: max-min fair shares on
-  every link, per-flow path propagation — the same pipeline as the paper's
-  testbed: ring AllReduce crosses the WAN twice; PS pushes+pulls through
-  the DC1 server), with the ideal fluid estimate reported alongside as a
-  per-strategy fluid-vs-contended delta row.
+  routed QP flows (the scenario's ``SyncOptions(congestion=True)``: max-min
+  fair shares on every link, per-flow path propagation — the same pipeline
+  as the paper's testbed: ring AllReduce crosses the WAN twice; PS
+  pushes+pulls through the DC1 server), with the ideal fluid estimate
+  reported alongside as a per-strategy fluid-vs-contended delta row.
 
 Paper observations to match: AllReduce ~5-11 s/batch, PS ~9-18 s/batch,
 PS slower with higher variance; gradient volumes ~312 MB (AR) vs ~459 MB
 (PS).
 
-Beyond the paper (ROADMAP item, ISSUE 4): a schedule-aware sweep over
-``with_compute_overlap`` fractions (0, 0.25, 0.5, 0.75) through the
-event-driven congestion simulator, gated on step time decreasing
-monotonically with the overlap fraction — communication hidden behind
-backprop must never make a step slower.
+Beyond the paper (ROADMAP item, ISSUE 4): the ``compute_overlap`` scenario
+sweep over overlap fractions (0, 0.25, 0.5, 0.75) through the event-driven
+congestion simulator, gated on step time decreasing monotonically with the
+overlap fraction — communication hidden behind backprop must never make a
+step slower.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import List
 
 import numpy as np
 
-from repro.core.geo import GeoFabric
+from repro.scenario import SyncOptions, get_scenario, run_scenario
+from repro.scenario.library import CALIBRATED_COMPUTE_S
 
 from .common import BenchRow
 
-#: DistilGPT2 fp32 gradient volume (paper: ~312 MB with DDP).
-AR_GRAD_BYTES = 312_000_000
-#: PS per-batch volume (paper: ~459 MB: fp32 grads + momentum-carrying pulls).
-PS_GRAD_BYTES = 459_000_000
 BATCHES = 24
 
-
-#: Per-batch gradient-computation floor calibrated to Fig. 14: the paper's
-#: AllReduce minimum (~5 s) minus the modeled minimum sync time (~3.4 s)
-#: gives ~1.6-2.5 s of compute on their (unspecified) trainer hardware; we
-#: use 2.2 s with wide multiplicative jitter matching their bands.
-CALIBRATED_COMPUTE_S = 2.2
 #: Server-side contention multiplier for PS (paper: "bandwidth saturation
 #: and contention at the server node" — Ray object store + 4 concurrent
 #: pushers serializing on one NIC).
@@ -58,7 +56,8 @@ def measure_compute_seconds() -> float:
     """One real train step of the real 82M model on this host (smoke batch).
 
     Reported for transparency; the Fig-14 reproduction uses the calibrated
-    constant above because the paper's trainer hardware is unspecified.
+    ``repro.scenario.library.CALIBRATED_COMPUTE_S`` because the paper's
+    trainer hardware is unspecified.
     """
     import jax
 
@@ -88,7 +87,6 @@ def measure_compute_seconds() -> float:
 
 
 def run() -> List[BenchRow]:
-    geo = GeoFabric(num_pods=2, workers_per_pod=2, num_channels=4, seed=14)
     host_step_s = measure_compute_seconds()
     rows: List[BenchRow] = [
         BenchRow(
@@ -99,9 +97,20 @@ def run() -> List[BenchRow]:
         )
     ]
     results = {}
-    for strategy, nbytes in (("allreduce", AR_GRAD_BYTES), ("ps", PS_GRAD_BYTES)):
-        fluid = geo.sync_cost(strategy, nbytes, jitter=False)
-        contended = geo.sync_cost(strategy, nbytes, jitter=False, congestion=True)
+    geo = None
+    for scenario_name in ("fig14_allreduce", "fig14_ps"):
+        spec = get_scenario(scenario_name)
+        strategy = spec.workload.strategy
+        nbytes = spec.workload.grad_bytes
+        # one warm fabric for the whole figure: both strategies and the
+        # per-batch loop share the seeded jitter RNG stream, as before
+        if geo is None:
+            geo = spec.topology.build()
+        fluid = geo.sync_cost(
+            strategy, nbytes,
+            options=dataclasses.replace(spec.options, congestion=False),
+        )
+        contended = run_scenario(spec, geo=geo).sync
         rows.append(
             BenchRow(
                 name=f"fig14_{strategy}_fluid_vs_contended",
@@ -117,9 +126,10 @@ def run() -> List[BenchRow]:
                 metrics={"contended_sync_seconds": contended.wan_seconds},
             )
         )
+        jittered = dataclasses.replace(spec.options, jitter=True)
         times = []
         for _ in range(BATCHES):
-            cost = geo.sync_cost(strategy, nbytes, jitter=True, congestion=True)
+            cost = geo.sync_cost(strategy, nbytes, options=jittered)
             if strategy == "ps":
                 # stochastic queueing at the server NIC (paper: PS shows
                 # the wider band)
@@ -162,7 +172,7 @@ def run() -> List[BenchRow]:
             },
         )
     )
-    rows.extend(_overlap_sweep_rows(geo))
+    rows.extend(_overlap_sweep_rows())
     return rows
 
 
@@ -170,27 +180,21 @@ def run() -> List[BenchRow]:
 OVERLAP_FRACTIONS = (0.0, 0.25, 0.5, 0.75)
 
 
-def _overlap_sweep_rows(geo: GeoFabric) -> List[BenchRow]:
-    """Step time vs overlap fraction through the event-driven simulator.
+def _overlap_sweep_rows() -> List[BenchRow]:
+    """Step time vs overlap fraction: one ``compute_overlap`` scenario per
+    point, through the event-driven simulator.
 
-    The schedule is the flat AllReduce grafted with the calibrated compute
-    phase (``with_compute_overlap`` DAG structure, not the old scalar
-    discount); the gate demands monotonically non-increasing step times —
-    exposing more of the sync behind backprop can only help — and a strict
+    The gate demands monotonically non-increasing step times — exposing
+    more of the sync behind backprop can only help — and a strict
     end-to-end win since this workload's comm exceeds compute at every
     fraction.
     """
-    steps = {
-        frac: geo.step_time(
-            "allreduce",
-            AR_GRAD_BYTES,
-            CALIBRATED_COMPUTE_S,
-            overlap_fraction=frac,
-            jitter=False,
-            congestion=True,
-        )
-        for frac in OVERLAP_FRACTIONS
-    }
+    steps = {}
+    for frac in OVERLAP_FRACTIONS:
+        spec = get_scenario("compute_overlap", overlap_fraction=frac)
+        # jitter-free sweep: every point is a deterministic spec evaluation
+        spec = dataclasses.replace(spec, options=SyncOptions(jitter=False, congestion=True))
+        steps[frac] = run_scenario(spec).steps[0].seconds
     for lo, hi in zip(OVERLAP_FRACTIONS, OVERLAP_FRACTIONS[1:]):
         if steps[hi] > steps[lo] + 1e-9:
             raise AssertionError(

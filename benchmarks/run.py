@@ -28,6 +28,7 @@ SUITES = (
     ("fig14_training", "benchmarks.bench_training"),
     ("wan_sync_beyond_paper", "benchmarks.bench_wan_sync"),
     ("schedule_overlap", "benchmarks.bench_schedule"),
+    ("scenarios", "benchmarks.bench_scenarios"),
     ("roofline", "benchmarks.bench_roofline"),
 )
 

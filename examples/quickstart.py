@@ -1,32 +1,51 @@
 """Quickstart: the whole stack in ~60 seconds on CPU.
 
-1. Build the emulated 2-DC EVPN-VXLAN fabric, ping across the WAN.
+1. Declare the experiment once — a ``repro.scenario.Scenario`` carries the
+   topology, the workload and the costing options; build the emulated 2-DC
+   EVPN-VXLAN fabric from it and ping across the WAN.
 2. Allocate queue-pair source ports both ways (Algorithm 1 vs stock RXE).
 3. Cost every registered WAN sync schedule (paper strategies + phased/
    overlapped ones) for a real model's gradients under the event-driven
-   congestion model, with per-phase timelines for multi-phase schedules.
-4. Train a smoke-scale model for a few steps with the geo trainer.
+   congestion model by editing the scenario's workload — per-phase
+   timelines for multi-phase schedules.
+4. Train a smoke-scale model for a few steps with the geo trainer, driven
+   by the same scenario spec.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
 
-import jax
+import dataclasses
 
 from repro.configs import get_smoke_config
 from repro.core import (
-    GeoFabric,
     allocate_ports,
     make_correlated_queue_pairs,
     strategy_names,
 )
 from repro.launch.mesh import make_host_mesh
-from repro.launch.shapes import params_specs
 from repro.runtime import GeoTrainer, TrainerConfig
+from repro.scenario import (
+    Scenario,
+    SyncOptions,
+    TopologySpec,
+    WorkloadSpec,
+    run_scenario,
+)
+
+#: The whole experiment as one declarative spec: 2 DCs x 2 workers, the
+#: smoke model's gradients, contended congestion costing, 20 train steps.
+QUICKSTART = Scenario(
+    name="quickstart",
+    topology=TopologySpec(num_pods=2, workers_per_pod=2, seed=0),
+    workload=WorkloadSpec(strategy="allreduce", grad_bytes=0, steps=20),
+    options=SyncOptions(jitter=False, congestion=True),
+    description="The README's 60-second tour, as a spec.",
+)
 
 
 def main() -> None:
-    # -- 1. fabric -----------------------------------------------------------
-    geo = GeoFabric(num_pods=2, workers_per_pod=2, seed=0)
+    # -- 1. fabric, from the spec --------------------------------------------
+    geo = QUICKSTART.topology.build()
     rtt = geo.rtt_ms(count=20)
     print(f"[fabric] 2 DCs up; inter-DC RTT {rtt.mean():.1f} ms (paper ~22 ms)")
 
@@ -37,14 +56,22 @@ def main() -> None:
     print(f"[ports] stock RXE:   {sorted(base)} ({len(set(base))} distinct)")
     print(f"[ports] Algorithm 1: {sorted(ours)} ({len(set(ours))} distinct)")
 
-    # -- 3. WAN sync costing --------------------------------------------------
+    # -- 3. WAN sync costing: one spec edit per strategy ----------------------
+    # (a paper-scale spec would just say WorkloadSpec(model="distilgpt2-82m");
+    # the smoke config derives its reduced gradient volume here)
+    import jax
+
+    from repro.launch.shapes import params_specs
+
     cfg = get_smoke_config("distilgpt2-82m")
-    grad_bytes = sum(
-        s.size * 4 for s in jax.tree.leaves(params_specs(cfg))
-    )
+    grad_bytes = sum(s.size * 4 for s in jax.tree.leaves(params_specs(cfg)))
     print(f"[sync]  gradient volume {grad_bytes / 1e6:.1f} MB across the WAN:")
     for strategy in strategy_names():
-        c = geo.sync_cost(strategy, grad_bytes, jitter=False, congestion=True)
+        spec = dataclasses.replace(
+            QUICKSTART,
+            workload=WorkloadSpec(strategy=strategy, grad_bytes=grad_bytes, steps=1),
+        )
+        c = run_scenario(spec, geo=geo).sync
         phased = (
             " | ".join(f"{p.name} {p.duration_s * 1e3:.1f}ms" for p in c.phases)
             if len(c.phases) > 1
@@ -54,16 +81,15 @@ def main() -> None:
               f"({c.wan_bytes / 1e6:6.1f} MB on WAN links)"
               + (f"  [{phased}]" if phased else ""))
 
-    # -- 4. train -------------------------------------------------------------
+    # -- 4. train: the trainer consumes the same scenario ---------------------
     from repro.optim import AdamWConfig
 
     trainer = GeoTrainer(
         cfg, make_host_mesh(),
-        trainer_cfg=TrainerConfig(seq_len=64, global_batch=4, steps=20,
-                                  strategy="allreduce", log_every=5,
+        trainer_cfg=TrainerConfig(seq_len=64, global_batch=4, log_every=5,
                                   opt=AdamWConfig(lr=2e-3, warmup_steps=2, total_steps=400)),
         checkpoint_dir="/tmp/repro_quickstart_ckpt",
-        geo=geo,
+        scenario=QUICKSTART,
     )
     result = trainer.run()
     losses = [m["loss"] for m in result["metrics"]]

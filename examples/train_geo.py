@@ -6,8 +6,10 @@ checkpoints, BFD-style heartbeats, straggler monitor — under a chosen WAN
 sync strategy, and reports the per-step WAN economics from the emulated
 EVPN-VXLAN fabric alongside the training curve.
 
-Default is a few hundred steps of the reduced config (CPU-friendly);
-``--paper-scale`` trains the real 82M model.
+The experiment is one declarative ``repro.scenario.Scenario`` (topology +
+workload + costing options) handed to the trainer; the CLI flags are spec
+edits.  Default is a few hundred steps of the reduced config
+(CPU-friendly); ``--paper-scale`` trains the real 82M model.
 
 Run:  PYTHONPATH=src python examples/train_geo.py --steps 200
       PYTHONPATH=src python examples/train_geo.py --paper-scale --steps 30
@@ -18,11 +20,11 @@ Run:  PYTHONPATH=src python examples/train_geo.py --steps 200
 import argparse
 
 from repro.configs import get_config, get_smoke_config
-from repro.core.geo import GeoFabric
 from repro.core.schedule import SYNC_STRATEGIES
 from repro.launch.mesh import make_host_mesh
 from repro.runtime import GeoTrainer, TrainerConfig
 from repro.optim import AdamWConfig
+from repro.scenario import Scenario, SyncOptions, TopologySpec, WorkloadSpec
 
 
 def main() -> None:
@@ -40,19 +42,24 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_config("distilgpt2-82m") if args.paper_scale else get_smoke_config("distilgpt2-82m")
-    geo = GeoFabric(num_pods=2, workers_per_pod=2, seed=0)
+    scenario = Scenario(
+        name="train_geo",
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, seed=0),
+        workload=WorkloadSpec(strategy=args.strategy, steps=args.steps),
+        options=SyncOptions(jitter=False),
+        description="Fig-14-style geo training, declaratively specified.",
+    )
     trainer = GeoTrainer(
         cfg, make_host_mesh(),
         trainer_cfg=TrainerConfig(
             seq_len=args.seq_len,
             global_batch=args.global_batch,
             steps=args.steps,
-            strategy=args.strategy,
             log_every=max(args.steps // 20, 1),
             opt=AdamWConfig(lr=3e-4, warmup_steps=20, total_steps=args.steps),
         ),
         checkpoint_dir=args.checkpoint_dir,
-        geo=geo,
+        scenario=scenario,
     )
     result = trainer.run(inject_failure_at=args.inject_failure_at)
     losses = [m["loss"] for m in result["metrics"]]

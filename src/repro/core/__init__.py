@@ -29,6 +29,7 @@ from .congestion import (
     PhaseTiming,
     ScheduleReport,
     build_link_load_matrix,
+    concurrent_ecmp_flow_weights,
     congestion_report,
     ecmp_flow_weights,
     max_min_rates,
@@ -61,7 +62,7 @@ from .flows import (
     route_flows_with_paths,
     split_bytes,
 )
-from .geo import GeoFabric, SyncCost
+from .geo import GeoFabric, SyncCost, SyncOptions
 from .schedule import (
     SYNC_STRATEGIES,
     CollectiveSchedule,
@@ -132,6 +133,7 @@ __all__ = [
     "ScheduleReport",
     "StrategyContext",
     "SyncCost",
+    "SyncOptions",
     "TenancyManager",
     "Tenant",
     "TPU_DCI",
@@ -145,6 +147,7 @@ __all__ = [
     "collision_index",
     "collision_reduction",
     "compare_schemes",
+    "concurrent_ecmp_flow_weights",
     "congestion_report",
     "ecmp_flow_weights",
     "ecmp_hash",

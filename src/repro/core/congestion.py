@@ -78,7 +78,9 @@ class LinkLoadMatrix:
 
     ``slot_occ`` (row-aligned) carries the recorded ECMP hash-slot
     occupancy of each traversal when the paths were recorded by the
-    batched router (ones when unavailable) — see
+    batched router (ones when unavailable); ``slot_key`` the slot
+    *identity* of each ECMP traversal (-1 for non-ECMP hops), letting
+    occupancy be recounted over flow subsets — see
     :class:`repro.core.fabric.FlowPaths`.
     """
 
@@ -91,6 +93,7 @@ class LinkLoadMatrix:
     num_flows: int
     hops_per_flow: np.ndarray  # (F,) int64 links traversed per flow
     slot_occ: Optional[np.ndarray] = None  # (R,) int64 hash-slot occupancy
+    slot_key: Optional[np.ndarray] = None  # (R,) int64 slot identity, -1 = none
 
     @property
     def max_slot_occ(self) -> np.ndarray:
@@ -138,6 +141,7 @@ def build_link_load_matrix(
         num_flows=nflows,
         hops_per_flow=hops.astype(np.int64),
         slot_occ=paths.slot_occ,
+        slot_key=paths.slot_key,
     )
 
 
@@ -164,6 +168,60 @@ def ecmp_flow_weights(paths) -> np.ndarray:
     worst = np.ones(nflows)
     if occ is not None and mem_flow.size:
         np.maximum.at(worst, mem_flow, occ.astype(np.float64))
+    return 1.0 / worst
+
+
+def concurrent_ecmp_flow_weights(
+    matrix: LinkLoadMatrix,
+    flow_phase: np.ndarray,
+    concurrent: np.ndarray,
+    live: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """:func:`ecmp_flow_weights` restricted to concurrently-active phases.
+
+    The whole-batch derivation counts every flow of a routed schedule as a
+    potential slot collider, which over-penalizes phases that never
+    overlap: two serial phases re-using the same 5-tuples land in the same
+    hash slots, yet their flows are never in flight together and the
+    switch pipeline never queues them behind one another.  Here occupancy
+    is recounted from the recorded slot *identities* (``matrix.slot_key``)
+    with a phase filter: flow ``f`` of phase ``p`` counts a same-slot flow
+    ``g`` of phase ``q`` iff ``concurrent[p, q]`` (a
+    :meth:`repro.core.schedule.CollectiveSchedule.concurrency_matrix` —
+    True iff neither phase is a DAG ancestor of the other).
+
+    ``flow_phase`` maps each flow id to its phase index; ``live`` masks
+    flows that actually transmit bytes (zero-byte chunk flows occupy no
+    slot, the routing-time convention).  A single-phase schedule (or an
+    all-True matrix) reproduces :func:`ecmp_flow_weights` for live flows.
+    """
+    nflows = matrix.num_flows
+    worst = np.ones(nflows)
+    keys = matrix.slot_key
+    if keys is None or matrix.mem_flow.size == 0:
+        return worst
+    flow_phase = np.asarray(flow_phase, dtype=np.int64)
+    if flow_phase.shape != (nflows,):
+        raise ValueError(f"flow_phase shape {flow_phase.shape} != ({nflows},)")
+    conc = np.asarray(concurrent, dtype=bool)
+    live = (
+        np.ones(nflows, dtype=bool)
+        if live is None
+        else np.asarray(live, dtype=bool)
+    )
+    valid = keys >= 0
+    rows_f = matrix.mem_flow[valid]
+    rows_p = flow_phase[rows_f]
+    if rows_f.size == 0:
+        return worst
+    uniq, inv = np.unique(keys[valid], return_inverse=True)
+    counts = np.zeros((uniq.size, conc.shape[0]))
+    lr = live[rows_f]
+    np.add.at(counts, (inv[lr], rows_p[lr]), 1.0)
+    # occupancy seen by a row of phase p in slot s: live same-slot flows
+    # of every phase that may run concurrently with p (including itself)
+    occ = np.maximum((counts @ conc.T)[inv, rows_p], 1.0)
+    np.maximum.at(worst, rows_f, occ)
     return 1.0 / worst
 
 
@@ -559,10 +617,13 @@ def simulate_schedule(
     the ``wan_seconds`` the pre-schedule ``sync_cost`` returned) rather
     than within float tolerance of the event loop.
 
-    ``ecmp_weighted=True`` solves every allocation epoch as the *weighted*
-    max-min of :func:`ecmp_flow_weights` — hash-slot collisions recorded
-    while routing the whole schedule batch down-weight the colliding flows
-    in each epoch they are active.
+    ``ecmp_weighted=True`` solves every allocation epoch as a *weighted*
+    max-min: single-phase schedules use the whole-batch
+    :func:`ecmp_flow_weights`; multi-phase schedules use
+    :func:`concurrent_ecmp_flow_weights`, which counts a hash-slot
+    collision only between phases the DAG allows in flight together —
+    serialized phases re-using the same slots are not down-weighted
+    against each other.
     """
     phases = schedule.phases
     flows = schedule.all_flows()
@@ -577,8 +638,21 @@ def simulate_schedule(
         flows, check_reachability=check_reachability
     )
     matrix = build_link_load_matrix(fabric, netem, paths)
-    weights = ecmp_flow_weights(matrix) if ecmp_weighted else None
     nb = np.asarray([f.nbytes for f in flows], dtype=np.float64)
+    weights = None
+    if ecmp_weighted:
+        if schedule.is_single_phase:
+            weights = ecmp_flow_weights(matrix)
+        else:
+            # multi-phase: hash collisions only matter between phases that
+            # can actually be in flight together — serialized phases
+            # re-using the same slots must not down-weight each other
+            flow_phase = np.empty(len(flows), dtype=np.int64)
+            for i, (plo, phi) in enumerate(slices):
+                flow_phase[plo:phi] = i
+            weights = concurrent_ecmp_flow_weights(
+                matrix, flow_phase, schedule.concurrency_matrix(), live=nb > 0
+            )
     nlinks = len(matrix.links)
     link_total = np.bincount(
         matrix.mem_link, weights=nb[matrix.mem_flow], minlength=nlinks

@@ -249,6 +249,29 @@ class EvpnControlPlane:
 
     # -- withdrawal ----------------------------------------------------------
 
+    def withdraw_host(self, host_name: str) -> None:
+        """Withdraw one host's Type-2 MAC/IP routes (tenant detach churn).
+
+        The withdrawn routes also leave the route log, so neither a full
+        :meth:`resync` nor :meth:`resync_incremental` can resurrect them;
+        the host's VNI binding is cleared, making it unreachable until the
+        next :meth:`learn_host`.
+        """
+        host = self.fabric.hosts[host_name]
+
+        def _is_host_route(r: object) -> bool:
+            return (
+                isinstance(r, RouteType2)
+                and r.mac == host.mac
+                and r.ip == host.ip
+            )
+
+        for sp in self.speakers.values():
+            sp.rib = {r for r in sp.rib if not _is_host_route(r)}
+        self._route_log = [r for r in self._route_log if not _is_host_route(r)]
+        host.vni = None
+        self._reimport()
+
     def withdraw_leaf(self, leaf: str) -> None:
         """Withdraw every route originated by ``leaf`` (e.g. leaf isolated).
 

@@ -158,6 +158,11 @@ class FabricConfig:
     hosts_per_leaf: Tuple[Tuple[int, ...], ...] = ((2, 2, 1), (2, 2, 0))
     link_gbps: float = 10.0
     wan_gbps: float = 0.8  # paper measured ~800 Mbit/s effective on spine WAN links
+    #: ECMP member-table bucket space per (switch, destination) group — the
+    #: per-switch realism knob for hash-slot collision modeling (see
+    #: :data:`ECMP_HASH_BUCKETS`, the default matching commodity ASICs).
+    #: Smaller values model cheaper pipelines with denser hash collisions.
+    ecmp_hash_buckets: int = ECMP_HASH_BUCKETS
 
     def validate(self) -> None:
         if len(self.hosts_per_leaf) != self.num_dcs:
@@ -165,6 +170,8 @@ class FabricConfig:
         for dc, per_leaf in enumerate(self.hosts_per_leaf):
             if len(per_leaf) != self.leaves_per_dc:
                 raise ValueError(f"DC{dc + 1}: expected {self.leaves_per_dc} leaf host counts")
+        if self.ecmp_hash_buckets < 1:
+            raise ValueError("ecmp_hash_buckets must be >= 1")
 
 
 @dataclass
@@ -221,12 +228,23 @@ class FlowPaths:
 
     ``slot_occ`` (row-aligned with ``link_u``/``link_v``) is the ECMP
     hash-slot occupancy of each traversal: how many flows of the batch
-    hashed into the same :data:`ECMP_HASH_BUCKETS` bucket of the same
-    member link at that decision point (1 for non-ECMP hops such as host
-    attachments or single-choice forwarding).  Values > 1 are observed
-    hash collisions — the imbalance the weighted congestion model
-    (:func:`repro.core.congestion.ecmp_flow_weights`) turns into per-flow
-    allocation weights.
+    hashed into the same bucket of the same member link at that decision
+    point (bucket space per (switch, destination) group =
+    ``FabricConfig.ecmp_hash_buckets``, default
+    :data:`ECMP_HASH_BUCKETS`; occupancy is 1 for non-ECMP hops such as
+    host attachments or single-choice forwarding).  Values > 1 are
+    observed hash collisions — the imbalance the weighted congestion
+    model (:func:`repro.core.congestion.ecmp_flow_weights`) turns into
+    per-flow allocation weights.
+
+    ``slot_key`` (row-aligned) is the *identity* of the hash slot each
+    ECMP traversal landed in — one integer per (destination group,
+    member link, bucket), ``-1`` for non-ECMP hops.  Two rows share a
+    slot key iff their flows are indistinguishable to that switch's hash
+    pipeline, which is what lets consumers recount occupancy over an
+    arbitrary flow subset (e.g. only the concurrently-active phases of a
+    schedule — :func:`repro.core.congestion.concurrent_ecmp_flow_weights`)
+    without re-routing.
     """
 
     link_u: "np.ndarray"  # (R,) int64 node ids
@@ -234,6 +252,7 @@ class FlowPaths:
     ptr: "np.ndarray"  # (F + 1,) int64 CSR offsets
     nodes: Tuple[str, ...]  # node id -> name
     slot_occ: Optional["np.ndarray"] = None  # (R,) int64 hash-slot occupancy
+    slot_key: Optional["np.ndarray"] = None  # (R,) int64 slot identity, -1 = none
 
     @property
     def num_flows(self) -> int:
@@ -694,6 +713,7 @@ class Fabric:
     ) -> None:
         """Advance every flow bound for ``dst_leaf`` one hop per NumPy step."""
         nh, cnt = self._next_hop_table(dst_leaf)
+        nbuckets = self.config.ecmp_hash_buckets
         uniq_lens = np.unique(lens)
         zmat = np.stack([self._seed_xor_column(int(L)) for L in uniq_lens])
         len_slot = np.searchsorted(uniq_lens, lens)
@@ -718,7 +738,7 @@ class Fabric:
             np.add.at(counters, (ci, pick), nb[active])
             touched[ci, pick] = True
             if rec is not None:
-                bucket = (h % np.uint32(ECMP_HASH_BUCKETS)).astype(np.int64)
+                bucket = (h % np.uint32(nbuckets)).astype(np.int64)
                 grec.append(
                     (flow_ids[active], _hop + 1, ci, pick, bucket, fan,
                      nb[active] > 0)
@@ -741,21 +761,30 @@ class Fabric:
             bg = np.concatenate([g[4] for g in grec])
             fg = np.concatenate([g[5] for g in grec])
             live = np.concatenate([g[6] for g in grec])
-            key = (ug * n + vg) * ECMP_HASH_BUCKETS + bg
+            key = (ug * n + vg) * nbuckets + bg
             _, inv = np.unique(key, return_inverse=True)
             live_counts = np.bincount(inv, weights=live.astype(np.int64))
             occ = np.where(fg > 1, np.maximum(live_counts[inv], 1), 1).astype(
                 np.int64
             )
+            # slot identity: member tables are per (switch, destination
+            # group), so fold the group's egress leaf in; -1 marks fan-1
+            # forwarding, which involves no hash decision and thus no slot.
+            skey = np.where(
+                fg > 1, key + np.int64(dst_id) * (n * n * nbuckets), np.int64(-1)
+            )
             lo = 0
             for ids, seq, ci, pick, _, _, _ in grec:
-                rec.append((ids, seq, ci, pick, occ[lo : lo + ids.size]))
+                rec.append(
+                    (ids, seq, ci, pick, occ[lo : lo + ids.size],
+                     skey[lo : lo + ids.size])
+                )
                 lo += ids.size
         egress = np.full(dst_hosts.size, dst_id)
         np.add.at(counters, (egress, dst_hosts), nb)
         touched[egress, dst_hosts] = True
         if rec is not None:
-            rec.append((flow_ids, self._hop_limit + 2, egress, dst_hosts, None))
+            rec.append((flow_ids, self._hop_limit + 2, egress, dst_hosts, None, None))
 
     def route_flows_batched(
         self,
@@ -836,7 +865,7 @@ class Fabric:
         if not pidx_l:
             paths = (
                 FlowPaths(empty, empty, np.zeros(1, dtype=np.int64),
-                          tuple(self._node_order), empty)
+                          tuple(self._node_order), empty, empty)
                 if collect_paths else None
             )
             return {}, paths
@@ -851,8 +880,9 @@ class Fabric:
         ports = np.asarray(ports_l, dtype=np.int64)
         nb = np.asarray(nb_l, dtype=np.int64)
 
-        # per-flow (flow id, hop seq, u, v, slot occupancy) fragments for
-        # FlowPaths assembly (occupancy None = non-ECMP hop, occupancy 1)
+        # per-flow (flow id, hop seq, u, v, slot occupancy, slot key)
+        # fragments for FlowPaths assembly (occupancy None = non-ECMP hop,
+        # occupancy 1, key -1)
         rec: Optional[List] = [] if collect_paths else None
         nflows = pidx.size
         np.add.at(counters, (cols["src_host"][pidx], cols["src_leaf"][pidx]), nb)
@@ -865,6 +895,7 @@ class Fabric:
                     cols["src_host"][pidx],
                     cols["src_leaf"][pidx],
                     None,
+                    None,
                 )
             )
         same = cols["same_leaf"][pidx]
@@ -874,7 +905,9 @@ class Fabric:
             np.add.at(counters, (cols["dst_leaf"][sp], cols["dst_host"][sp]), nb[si])
             touched[cols["dst_leaf"][sp], cols["dst_host"][sp]] = True
             if rec is not None:
-                rec.append((si, 1, cols["dst_leaf"][sp], cols["dst_host"][sp], None))
+                rec.append(
+                    (si, 1, cols["dst_leaf"][sp], cols["dst_host"][sp], None, None)
+                )
         ri = np.nonzero(~same)[0]
         if ri.size:
             rp = pidx[ri]
@@ -944,10 +977,20 @@ class Fabric:
                     for r in rec
                 ]
             )
+            skey = np.concatenate(
+                [
+                    np.asarray(r[5], dtype=np.int64)
+                    if r[5] is not None
+                    else np.full(len(r[0]), -1, dtype=np.int64)
+                    for r in rec
+                ]
+            )
             sort = np.lexsort((seq, fl))  # group by flow, hop order within
             ptr = np.zeros(nflows + 1, dtype=np.int64)
             np.cumsum(np.bincount(fl, minlength=nflows), out=ptr[1:])
-            paths = FlowPaths(lu[sort], lv[sort], ptr, tuple(order), occ[sort])
+            paths = FlowPaths(
+                lu[sort], lv[sort], ptr, tuple(order), occ[sort], skey[sort]
+            )
         return out, paths
 
     # -- data plane ---------------------------------------------------------

@@ -24,6 +24,7 @@ collectives concentrate WAN traffic on pod leaders.
 
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Tuple, Union
 
@@ -50,6 +51,66 @@ from .wan import (
     WanTimingModel,
     ping_rtt,
 )
+
+
+@dataclass(frozen=True)
+class SyncOptions:
+    """Consolidated costing knobs for :meth:`GeoFabric.sync_cost` /
+    :meth:`GeoFabric.step_time`.
+
+    One value object instead of five orthogonal kwargs threaded through
+    every benchmark and example — the :mod:`repro.scenario` spec carries
+    it verbatim.  Defaults are exactly the historical keyword defaults,
+    and the keyword path stays available: ``sync_cost(s, B, jitter=False)``
+    and ``sync_cost(s, B, options=SyncOptions(jitter=False))`` are pinned
+    bit-for-bit identical (including the jitter RNG stream, which is
+    sampled at the same point either way).
+
+    ``sync_every``/``int8_ratio`` parameterize the strategy *builder*
+    (local-SGD amortization, int8 WAN compression); ``jitter``/
+    ``congestion``/``ecmp_weighted`` select the costing model.
+    """
+
+    sync_every: int = 8
+    int8_ratio: float = 0.25
+    jitter: bool = True
+    congestion: bool = False
+    ecmp_weighted: bool = False
+
+    def __post_init__(self):
+        if self.sync_every < 1:
+            raise ValueError("sync_every must be >= 1")
+        if not 0.0 < self.int8_ratio <= 1.0:
+            raise ValueError("int8_ratio must be in (0, 1]")
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "SyncOptions":
+        return cls(**d)
+
+    @classmethod
+    def merge(cls, options: Optional["SyncOptions"], kwargs: Dict[str, object]) -> "SyncOptions":
+        """Resolve the ``options=`` / legacy-keyword dual API.
+
+        Exactly one of the two may be used per call; mixing them raises
+        (silent precedence would make ``sync_cost(o, jitter=False)`` a
+        footgun), and unknown keywords raise ``TypeError`` just as the old
+        explicit signature did.
+        """
+        if not kwargs:
+            return options if options is not None else cls()
+        if options is not None:
+            raise TypeError(
+                f"pass options=SyncOptions(...) or legacy keywords, not both "
+                f"(got options and {sorted(kwargs)})"
+            )
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = set(kwargs) - fields
+        if unknown:
+            raise TypeError(f"unknown sync option(s): {sorted(unknown)}")
+        return cls(**kwargs)
 
 
 @dataclass
@@ -82,14 +143,23 @@ class GeoFabric:
         num_channels: int = 4,
         port_scheme: str = "qp_aware",
         seed: int = 0,
+        config: Optional[FabricConfig] = None,
+        default_tenant: Optional[str] = "training",
     ):
-        hosts_per_leaf = tuple(
-            tuple(
-                workers_per_pod // 3 + (1 if i < workers_per_pod % 3 else 0) for i in range(3)
+        if config is not None:
+            # raw-topology override (scaled scenario studies): num_pods /
+            # workers_per_pod are derived from the config, not the defaults
+            self.config = config
+            num_pods = config.num_dcs
+        else:
+            hosts_per_leaf = tuple(
+                tuple(
+                    workers_per_pod // 3 + (1 if i < workers_per_pod % 3 else 0)
+                    for i in range(3)
+                )
+                for _ in range(num_pods)
             )
-            for _ in range(num_pods)
-        )
-        self.config = FabricConfig(num_dcs=num_pods, hosts_per_leaf=hosts_per_leaf)
+            self.config = FabricConfig(num_dcs=num_pods, hosts_per_leaf=hosts_per_leaf)
         self.fabric = Fabric(self.config)
         self.evpn = EvpnControlPlane(self.fabric)
         self.tenancy = TenancyManager(self.fabric, self.evpn)
@@ -99,10 +169,12 @@ class GeoFabric:
         self.num_pods = num_pods
         self.num_channels = num_channels
         self.port_scheme = port_scheme
-        # attach every host to the training tenant by default
-        self.tenancy.create_tenant("training", vni=100)
-        for name in sorted(self.fabric.hosts):
-            self.tenancy.attach("training", name)
+        # attach every host to the training tenant by default; tenancy
+        # scenarios pass default_tenant=None and lay out their own VNIs
+        if default_tenant is not None:
+            self.tenancy.create_tenant(default_tenant, vni=100)
+            for name in sorted(self.fabric.hosts):
+                self.tenancy.attach(default_tenant, name)
 
     # -- host roles ----------------------------------------------------------
 
@@ -145,15 +217,18 @@ class GeoFabric:
         strategy: Union[str, CollectiveSchedule],
         grad_bytes: int = 0,
         *,
-        sync_every: int = 8,
-        int8_ratio: float = 0.25,
+        options: Optional[SyncOptions] = None,
+        **kwargs,
     ) -> CollectiveSchedule:
         """Resolve ``strategy`` to a :class:`CollectiveSchedule`.
 
         A string is looked up in the :func:`repro.core.schedule.register_strategy`
         registry and built against this fabric's topology; a schedule
-        object passes through untouched.
+        object passes through untouched.  Builder knobs come from
+        ``options`` (a :class:`SyncOptions`) or the legacy ``sync_every``/
+        ``int8_ratio`` keywords.
         """
+        opts = SyncOptions.merge(options, kwargs)
         if isinstance(strategy, CollectiveSchedule):
             return strategy
         if grad_bytes <= 0:
@@ -164,8 +239,8 @@ class GeoFabric:
             strategy,
             self.strategy_context(),
             grad_bytes,
-            sync_every=sync_every,
-            int8_ratio=int8_ratio,
+            sync_every=opts.sync_every,
+            int8_ratio=opts.int8_ratio,
         )
 
     def sync_cost(
@@ -173,11 +248,8 @@ class GeoFabric:
         strategy: Union[str, CollectiveSchedule],
         grad_bytes: int = 0,
         *,
-        sync_every: int = 8,
-        int8_ratio: float = 0.25,  # fp32 -> int8 + per-block scales
-        jitter: bool = True,
-        congestion: bool = False,
-        ecmp_weighted: bool = False,
+        options: Optional[SyncOptions] = None,
+        **kwargs,
     ) -> SyncCost:
         """Cost one gradient synchronization under ``strategy``.
 
@@ -189,6 +261,12 @@ class GeoFabric:
         :class:`CollectiveSchedule` built directly.  The schedule's phase
         DAG is costed end-to-end; ``SyncCost.phases`` carries the
         per-phase timeline.
+
+        Costing knobs travel in ``options`` (one :class:`SyncOptions`
+        value, the declarative-scenario path) or as the legacy keywords
+        ``sync_every`` / ``int8_ratio`` / ``jitter`` / ``congestion`` /
+        ``ecmp_weighted`` — the two spellings are pinned bit-for-bit
+        identical, including the jitter RNG stream; mixing them raises.
 
         ``congestion=False`` (default) applies the fluid estimate per
         phase — each phase finishes with its most-loaded link, phases
@@ -203,20 +281,21 @@ class GeoFabric:
         ``ecmp_weighted=True`` (congestion branch only) solves *weighted*
         max-min fair shares: the router's recorded hash-slot occupancy
         down-weights hash-collided flows
-        (:func:`repro.core.congestion.ecmp_flow_weights`), and the returned
-        ``bottleneck_utilization`` reflects the weighted allocation.  The
-        default keeps the unweighted model (bit-identical to the
-        historical congestion branch).
+        (:func:`repro.core.congestion.ecmp_flow_weights`; for multi-phase
+        schedules the derivation is restricted to concurrently-active
+        phases — :func:`repro.core.congestion.concurrent_ecmp_flow_weights`),
+        and the returned ``bottleneck_utilization`` reflects the weighted
+        allocation.  The default keeps the unweighted model (bit-identical
+        to the historical congestion branch).
         """
-        schedule = self.build_schedule(
-            strategy, grad_bytes, sync_every=sync_every, int8_ratio=int8_ratio
-        )
-        jit = float(self.netem.rng.uniform(0, 2.0)) if jitter else 0.0
-        if congestion:
+        opts = SyncOptions.merge(options, kwargs)
+        schedule = self.build_schedule(strategy, grad_bytes, options=opts)
+        jit = float(self.netem.rng.uniform(0, 2.0)) if opts.jitter else 0.0
+        if opts.congestion:
             report = self.timing.contended_schedule_time(
                 schedule,
                 check_reachability=self.tenancy.reachable,
-                ecmp_weighted=ecmp_weighted,
+                ecmp_weighted=opts.ecmp_weighted,
             )
             link_bytes = dict(self.fabric.link_bytes)
             seconds = report.seconds + jit / 1e3
@@ -316,9 +395,8 @@ class GeoFabric:
         compute_seconds: float,
         *,
         overlap_fraction: float = 0.0,
-        sync_every: int = 8,
-        int8_ratio: float = 0.25,
-        **kw,
+        options: Optional[SyncOptions] = None,
+        **kwargs,
     ) -> float:
         """Per-step wall time with compute/communication overlap as DAG
         structure.
@@ -333,14 +411,16 @@ class GeoFabric:
         costs ``max(compute, comm)``, not ``compute``.  The comm time left
         exposed beyond compute is amortized by the schedule's
         ``sync_every`` (local-SGD-style strategies).
+
+        Knobs travel in ``options`` (:class:`SyncOptions`) or the legacy
+        keywords, exactly as :meth:`sync_cost`.
         """
-        schedule = self.build_schedule(
-            strategy, grad_bytes, sync_every=sync_every, int8_ratio=int8_ratio
-        )
+        opts = SyncOptions.merge(options, kwargs)
+        schedule = self.build_schedule(strategy, grad_bytes, options=opts)
         overlapped = with_compute_overlap(
             schedule, compute_seconds, overlap_fraction
         )
-        cost = self.sync_cost(overlapped, **kw)
+        cost = self.sync_cost(overlapped, options=opts)
         exposed = max(cost.wan_seconds - compute_seconds, 0.0)
         return compute_seconds + exposed / cost.sync_every
 

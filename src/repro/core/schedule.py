@@ -150,6 +150,30 @@ class CollectiveSchedule:
         """Every flow of every phase, in topological phase order."""
         return [f for p in self.phases for f in p.flows]
 
+    def concurrency_matrix(self) -> "np.ndarray":
+        """(P, P) bool: may phases i and j ever be in flight together?
+
+        Two phases can only coexist when neither is a DAG ancestor of the
+        other — a dependency (direct or transitive) serializes them, so
+        their flows never contend and must not count as ECMP hash-slot
+        colliders against each other
+        (:func:`repro.core.congestion.concurrent_ecmp_flow_weights`).
+        The diagonal is True (a phase always overlaps itself).
+        """
+        import numpy as np  # local: schedule stays numpy-free otherwise
+
+        n = len(self.phases)
+        idx = {p.name: i for i, p in enumerate(self.phases)}
+        anc = np.zeros((n, n), dtype=bool)  # anc[i, j]: i is an ancestor of j
+        for j, p in enumerate(self.phases):  # topological order
+            for d in p.deps:
+                i = idx[d]
+                anc[i, j] = True
+                anc[:, j] |= anc[:, i]
+        conc = ~(anc | anc.T)
+        np.fill_diagonal(conc, True)
+        return conc
+
     @property
     def is_single_phase(self) -> bool:
         """True when the schedule is one flow phase starting at t=0 — the

@@ -50,6 +50,16 @@ class TenancyManager:
         if host not in tenant.hosts:
             tenant.hosts.append(host)
 
+    def detach(self, tenant_name: str, host: str) -> None:
+        """Detach ``host`` from its tenant (the churn counterpart of
+        :meth:`attach`): its Type-2 routes are withdrawn fabric-wide and
+        its VNI binding cleared, so both directions go unreachable."""
+        tenant = self.tenants[tenant_name]
+        if host not in tenant.hosts:
+            raise ValueError(f"{host} is not attached to tenant {tenant_name!r}")
+        self.evpn.withdraw_host(host)
+        tenant.hosts.remove(host)
+
     def reachable(self, src: str, dst: str) -> bool:
         return self.evpn.reachable(src, dst)
 

@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import AsyncCheckpointer, CheckpointStore
-from repro.core.geo import GeoFabric
+from repro.core.geo import GeoFabric, SyncOptions
 from repro.core.schedule import CollectiveSchedule, strategy_names
 from repro.data import loader_for_model
 from repro.distributed import init_train_state, make_train_step
@@ -60,10 +60,39 @@ class GeoTrainer:
         trainer_cfg: TrainerConfig,
         checkpoint_dir: str,
         geo: Optional[GeoFabric] = None,
+        scenario=None,
     ):
         self.cfg = cfg
         self.mesh = mesh
         self.tc = trainer_cfg
+        self.sync_options = SyncOptions(jitter=False)
+        self.scenario = scenario
+        if scenario is not None:
+            # declarative path (repro.scenario.Scenario): the spec supplies
+            # the emulated deployment, the WAN sync strategy/cadence, the
+            # step budget, the costing options, and the event script
+            # (replayed at step boundaries in run()).  The spec's modeling
+            # fields the trainer measures for real — compute_seconds /
+            # overlap_fraction / grad_bytes / model — are not consumed
+            # here; straggler events only scale modeled compute, so they
+            # are skipped too.  Explicit trainer_cfg fields the spec does
+            # not cover (batch shape, optimizer, checkpoint cadence) are
+            # kept as passed.
+            if geo is not None:
+                raise ValueError("pass scenario or geo, not both")
+            geo = scenario.topology.build()
+            wl = scenario.workload
+            if wl.strategy is not None:
+                # the spec is authoritative, including an explicit steps=1
+                self.tc = dataclasses.replace(
+                    self.tc,
+                    strategy=wl.strategy,
+                    num_channels=scenario.topology.num_channels,
+                    steps=wl.steps,
+                )
+            self.sync_options = dataclasses.replace(
+                scenario.options, jitter=False
+            )
         self.geo = geo or GeoFabric(num_pods=max(mesh.shape.get("pod", 1), 1) + (0 if "pod" in mesh.axis_names else 1))
         self.store = CheckpointStore(checkpoint_dir, keep=trainer_cfg.checkpoint_keep)
         self.ckpt = AsyncCheckpointer(self.store)
@@ -139,12 +168,32 @@ class GeoTrainer:
         # keeps the estimate in sync if the step builders grow strategies
         # that have no schedule (or vice versa).
         wan_cost = (
-            self.geo.sync_cost(tc.strategy, self.grad_bytes, jitter=False)
+            self.geo.sync_cost(
+                tc.strategy,
+                self.grad_bytes,
+                options=dataclasses.replace(self.sync_options, jitter=False),
+            )
             if isinstance(tc.strategy, CollectiveSchedule)
             or tc.strategy in strategy_names()
             else None
         )
         recovery_drills = []
+        # scenario event script, replayed at step boundaries (straggler
+        # events scale *modeled* compute only, so the trainer skips them —
+        # its compute is measured for real)
+        events_by_step: Dict[int, list] = {}
+        scenario_rollup = None
+        apply_event = None
+        straggler_noop: Dict[int, float] = {}
+        if self.scenario is not None and self.scenario.events:
+            from repro.scenario.runner import ScenarioResult, apply_event
+
+            scenario_rollup = ScenarioResult(
+                scenario=self.scenario, steps=[], sync=None, geo=self.geo
+            )
+            for ev in self.scenario.events:
+                if ev.kind != "straggler":
+                    events_by_step.setdefault(ev.at_step, []).append(ev)
         t_step_ewma = None
         # simulated heartbeat clock: one beat interval per training step, so
         # detection semantics are step-count-based (detect_mult missed
@@ -153,6 +202,8 @@ class GeoTrainer:
         sim_ms = 0.0
         with self.mesh:
             for step in range(start, tc.steps):
+                for ev in events_by_step.get(step, ()):
+                    apply_event(ev, self.geo, scenario_rollup, straggler_noop)
                 batch = {k: jnp.asarray(v) for k, v in self.loader.next_batch().items()}
                 t0 = time.time()
                 params, state, metrics = self.step_fn(params, state, batch)
@@ -212,5 +263,18 @@ class GeoTrainer:
             "last_checkpoint": last_ckpt,
             "wan_phases": (
                 {p.name: p.duration_s for p in wan_cost.phases} if wan_cost else {}
+            ),
+            "scenario_recoveries": (
+                [
+                    {"mechanism": t.mechanism, "recovery_ms": t.recovery_ms}
+                    for t in scenario_rollup.recoveries
+                ]
+                if scenario_rollup is not None
+                else []
+            ),
+            "scenario_evpn_resyncs": (
+                len(scenario_rollup.evpn_resyncs)
+                if scenario_rollup is not None
+                else 0
             ),
         }

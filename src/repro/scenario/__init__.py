@@ -1,0 +1,49 @@
+"""Declarative Scenario/Experiment API: one spec from topology to metrics.
+
+The experiment surface of the reproduction, consolidated (ISSUE 5): a
+:class:`Scenario` declares the emulated topology, the training workload,
+the costing options (:class:`~repro.core.geo.SyncOptions`) and a timed
+event script (link flaps, tenant churn, stragglers);
+:func:`run_scenario` executes it into a :class:`ScenarioResult` with a
+per-step timeline and ``SyncCost`` / ``RecoveryTimeline`` /
+``EvpnResyncStats`` rollups, JSON-serializable and gate-able by
+``benchmarks/compare.py``.  The named library (:mod:`.library`) ships the
+paper's §5 studies, so a new study is a spec edit::
+
+    from repro.scenario import get_scenario, run_scenario
+
+    result = run_scenario(get_scenario("fig14_allreduce"))
+    print(result.sync.wan_seconds, result.metrics())
+"""
+
+from repro.core.geo import SyncOptions
+from repro.scenario.library import (
+    get_scenario,
+    register_scenario,
+    scenario_names,
+)
+from repro.scenario.runner import ScenarioResult, StepRecord, run_scenario
+from repro.scenario.spec import (
+    EVENT_KINDS,
+    Scenario,
+    ScenarioEvent,
+    TopologySpec,
+    WorkloadSpec,
+    model_grad_bytes,
+)
+
+__all__ = [
+    "EVENT_KINDS",
+    "Scenario",
+    "ScenarioEvent",
+    "ScenarioResult",
+    "StepRecord",
+    "SyncOptions",
+    "TopologySpec",
+    "WorkloadSpec",
+    "get_scenario",
+    "model_grad_bytes",
+    "register_scenario",
+    "run_scenario",
+    "scenario_names",
+]

@@ -1,0 +1,285 @@
+"""Execute a declarative :class:`~repro.scenario.spec.Scenario`.
+
+``run_scenario`` builds the emulated deployment from the spec, replays the
+event script step by step (link flaps through the BFD/BGP failure
+detector — which drives the fabric's incremental re-convergence and the
+EVPN incremental resync — tenant churn through the tenancy manager,
+straggler injection into the compute term), costs every training step with
+the spec's :class:`~repro.core.geo.SyncOptions`, and returns a
+:class:`ScenarioResult`:
+
+* a per-step timeline (modeled seconds, WAN sync seconds, straggler
+  factor, the events that fired);
+* rollups of the three observability records the substrate already emits —
+  :class:`~repro.core.geo.SyncCost` (a deterministic jitter-free
+  representative), :class:`~repro.core.bfd.RecoveryTimeline` per failure,
+  :class:`~repro.core.evpn.EvpnResyncStats` per control-plane resync;
+* ``metrics()`` — the flat deterministic observables the CI baseline gate
+  (``benchmarks/compare.py``) consumes — and ``to_dict()`` — the full
+  JSON-serializable record.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.bfd import RecoveryTimeline
+from repro.core.evpn import EvpnResyncStats
+from repro.core.fabric import RerouteStats
+from repro.core.geo import GeoFabric, SyncCost
+from repro.scenario.spec import Scenario, ScenarioEvent
+
+__all__ = ["ScenarioResult", "StepRecord", "apply_event", "run_scenario"]
+
+
+@dataclass(frozen=True)
+class StepRecord:
+    """One emulated training step of a scenario."""
+
+    step: int
+    seconds: float  # modeled wall time of the step (compute + exposed sync)
+    sync_seconds: float  # the step's WAN sync term (amortized)
+    compute_seconds: float  # compute term after straggler scaling
+    straggler_factor: float
+    events: Tuple[str, ...] = ()  # kinds of the events that fired this step
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["events"] = list(self.events)
+        return d
+
+
+def _sync_cost_dict(c: SyncCost) -> Dict[str, object]:
+    return {
+        "strategy": c.strategy,
+        "wan_seconds": float(c.wan_seconds),
+        "amortized_seconds": float(c.amortized_seconds),
+        "wan_bytes": int(c.wan_bytes),
+        "sync_every": int(c.sync_every),
+        "bottleneck_link": None if c.bottleneck_link is None else list(c.bottleneck_link),
+        "bottleneck_bytes": int(c.bottleneck_bytes),
+        "bottleneck_utilization": float(c.bottleneck_utilization),
+        "load_factor": float(c.load.load_factor),
+        "phases": [
+            {
+                "name": p.name,
+                "start_s": float(p.start_s),
+                "end_s": float(p.end_s),
+                "wan_bytes": int(p.wan_bytes),
+            }
+            for p in c.phases
+        ],
+    }
+
+
+def _recovery_dict(t: RecoveryTimeline) -> Dict[str, object]:
+    return {
+        "mechanism": t.mechanism,
+        "recovery_ms": float(t.recovery_ms),
+        "detect_ms": float(t.detected_at_ms - t.failure_at_ms),
+    }
+
+
+def _resync_dict(s: EvpnResyncStats) -> Dict[str, object]:
+    return {
+        "link": list(s.link),
+        "action": s.action,
+        "patched": s.patched,
+        "rebuilt": s.rebuilt,
+        "retained": s.retained,
+        "vtep_touched_frac": float(s.vtep_touched_frac),
+    }
+
+
+@dataclass
+class ScenarioResult:
+    """Everything one scenario run produced.
+
+    ``geo`` is the live emulated deployment (post-events) so thin bench
+    wrappers can keep probing it; it is deliberately absent from
+    ``to_dict()``.
+    """
+
+    scenario: Scenario
+    steps: List[StepRecord]
+    sync: Optional[SyncCost]  # jitter-free representative sync cost
+    recoveries: List[RecoveryTimeline] = field(default_factory=list)
+    reroutes: List[RerouteStats] = field(default_factory=list)
+    evpn_resyncs: List[EvpnResyncStats] = field(default_factory=list)
+    geo: Optional[GeoFabric] = None
+
+    @property
+    def total_seconds(self) -> float:
+        return float(sum(s.seconds for s in self.steps))
+
+    @property
+    def mean_step_seconds(self) -> float:
+        return self.total_seconds / len(self.steps) if self.steps else 0.0
+
+    @property
+    def evpn_mean_touched_frac(self) -> float:
+        if not self.evpn_resyncs:
+            return 0.0
+        return float(
+            sum(s.vtep_touched_frac for s in self.evpn_resyncs)
+            / len(self.evpn_resyncs)
+        )
+
+    def metrics(self) -> Dict[str, float]:
+        """Deterministic gated observables for ``benchmarks/compare.py``.
+
+        Only seeded model outputs belong here (the compare-gate contract
+        of ``benchmarks/common.py``); wall-clock never does.  Keys follow
+        the direction-by-suffix convention (``*_seconds``/``*_frac`` lower
+        is better, etc.).
+        """
+        out: Dict[str, float] = {}
+        if self.steps:
+            out["total_step_seconds"] = self.total_seconds
+            out["mean_step_seconds"] = self.mean_step_seconds
+        if self.sync is not None:
+            out["sync_wan_seconds"] = float(self.sync.wan_seconds)
+            out["sync_wan_bytes"] = float(self.sync.wan_bytes)
+        if self.recoveries:
+            out["mean_recovery_ms"] = float(
+                sum(t.recovery_ms for t in self.recoveries) / len(self.recoveries)
+            )
+        if self.evpn_resyncs:
+            out["evpn_mean_touched_frac"] = self.evpn_mean_touched_frac
+        return out
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "scenario": self.scenario.to_dict(),
+            "steps": [s.to_dict() for s in self.steps],
+            "sync": None if self.sync is None else _sync_cost_dict(self.sync),
+            "recoveries": [_recovery_dict(t) for t in self.recoveries],
+            "evpn_resyncs": [_resync_dict(s) for s in self.evpn_resyncs],
+            "metrics": self.metrics(),
+            "total_seconds": self.total_seconds,
+        }
+
+
+def apply_event(
+    event: ScenarioEvent,
+    geo: GeoFabric,
+    result: ScenarioResult,
+    straggler: Dict[int, float],
+) -> None:
+    """Apply one :class:`ScenarioEvent` to a live deployment.
+
+    Rollups (recovery timelines, reroute stats, EVPN resyncs) accumulate
+    on ``result``; straggler multipliers accumulate per step index in
+    ``straggler``.  Shared by :func:`run_scenario` and the scenario-driven
+    :class:`repro.runtime.trainer.GeoTrainer`, so both replay an event
+    script with identical semantics.
+    """
+    if event.kind == "fail_link":
+        timeline = geo.detector.fail_and_recover(
+            tuple(event.link), mechanism=event.mechanism
+        )
+        result.recoveries.append(timeline)
+        if timeline.reroute is not None:
+            result.reroutes.append(timeline.reroute)
+        if timeline.evpn_resync is not None:
+            result.evpn_resyncs.append(timeline.evpn_resync)
+    elif event.kind == "restore_link":
+        stats = geo.detector.restore(tuple(event.link))
+        result.reroutes.append(stats)
+        if geo.evpn.last_resync is not None:
+            result.evpn_resyncs.append(geo.evpn.last_resync)
+    elif event.kind == "tenant_attach":
+        if event.tenant not in geo.tenancy.tenants:
+            if event.vni is None:
+                raise ValueError(
+                    f"tenant_attach for new tenant {event.tenant!r} needs a vni"
+                )
+            geo.tenancy.create_tenant(event.tenant, vni=event.vni)
+        geo.tenancy.attach(event.tenant, event.host)
+    elif event.kind == "tenant_detach":
+        geo.tenancy.detach(event.tenant, event.host)
+    elif event.kind == "straggler":
+        for s in range(event.at_step, event.at_step + event.duration_steps):
+            straggler[s] = straggler.get(s, 1.0) * event.slowdown
+    else:  # pragma: no cover - spec validation rejects unknown kinds
+        raise ValueError(f"unknown event kind {event.kind!r}")
+
+
+def run_scenario(
+    scenario: Scenario, *, geo: Optional[GeoFabric] = None
+) -> ScenarioResult:
+    """Execute ``scenario`` and return its :class:`ScenarioResult`.
+
+    ``geo`` overrides the topology build (reuse a warm fabric across a
+    sweep — the spec's topology must describe it).  Steps run in order;
+    each step first fires its events, then costs the training step under
+    the (possibly changed) fabric state.  With ``compute_seconds > 0`` the
+    step is :meth:`GeoFabric.step_time` (compute overlap as DAG
+    structure, straggler factor applied to the compute term); otherwise
+    it is the amortized sync cost alone.  The representative ``sync``
+    rollup is costed jitter-free *before* any event fires, so it is a
+    deterministic healthy-fabric baseline regardless of the event script.
+    """
+    geo = geo if geo is not None else scenario.topology.build()
+    workload = scenario.workload
+    grad_bytes = workload.resolve_grad_bytes()
+    strategy = workload.strategy
+    result = ScenarioResult(scenario=scenario, steps=[], sync=None, geo=geo)
+
+    if strategy is not None:
+        result.sync = geo.sync_cost(
+            strategy,
+            grad_bytes,
+            options=dataclasses.replace(scenario.options, jitter=False),
+        )
+
+    by_step: Dict[int, List[ScenarioEvent]] = {}
+    for e in scenario.events:
+        by_step.setdefault(e.at_step, []).append(e)
+    straggler: Dict[int, float] = {}
+
+    # while no event has touched the fabric and the options are already
+    # jitter-free, every pure-sync step costs exactly the representative
+    # rollup — skip the duplicate congestion solve
+    fabric_pristine = True
+    reusable = result.sync is not None and not scenario.options.jitter
+
+    for step in range(scenario.num_steps):
+        fired = by_step.get(step, ())
+        for event in fired:
+            apply_event(event, geo, result, straggler)
+            fabric_pristine = fabric_pristine and event.kind == "straggler"
+        if strategy is None or step >= workload.steps:
+            continue  # event-only tail (or control-plane-only scenario)
+        factor = straggler.get(step, 1.0)
+        compute = workload.compute_seconds * factor
+        if workload.compute_seconds > 0:
+            seconds = geo.step_time(
+                strategy,
+                grad_bytes,
+                compute,
+                overlap_fraction=workload.overlap_fraction,
+                options=scenario.options,
+            )
+            sync_seconds = max(seconds - compute, 0.0)
+        else:
+            cost = (
+                result.sync
+                if reusable and fabric_pristine
+                else geo.sync_cost(strategy, grad_bytes, options=scenario.options)
+            )
+            sync_seconds = cost.amortized_seconds
+            seconds = sync_seconds
+        result.steps.append(
+            StepRecord(
+                step=step,
+                seconds=float(seconds),
+                sync_seconds=float(sync_seconds),
+                compute_seconds=float(compute),
+                straggler_factor=float(factor),
+                events=tuple(e.kind for e in fired),
+            )
+        )
+    return result

@@ -1,0 +1,322 @@
+"""Declarative experiment specs: one value object from topology to metrics.
+
+The paper's contribution is a *reproducible emulation framework* (§4-§5),
+but ad-hoc studies fragment fast: every benchmark and example used to
+hand-roll its own ``FabricConfig`` + netem + workload + failure-script
+builder.  This module makes the whole experiment a single declarative
+:class:`Scenario`:
+
+* :class:`TopologySpec` — the emulated deployment: pod/worker counts (or a
+  raw :class:`~repro.core.fabric.FabricConfig` override for scaled
+  studies), WAN/LAN :class:`~repro.core.wan.NetemProfile`\\ s, QP channel
+  count and port scheme, RNG seed;
+* :class:`WorkloadSpec` — what trains: a registered strategy name (or a
+  :class:`~repro.core.schedule.CollectiveSchedule` built directly),
+  gradient bytes (or a ``repro.configs`` model name to derive them from),
+  per-step compute and the compute/communication overlap fraction, and how
+  many steps to emulate;
+* :class:`~repro.core.geo.SyncOptions` — the costing knobs
+  (``sync_every`` / ``int8_ratio`` / ``jitter`` / ``congestion`` /
+  ``ecmp_weighted``), consolidated from ``GeoFabric.sync_cost``'s historic
+  keyword sprawl;
+* :class:`ScenarioEvent` — timed control-plane/data-plane events: link
+  flaps (BFD- or BGP-detected), tenant attach/detach churn, straggler
+  injection.
+
+A :class:`Scenario` round-trips through JSON
+(``Scenario.from_dict(s.to_dict()) == s``) so studies are serializable,
+diffable artifacts; :func:`repro.scenario.runner.run_scenario` executes one
+and returns a :class:`~repro.scenario.runner.ScenarioResult`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple, Union
+
+from repro.core.fabric import FabricConfig
+from repro.core.geo import GeoFabric, SyncOptions
+from repro.core.schedule import CollectiveSchedule
+from repro.core.wan import NetemProfile, PAPER_LAN, PAPER_WAN
+
+__all__ = [
+    "Scenario",
+    "ScenarioEvent",
+    "SyncOptions",
+    "TopologySpec",
+    "WorkloadSpec",
+]
+
+
+def _profile_dict(p: NetemProfile) -> Dict[str, float]:
+    return dataclasses.asdict(p)
+
+
+def _fabric_dict(c: FabricConfig) -> Dict[str, object]:
+    d = dataclasses.asdict(c)
+    d["hosts_per_leaf"] = [list(t) for t in c.hosts_per_leaf]
+    return d
+
+
+def _fabric_from_dict(d: Dict[str, object]) -> FabricConfig:
+    d = dict(d)
+    d["hosts_per_leaf"] = tuple(tuple(t) for t in d["hosts_per_leaf"])
+    return FabricConfig(**d)
+
+
+@dataclass(frozen=True)
+class TopologySpec:
+    """The emulated deployment a scenario runs on.
+
+    ``num_pods``/``workers_per_pod`` build the standard
+    :class:`~repro.core.geo.GeoFabric` shape; ``fabric`` overrides it with
+    a raw :class:`~repro.core.fabric.FabricConfig` (the 8-DC storm and the
+    paper's asymmetric Fig. 1 topology need exact host layouts).
+    ``default_tenant=False`` skips the all-hosts training tenant so
+    tenancy scenarios can lay out their own VNIs via events.
+    """
+
+    num_pods: int = 2
+    workers_per_pod: int = 2
+    wan: NetemProfile = PAPER_WAN
+    lan: NetemProfile = PAPER_LAN
+    num_channels: int = 4
+    port_scheme: str = "qp_aware"
+    seed: int = 0
+    fabric: Optional[FabricConfig] = None
+    default_tenant: bool = True
+
+    def build(self) -> GeoFabric:
+        """Materialize the emulated deployment."""
+        return GeoFabric(
+            self.num_pods,
+            self.workers_per_pod,
+            wan=self.wan,
+            lan=self.lan,
+            num_channels=self.num_channels,
+            port_scheme=self.port_scheme,
+            seed=self.seed,
+            config=self.fabric,
+            default_tenant="training" if self.default_tenant else None,
+        )
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "num_pods": self.num_pods,
+            "workers_per_pod": self.workers_per_pod,
+            "wan": _profile_dict(self.wan),
+            "lan": _profile_dict(self.lan),
+            "num_channels": self.num_channels,
+            "port_scheme": self.port_scheme,
+            "seed": self.seed,
+            "fabric": None if self.fabric is None else _fabric_dict(self.fabric),
+            "default_tenant": self.default_tenant,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "TopologySpec":
+        d = dict(d)
+        d["wan"] = NetemProfile(**d["wan"])
+        d["lan"] = NetemProfile(**d["lan"])
+        if d.get("fabric") is not None:
+            d["fabric"] = _fabric_from_dict(d["fabric"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class WorkloadSpec:
+    """What the scenario trains/synchronizes, and for how many steps.
+
+    ``strategy`` is a registered schedule-strategy name, a
+    :class:`CollectiveSchedule` built directly (not JSON-serializable),
+    or ``None`` for control-plane-only scenarios (tenancy matrices, pure
+    flap storms).  Gradient volume comes from ``grad_bytes`` or is
+    derived from a ``repro.configs`` model name (fp32 parameter bytes via
+    ``jax.eval_shape`` — exact, allocation-free).  ``compute_seconds`` > 0
+    turns each step into :meth:`~repro.core.geo.GeoFabric.step_time` with
+    ``overlap_fraction`` of compute overlappable; 0 costs pure sync.
+    """
+
+    strategy: Union[str, CollectiveSchedule, None] = "allreduce"
+    grad_bytes: int = 0
+    model: Optional[str] = None
+    compute_seconds: float = 0.0
+    overlap_fraction: float = 0.0
+    steps: int = 1
+
+    def __post_init__(self):
+        if self.steps < 0:
+            raise ValueError("steps must be >= 0")
+        if not 0.0 <= self.overlap_fraction <= 1.0:
+            raise ValueError("overlap_fraction must be in [0, 1]")
+        if self.compute_seconds < 0:
+            raise ValueError("compute_seconds must be >= 0")
+        if self.grad_bytes < 0:
+            raise ValueError("grad_bytes must be >= 0")
+
+    def resolve_grad_bytes(self) -> int:
+        """Gradient bytes: explicit, or fp32 parameter bytes of ``model``."""
+        if self.grad_bytes > 0:
+            return self.grad_bytes
+        if self.model is not None:
+            return model_grad_bytes(self.model)
+        if isinstance(self.strategy, CollectiveSchedule):
+            return 0  # a schedule carries its own flow byte counts
+        if self.strategy is None:
+            return 0
+        raise ValueError(
+            f"workload {self.strategy!r} needs grad_bytes > 0 or a model name"
+        )
+
+    def to_dict(self) -> Dict[str, object]:
+        if isinstance(self.strategy, CollectiveSchedule):
+            raise TypeError(
+                f"schedule-valued workloads are not JSON-serializable "
+                f"(schedule {self.strategy.name!r}); use a registered "
+                "strategy name"
+            )
+        return {
+            "strategy": self.strategy,
+            "grad_bytes": self.grad_bytes,
+            "model": self.model,
+            "compute_seconds": self.compute_seconds,
+            "overlap_fraction": self.overlap_fraction,
+            "steps": self.steps,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "WorkloadSpec":
+        return cls(**d)
+
+
+_MODEL_GRAD_BYTES: Dict[str, int] = {}
+
+
+def model_grad_bytes(model: str) -> int:
+    """fp32 gradient volume of a ``repro.configs`` model (cached)."""
+    cached = _MODEL_GRAD_BYTES.get(model)
+    if cached is None:
+        import jax
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.launch.shapes import params_specs
+
+        specs = params_specs(get_config(model))
+        cached = int(
+            sum(int(np.prod(s.shape)) * 4 for s in jax.tree.leaves(specs))
+        )
+        _MODEL_GRAD_BYTES[model] = cached
+    return cached
+
+
+#: The event kinds :func:`repro.scenario.runner.run_scenario` executes.
+EVENT_KINDS = (
+    "fail_link",      # BFD/BGP-detected link failure -> RecoveryTimeline
+    "restore_link",   # link comes back -> incremental reroute + EVPN resync
+    "tenant_attach",  # attach host to tenant (created on first use)
+    "tenant_detach",  # withdraw the host's Type-2 routes fabric-wide
+    "straggler",      # multiply compute_seconds for duration_steps steps
+)
+
+
+@dataclass(frozen=True)
+class ScenarioEvent:
+    """One timed event; fields beyond ``kind``/``at_step`` are per-kind.
+
+    ``fail_link``/``restore_link`` need ``link`` (and ``mechanism`` for
+    failures: ``"bfd"`` | ``"bgp"``); ``tenant_attach`` needs ``tenant``,
+    ``host`` and — when the tenant does not exist yet — ``vni``;
+    ``tenant_detach`` needs ``tenant`` + ``host``; ``straggler`` needs
+    ``slowdown`` (compute multiplier) and ``duration_steps``.
+    """
+
+    kind: str
+    at_step: int = 0
+    link: Optional[Tuple[str, str]] = None
+    mechanism: str = "bfd"
+    tenant: Optional[str] = None
+    vni: Optional[int] = None
+    host: Optional[str] = None
+    slowdown: float = 1.0
+    duration_steps: int = 1
+
+    def __post_init__(self):
+        if self.kind not in EVENT_KINDS:
+            raise ValueError(f"unknown event kind {self.kind!r}; one of {EVENT_KINDS}")
+        if self.at_step < 0:
+            raise ValueError("at_step must be >= 0")
+        if self.link is not None:
+            object.__setattr__(self, "link", tuple(self.link))
+        if self.kind in ("fail_link", "restore_link") and self.link is None:
+            raise ValueError(f"{self.kind} event needs a link")
+        if self.kind in ("tenant_attach", "tenant_detach") and (
+            self.tenant is None or self.host is None
+        ):
+            raise ValueError(f"{self.kind} event needs tenant and host")
+        if self.kind == "straggler":
+            if self.slowdown < 1.0:
+                raise ValueError("straggler slowdown must be >= 1.0")
+            if self.duration_steps < 1:
+                raise ValueError("straggler duration_steps must be >= 1")
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["link"] = None if self.link is None else list(self.link)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ScenarioEvent":
+        d = dict(d)
+        if d.get("link") is not None:
+            d["link"] = tuple(d["link"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class Scenario:
+    """One complete, declarative experiment: topology + workload + options
+    + events.  ``run_scenario(scenario)`` executes it; ``to_dict`` /
+    ``from_dict`` round-trip through JSON losslessly (identity is pinned
+    in ``tests/test_scenario.py``)."""
+
+    name: str
+    topology: TopologySpec = field(default_factory=TopologySpec)
+    workload: WorkloadSpec = field(default_factory=WorkloadSpec)
+    options: SyncOptions = field(default_factory=SyncOptions)
+    events: Tuple[ScenarioEvent, ...] = ()
+    description: str = ""
+
+    def __post_init__(self):
+        object.__setattr__(self, "events", tuple(self.events))
+        if not self.name:
+            raise ValueError("scenario name must be non-empty")
+
+    @property
+    def num_steps(self) -> int:
+        """Steps the runner emulates: the workload's, extended to cover
+        every event."""
+        last_event = max((e.at_step for e in self.events), default=-1)
+        return max(self.workload.steps, last_event + 1)
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "name": self.name,
+            "topology": self.topology.to_dict(),
+            "workload": self.workload.to_dict(),
+            "options": self.options.to_dict(),
+            "events": [e.to_dict() for e in self.events],
+            "description": self.description,
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "Scenario":
+        return cls(
+            name=d["name"],
+            topology=TopologySpec.from_dict(d["topology"]),
+            workload=WorkloadSpec.from_dict(d["workload"]),
+            options=SyncOptions.from_dict(d["options"]),
+            events=tuple(ScenarioEvent.from_dict(e) for e in d["events"]),
+            description=d.get("description", ""),
+        )

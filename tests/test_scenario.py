@@ -1,0 +1,389 @@
+"""Declarative Scenario/Experiment API tests (ISSUE 5).
+
+Covers the tentpole guarantees:
+
+* **JSON round-trip identity** — ``Scenario.from_dict(s.to_dict()) == s``
+  through an actual ``json.dumps``/``loads`` cycle, for specs exercising
+  every field class (custom netem profiles, raw FabricConfig override,
+  every event kind);
+* **SyncOptions back-compat pins** — ``sync_cost(**kwargs)`` bit-identical
+  to ``sync_cost(options=SyncOptions(...))`` including the jitter RNG
+  stream, across fluid/contended/weighted branches and ``step_time``;
+* **runner semantics** — per-step timeline, event application (flaps ->
+  RecoveryTimeline/EvpnResyncStats rollups, tenant churn -> reachability,
+  stragglers -> compute scaling), control-plane-only scenarios;
+* **the library** — every named scenario builds, runs, and the
+  JSON-serializable ones round-trip.
+"""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.core.fabric import FabricConfig
+from repro.core.geo import GeoFabric, SyncOptions
+from repro.core.wan import NetemProfile
+from repro.scenario import (
+    Scenario,
+    ScenarioEvent,
+    TopologySpec,
+    WorkloadSpec,
+    get_scenario,
+    run_scenario,
+    scenario_names,
+)
+
+
+def _rich_scenario() -> Scenario:
+    return Scenario(
+        name="rich",
+        topology=TopologySpec(
+            num_pods=2,
+            workers_per_pod=3,
+            wan=NetemProfile(delay_ms=7.5, jitter_ms=0.5, bandwidth_gbps=1.6),
+            lan=NetemProfile(delay_ms=0.01, bandwidth_gbps=25.0),
+            num_channels=8,
+            port_scheme="baseline",
+            seed=11,
+            fabric=FabricConfig(ecmp_hash_buckets=16),
+        ),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=10_000_000,
+            compute_seconds=1.5,
+            overlap_fraction=0.25,
+            steps=4,
+        ),
+        options=SyncOptions(sync_every=4, jitter=False, congestion=True),
+        events=(
+            ScenarioEvent(kind="fail_link", at_step=1, link=("d1s1", "d2s1")),
+            ScenarioEvent(kind="restore_link", at_step=2, link=("d1s1", "d2s1")),
+            ScenarioEvent(
+                kind="tenant_detach", at_step=1, tenant="training", host="d1h2"
+            ),
+            ScenarioEvent(
+                kind="tenant_attach", at_step=2, tenant="training", host="d1h2"
+            ),
+            ScenarioEvent(kind="straggler", at_step=3, slowdown=2.0, duration_steps=1),
+        ),
+        description="every field class exercised",
+    )
+
+
+class TestJsonRoundTrip:
+    def test_round_trip_identity(self):
+        s = _rich_scenario()
+        d = json.loads(json.dumps(s.to_dict()))
+        assert Scenario.from_dict(d) == s
+
+    def test_default_scenario_round_trips(self):
+        s = Scenario(name="defaults")
+        assert Scenario.from_dict(json.loads(json.dumps(s.to_dict()))) == s
+
+    def test_library_round_trips(self):
+        for name in scenario_names():
+            s = get_scenario(name)
+            d = json.loads(json.dumps(s.to_dict()))
+            assert Scenario.from_dict(d) == s, name
+
+    def test_schedule_workload_not_serializable(self):
+        from repro.core.schedule import CollectiveSchedule, Phase
+
+        s = Scenario(
+            name="sched",
+            workload=WorkloadSpec(
+                strategy=CollectiveSchedule("x", (Phase("p"),))
+            ),
+        )
+        with pytest.raises(TypeError):
+            s.to_dict()
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="nope")
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="fail_link")  # no link
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="tenant_attach", host="d1h1")  # no tenant
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="straggler", slowdown=0.5)
+
+
+class TestSyncOptionsBackCompat:
+    """The keyword path must stay bit-for-bit identical to the options
+    path — including the jitter RNG stream (same draws, same order)."""
+
+    CASES = (
+        {"jitter": False},
+        {"jitter": True},
+        {"jitter": True, "congestion": True},
+        {"jitter": False, "congestion": True, "ecmp_weighted": True},
+        {"sync_every": 4, "int8_ratio": 0.5, "jitter": True},
+    )
+
+    def test_sync_cost_pin(self):
+        a = GeoFabric(num_pods=2, workers_per_pod=2, seed=123)
+        b = GeoFabric(num_pods=2, workers_per_pod=2, seed=123)
+        for kw in self.CASES:
+            for strategy in ("allreduce", "local_sgd", "rs_ag_overlap"):
+                ca = a.sync_cost(strategy, 20_000_000, **kw)
+                cb = b.sync_cost(strategy, 20_000_000, options=SyncOptions(**kw))
+                assert ca.wan_seconds == cb.wan_seconds, (strategy, kw)
+                assert ca.wan_bytes == cb.wan_bytes
+                assert ca.sync_every == cb.sync_every
+                assert ca.bottleneck_link == cb.bottleneck_link
+                assert ca.bottleneck_utilization == cb.bottleneck_utilization
+                assert [p.end_s for p in ca.phases] == [p.end_s for p in cb.phases]
+        # streams fully consumed in lockstep: one more jittered call agrees
+        assert (
+            a.sync_cost("hier", 1_000_000, jitter=True).wan_seconds
+            == b.sync_cost("hier", 1_000_000, options=SyncOptions()).wan_seconds
+        )
+
+    def test_step_time_pin(self):
+        a = GeoFabric(num_pods=2, workers_per_pod=2, seed=9)
+        b = GeoFabric(num_pods=2, workers_per_pod=2, seed=9)
+        for frac in (0.0, 0.5, 1.0):
+            sa = a.step_time(
+                "hier", 50_000_000, 2.0, overlap_fraction=frac,
+                jitter=True, congestion=True,
+            )
+            sb = b.step_time(
+                "hier", 50_000_000, 2.0, overlap_fraction=frac,
+                options=SyncOptions(jitter=True, congestion=True),
+            )
+            assert sa == sb
+
+    def test_mixing_options_and_kwargs_raises(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=2)
+        with pytest.raises(TypeError):
+            geo.sync_cost("hier", 1000, options=SyncOptions(), jitter=False)
+        with pytest.raises(TypeError):
+            geo.step_time(
+                "hier", 1000, 1.0, options=SyncOptions(), congestion=True
+            )
+
+    def test_unknown_keyword_raises(self):
+        geo = GeoFabric(num_pods=2, workers_per_pod=2)
+        with pytest.raises(TypeError):
+            geo.sync_cost("hier", 1000, jitters=False)
+
+    def test_options_validation(self):
+        with pytest.raises(ValueError):
+            SyncOptions(sync_every=0)
+        with pytest.raises(ValueError):
+            SyncOptions(int8_ratio=0.0)
+        assert SyncOptions.from_dict(SyncOptions(jitter=False).to_dict()) == SyncOptions(jitter=False)
+
+
+class TestRunner:
+    def test_per_step_timeline(self):
+        s = Scenario(
+            name="t",
+            workload=WorkloadSpec(strategy="allreduce", grad_bytes=5_000_000, steps=3),
+            options=SyncOptions(jitter=False),
+        )
+        r = run_scenario(s)
+        assert len(r.steps) == 3
+        assert [st.step for st in r.steps] == [0, 1, 2]
+        # jitter-free, event-free: every step identical, equal to the rollup
+        assert len({st.seconds for st in r.steps}) == 1
+        assert r.steps[0].sync_seconds == pytest.approx(r.sync.amortized_seconds)
+        assert r.total_seconds == pytest.approx(3 * r.steps[0].seconds)
+        m = r.metrics()
+        assert m["sync_wan_seconds"] == pytest.approx(r.sync.wan_seconds)
+
+    def test_result_json_serializable(self):
+        r = run_scenario(_rich_scenario())
+        payload = json.dumps(r.to_dict())
+        back = json.loads(payload)
+        assert back["scenario"]["name"] == "rich"
+        assert len(back["steps"]) == 4
+        assert back["recoveries"] and back["metrics"]
+
+    def test_straggler_scales_compute(self):
+        base = Scenario(
+            name="s",
+            workload=WorkloadSpec(
+                strategy="hier", grad_bytes=5_000_000,
+                compute_seconds=1.0, steps=3,
+            ),
+            options=SyncOptions(jitter=False),
+        )
+        slow = dataclasses.replace(
+            base,
+            events=(ScenarioEvent(kind="straggler", at_step=1, slowdown=3.0),),
+        )
+        rb, rs = run_scenario(base), run_scenario(slow)
+        assert rs.steps[1].straggler_factor == 3.0
+        assert rs.steps[1].compute_seconds == pytest.approx(3.0)
+        assert rs.steps[1].seconds > rb.steps[1].seconds
+        # only the injected step is affected
+        assert rs.steps[0].seconds == pytest.approx(rb.steps[0].seconds)
+        assert rs.steps[2].seconds == pytest.approx(rb.steps[2].seconds)
+
+    def test_link_flap_produces_rollups(self):
+        s = Scenario(
+            name="flap",
+            workload=WorkloadSpec(strategy="hier", grad_bytes=5_000_000, steps=3),
+            options=SyncOptions(jitter=False),
+            events=(
+                ScenarioEvent(kind="fail_link", at_step=1, link=("d1s1", "d2s1")),
+                ScenarioEvent(kind="restore_link", at_step=2, link=("d1s1", "d2s1")),
+            ),
+        )
+        r = run_scenario(s)
+        assert len(r.recoveries) == 1
+        assert r.recoveries[0].mechanism == "bfd"
+        assert 50 < r.recoveries[0].recovery_ms < 1000  # BFD class
+        assert len(r.reroutes) == 2
+        assert len(r.evpn_resyncs) == 2  # fail + restore both resync
+        assert r.metrics()["mean_recovery_ms"] == pytest.approx(
+            r.recoveries[0].recovery_ms
+        )
+        # the sync keeps working through and after the flap
+        assert all(st.sync_seconds > 0 for st in r.steps)
+
+    def test_tenant_churn_changes_reachability(self):
+        s = Scenario(
+            name="churn",
+            workload=WorkloadSpec(strategy=None, steps=0),
+            events=(
+                ScenarioEvent(
+                    kind="tenant_detach", at_step=0, tenant="training", host="d2h2"
+                ),
+            ),
+        )
+        r = run_scenario(s)
+        assert r.sync is None and r.steps == []
+        assert not r.geo.tenancy.ping("d1h1", "d2h2")
+        assert r.geo.tenancy.ping("d1h1", "d2h1")
+
+    def test_events_extend_num_steps(self):
+        s = Scenario(
+            name="tail",
+            workload=WorkloadSpec(strategy="hier", grad_bytes=1_000_000, steps=1),
+            events=(
+                ScenarioEvent(kind="fail_link", at_step=4, link=("d1s1", "d2s1")),
+            ),
+        )
+        assert s.num_steps == 5
+        r = run_scenario(s)
+        assert len(r.steps) == 1  # workload steps only
+        assert len(r.recoveries) == 1  # but the tail event still fired
+
+    def test_new_tenant_attach_needs_vni(self):
+        s = Scenario(
+            name="vni",
+            workload=WorkloadSpec(strategy=None, steps=0),
+            topology=TopologySpec(default_tenant=False),
+            events=(
+                ScenarioEvent(
+                    kind="tenant_attach", at_step=0, tenant="job-x", host="d1h1"
+                ),
+            ),
+        )
+        with pytest.raises(ValueError, match="vni"):
+            run_scenario(s)
+
+    def test_fabric_override_topology(self):
+        s = Scenario(
+            name="raw",
+            topology=TopologySpec(fabric=FabricConfig()),
+            workload=WorkloadSpec(strategy="hier", grad_bytes=1_000_000),
+            options=SyncOptions(jitter=False),
+        )
+        r = run_scenario(s)
+        # the paper's asymmetric Fig. 1 fabric: 9 hosts, d1h5 exists
+        assert len(r.geo.workers()) == 9
+        assert r.sync.wan_seconds > 0
+
+    def test_model_workload_resolves_grad_bytes(self):
+        from repro.scenario import model_grad_bytes
+
+        w = WorkloadSpec(strategy="allreduce", model="distilgpt2-82m")
+        nbytes = w.resolve_grad_bytes()
+        assert nbytes == model_grad_bytes("distilgpt2-82m")
+        assert nbytes == pytest.approx(82e6 * 4, rel=0.1)  # ~328 MB fp32
+
+
+class TestTrainerScenario:
+    def test_trainer_honors_spec_and_replays_events(self, tmp_path):
+        """The spec is authoritative (explicit small step counts included)
+        and its event script fires at step boundaries during real
+        training."""
+        from repro.configs import get_smoke_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.optim import AdamWConfig
+        from repro.runtime import GeoTrainer, TrainerConfig
+
+        spec = Scenario(
+            name="drill",
+            workload=WorkloadSpec(strategy="hier", steps=3),
+            options=SyncOptions(jitter=False),
+            events=(
+                ScenarioEvent(kind="fail_link", at_step=1, link=("d1s1", "d2s1")),
+                ScenarioEvent(kind="restore_link", at_step=2, link=("d1s1", "d2s1")),
+            ),
+        )
+        trainer = GeoTrainer(
+            get_smoke_config("distilgpt2-82m"),
+            make_host_mesh(),
+            trainer_cfg=TrainerConfig(
+                seq_len=32, global_batch=4, steps=100, log_every=100,
+                opt=AdamWConfig(lr=1e-3, warmup_steps=2, total_steps=100),
+            ),
+            checkpoint_dir=str(tmp_path),
+            scenario=spec,
+        )
+        assert trainer.tc.steps == 3  # spec beats the TrainerConfig default
+        assert trainer.tc.strategy == "hier"
+        result = trainer.run()
+        assert len(result["metrics"]) == 3
+        assert len(result["scenario_recoveries"]) == 1
+        assert result["scenario_recoveries"][0]["mechanism"] == "bfd"
+        assert result["scenario_evpn_resyncs"] == 2  # fail + restore
+        # the flapped link healed: both directions up again
+        assert trainer.geo.fabric.link_up("d1s1", "d2s1")
+
+
+class TestLibrary:
+    def test_names_cover_the_paper_studies(self):
+        names = scenario_names()
+        for expected in (
+            "fig14_allreduce",
+            "fig14_ps",
+            "compute_overlap",
+            "rs_ag_overlap",
+            "rs_then_ag",
+            "bfd_flap_storm",
+            "multi_tenant_churn",
+            "ecmp_collision",
+        ):
+            assert expected in names
+
+    def test_unknown_scenario_raises(self):
+        with pytest.raises(ValueError, match="unknown scenario"):
+            get_scenario("psychic")
+
+    def test_overlap_beats_serial(self):
+        overlap = run_scenario(get_scenario("rs_ag_overlap")).sync
+        serial = run_scenario(get_scenario("rs_then_ag")).sync
+        assert overlap.wan_seconds < serial.wan_seconds
+
+    def test_churn_scenario_surfaces_evpn_stats(self):
+        r = run_scenario(get_scenario("multi_tenant_churn"))
+        assert r.evpn_resyncs
+        assert any(s.rebuilt > 0 for s in r.evpn_resyncs)  # isolation episode
+        assert any(s.rebuilt == 0 for s in r.evpn_resyncs)  # harmless flap
+        r.geo.tenancy.verify_isolation()
+
+    def test_ecmp_collision_prices_the_allocator(self):
+        base = run_scenario(get_scenario("ecmp_collision", port_scheme="baseline"))
+        qp = run_scenario(get_scenario("ecmp_collision", port_scheme="qp_aware"))
+        assert qp.sync.wan_seconds < base.sync.wan_seconds
+        # the weighted model is what prices the difference: both specs
+        # opted into ecmp_weighted congestion
+        assert base.scenario.options.ecmp_weighted
+        assert qp.scenario.options.ecmp_weighted

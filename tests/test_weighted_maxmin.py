@@ -22,13 +22,14 @@ from hypothesis import strategies as st
 from repro.core.congestion import (
     _max_min_rates_arrays,
     build_link_load_matrix,
+    concurrent_ecmp_flow_weights,
     congestion_report,
     ecmp_flow_weights,
     max_min_rates,
     route_and_analyze,
     simulate_schedule,
 )
-from repro.core.fabric import Fabric
+from repro.core.fabric import Fabric, FabricConfig
 from repro.core.flows import (
     Flow,
     all_to_all_flows,
@@ -37,7 +38,7 @@ from repro.core.flows import (
 )
 from repro.core.geo import GeoFabric
 from repro.core.ports import QueuePair
-from repro.core.schedule import CollectiveSchedule
+from repro.core.schedule import CollectiveSchedule, Phase
 from repro.core.wan import Netem
 
 
@@ -216,6 +217,141 @@ class TestHashSkewWeights:
         assert report.rates_gbps / w == pytest.approx(
             np.full(3, report.rates_gbps[2] / w[2])
         )
+
+
+class TestBucketSpaceKnob:
+    """ISSUE 5 satellite: ``ECMP_HASH_BUCKETS`` promoted to a
+    ``FabricConfig`` field — default pins byte-identity, non-default
+    bucket counts model denser member tables."""
+
+    def test_default_pins_byte_identity(self):
+        flows = ring_allreduce_flows(sorted(Fabric().hosts), 64_000_000)
+        f_implicit = Fabric()
+        f_explicit = Fabric(FabricConfig(ecmp_hash_buckets=64))
+        b1, p1 = route_flows_with_paths(f_implicit, flows)
+        b2, p2 = route_flows_with_paths(f_explicit, flows)
+        assert b1 == b2
+        assert np.array_equal(p1.slot_occ, p2.slot_occ)
+        assert np.array_equal(p1.slot_key, p2.slot_key)
+        assert np.array_equal(ecmp_flow_weights(p1), ecmp_flow_weights(p2))
+
+    def test_fewer_buckets_collide_at_least_as_much(self):
+        """Shrinking the bucket space can only merge slots, never split
+        them: every traversal's occupancy is >= the default's, and with
+        one bucket every concurrent flow through a fan-out shares it."""
+        flows = ring_allreduce_flows(sorted(Fabric().hosts), 64_000_000)
+        _, p64 = route_flows_with_paths(Fabric(), flows)
+        _, p1 = route_flows_with_paths(
+            Fabric(FabricConfig(ecmp_hash_buckets=1)), flows
+        )
+        # same routing decisions (the hash modulo fan-out is untouched)...
+        assert np.array_equal(p64.link_u, p1.link_u)
+        assert np.array_equal(p64.link_v, p1.link_v)
+        # ...but strictly denser slot sharing somewhere
+        assert np.all(p1.slot_occ >= p64.slot_occ)
+        assert int(p1.slot_occ.max()) > int(p64.slot_occ.max())
+        w1, w64 = ecmp_flow_weights(p1), ecmp_flow_weights(p64)
+        assert np.all(w1 <= w64)
+
+    def test_bucket_count_validated(self):
+        with pytest.raises(ValueError):
+            Fabric(FabricConfig(ecmp_hash_buckets=0))
+
+
+class TestConcurrentPhaseWeights:
+    """ISSUE 5 satellite (ROADMAP item): ECMP weight derivation restricted
+    to concurrently-active phases — one occupancy count no longer spans
+    the whole schedule batch."""
+
+    def _dup_schedules(self, fabric):
+        """Two phases re-using the identical flow (same 5-tuple -> same
+        hash slots), serialized vs overlapped."""
+        flow = _flow("d1h1", "d2h1")
+        serial = CollectiveSchedule(
+            "serial", (Phase("a", (flow,)), Phase("b", (flow,), deps=("a",)))
+        )
+        par = CollectiveSchedule("par", (Phase("a", (flow,)), Phase("b", (flow,))))
+        return serial, par
+
+    def test_serialized_phases_not_down_weighted(self):
+        """The satellite's acceptance case: two non-overlapping phases
+        sharing hash slots are no longer down-weighted."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        serial, par = self._dup_schedules(fabric)
+        rep_serial = simulate_schedule(fabric, netem, serial, ecmp_weighted=True)
+        assert np.array_equal(rep_serial.weights, np.ones(2))
+        # the overlapped variant really does collide: both flows halve
+        rep_par = simulate_schedule(fabric, netem, par, ecmp_weighted=True)
+        assert np.array_equal(rep_par.weights, [0.5, 0.5])
+
+    def test_serialized_cost_matches_unweighted(self):
+        """With no concurrent collisions the weighted serialized schedule
+        costs exactly its unweighted self."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        serial, _ = self._dup_schedules(fabric)
+        weighted = simulate_schedule(fabric, netem, serial, ecmp_weighted=True)
+        unweighted = simulate_schedule(fabric, netem, serial, ecmp_weighted=False)
+        assert weighted.seconds == unweighted.seconds
+        assert np.array_equal(weighted.completion_s, unweighted.completion_s)
+
+    def test_diamond_dag_concurrency(self):
+        """In a diamond (a -> b, a -> c, b/c -> d) only b and c may
+        overlap; a and d are serialized against everything."""
+        flow = _flow("d1h1", "d2h1")
+        s = CollectiveSchedule(
+            "diamond",
+            (
+                Phase("a", (flow,)),
+                Phase("b", (flow,), deps=("a",)),
+                Phase("c", (flow,), deps=("a",)),
+                Phase("d", (flow,), deps=("b", "c")),
+            ),
+        )
+        conc = s.concurrency_matrix()
+        names = [p.name for p in s.phases]
+        bi, ci = names.index("b"), names.index("c")
+        assert conc[bi, ci] and conc[ci, bi]
+        ai, di = names.index("a"), names.index("d")
+        for other in (bi, ci, di):
+            assert not conc[ai, other]
+        assert not conc[di, bi] and not conc[di, ci]
+        assert np.all(np.diag(conc))
+        fabric = Fabric()
+        rep = simulate_schedule(fabric, Netem(fabric), s, ecmp_weighted=True)
+        # only b and c (flows 1 and 2) collide
+        assert np.array_equal(rep.weights, [1.0, 0.5, 0.5, 1.0])
+
+    def test_concurrent_weights_respect_live_mask(self):
+        """Zero-byte ghosts in a concurrent phase occupy no slot."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        live = _flow("d1h1", "d2h1")
+        ghost = _flow("d1h1", "d2h1", nbytes=0)
+        s = CollectiveSchedule(
+            "ghost", (Phase("a", (live,)), Phase("b", (ghost,)))
+        )
+        rep = simulate_schedule(fabric, netem, s, ecmp_weighted=True)
+        assert rep.weights[0] == 1.0
+
+    def test_single_phase_matches_whole_batch_derivation(self):
+        """An all-True concurrency matrix reproduces ecmp_flow_weights
+        for live flows — the restriction is a pure generalization."""
+        fabric = Fabric()
+        netem = Netem(fabric)
+        flows = ring_allreduce_flows(sorted(fabric.hosts), 32_000_000)
+        _, paths = route_flows_with_paths(fabric, flows)
+        matrix = build_link_load_matrix(fabric, netem, paths)
+        whole = ecmp_flow_weights(matrix)
+        conc = np.ones((1, 1), dtype=bool)
+        restricted = concurrent_ecmp_flow_weights(
+            matrix,
+            np.zeros(len(flows), dtype=np.int64),
+            conc,
+            live=np.array([f.nbytes > 0 for f in flows]),
+        )
+        assert np.array_equal(whole, restricted)
 
 
 class TestWeightedPipelines:
