@@ -1,0 +1,100 @@
+"""Sweep-engine suite: the fiber-latency campaign, executed and gated.
+
+ISSUE 6 tentpole demo: the per-DC-pair asymmetric-WAN axis
+(``TopologySpec.wan_pairs``) crossed with the compute/communication
+overlap fraction reproduces the Papavasileiou-style
+overlap-benefit-vs-RTT curve ("Modeling the Impact of Fiber Latency on
+Compute-Communication Overlap", PAPERS.md) as one
+:func:`repro.scenario.fiber_latency_campaign` spec.  Every variant of the
+joined table lands as one gated ``BenchRow`` (``BENCH_sweeps.json``), so
+campaign conclusions are regression-gated like everything else.
+
+Cross-variant gates (the study conclusions, not just the numbers):
+
+* overlap benefit — the fraction of the no-overlap step time overlap
+  recovers — is monotonically non-increasing as per-pair RTT grows past
+  the compute window (propagation is exposed no matter when
+  communication starts), and strictly decays end to end;
+* a >=2-worker process-pool run of the same campaign produces a joined
+  table identical to the serial run (seeded determinism: worker count
+  never changes results), and so does a re-run of ``random_campaign``
+  from the same seed.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.scenario import fiber_latency_campaign, random_campaign, run_sweep
+from repro.scenario.sweep import overlap_benefit_curve
+
+from .common import BenchRow, timed
+
+CAMPAIGN_SEED = 6
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+
+    sweep = fiber_latency_campaign()
+    serial, us = timed(lambda: run_sweep(sweep))
+    for r in serial.rows:
+        rows.append(
+            BenchRow(
+                name=f"fiber_{r.name}",
+                us_per_call=us / len(serial.rows),
+                derived=f"step={r.metrics['mean_step_seconds']:.3f}s",
+                metrics=dict(r.metrics),
+            )
+        )
+
+    # -- gate: overlap benefit decays monotonically with per-pair RTT --------
+    curve = overlap_benefit_curve(serial)
+    for (rtt_a, ben_a), (rtt_b, ben_b) in zip(curve, curve[1:]):
+        if ben_b > ben_a + 1e-9:
+            raise AssertionError(
+                f"overlap benefit must not grow with RTT: "
+                f"{ben_a:.4f}@{rtt_a}ms -> {ben_b:.4f}@{rtt_b}ms"
+            )
+    if not curve[-1][1] < curve[0][1]:
+        raise AssertionError(
+            f"overlap benefit must strictly decay across the sweep "
+            f"({curve[0][1]:.4f} -> {curve[-1][1]:.4f})"
+        )
+
+    # -- gate: >=2-worker run joins to the identical table -------------------
+    parallel, par_us = timed(lambda: run_sweep(sweep, workers=2))
+    if [r.to_dict() for r in parallel.rows] != [r.to_dict() for r in serial.rows]:
+        raise AssertionError("2-worker sweep table differs from the serial run")
+
+    # -- gate: random campaigns are a deterministic artifact of their seed ---
+    mc = run_sweep(random_campaign(seed=CAMPAIGN_SEED, variants=4))
+    mc_again = run_sweep(random_campaign(seed=CAMPAIGN_SEED, variants=4), workers=2)
+    if [r.to_dict() for r in mc.rows] != [r.to_dict() for r in mc_again.rows]:
+        raise AssertionError("random_campaign is not seed-deterministic")
+    for r in mc.rows:
+        rows.append(
+            BenchRow(
+                name=f"campaign_{r.name}",
+                us_per_call=0.0,
+                derived=f"{len(r.overrides)} overrides",
+                metrics=dict(r.metrics),
+            )
+        )
+
+    rows.append(
+        BenchRow(
+            name="sweep_gates",
+            us_per_call=par_us,
+            derived=(
+                f"benefit {curve[0][1]:.3f}@{curve[0][0]:g}ms -> "
+                f"{curve[-1][1]:.3f}@{curve[-1][0]:g}ms (monotone) | "
+                f"2-worker table == serial | campaign seed-deterministic"
+            ),
+            metrics={
+                "overlap_benefit_min_rtt": curve[0][1],
+                "overlap_benefit_max_rtt": curve[-1][1],
+            },
+        )
+    )
+    return rows

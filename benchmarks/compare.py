@@ -9,7 +9,10 @@ factors, effective-throughput Mbit/s, EVPN resync blast radius) from
 silently drifting as the simulator evolves.
 
 What is gated: only the ``metrics`` dict of each ``BenchRow`` (see
-``benchmarks/common.py``).  Wall-clock fields (``us_per_call``) are never
+``benchmarks/common.py``).  Sweep/campaign artifacts
+(``repro.scenario.sweep.SweepResult.to_dict()``) gate the same way: their
+``variants`` list is read exactly like a suite's ``rows``, one entry per
+campaign variant.  Wall-clock fields (``us_per_call``) are never
 gated — they measure the runner, not the model.  Direction is inferred
 from the metric name by :func:`metric_direction`:
 
@@ -89,8 +92,16 @@ def _load_suite(path: pathlib.Path) -> dict:
 
 
 def _row_metrics(payload: dict) -> Dict[Tuple[str, str], float]:
+    """Gated (row, metric) pairs of one suite *or* campaign payload.
+
+    Two shapes are accepted: the ``BenchRow`` dump of ``benchmarks/run.py``
+    (``rows``) and the joined result table of a sweep/Monte Carlo campaign
+    (``repro.scenario.sweep.SweepResult.to_dict()``, ``variants`` — one
+    BenchRow-shaped entry per variant), so committed campaign artifacts
+    regression-gate exactly like hand-written suites.
+    """
     out: Dict[Tuple[str, str], float] = {}
-    for row in payload.get("rows", ()):
+    for row in list(payload.get("rows", ())) + list(payload.get("variants", ())):
         for metric, value in (row.get("metrics") or {}).items():
             out[(row["name"], metric)] = float(value)
     return out

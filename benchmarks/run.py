@@ -29,6 +29,7 @@ SUITES = (
     ("wan_sync_beyond_paper", "benchmarks.bench_wan_sync"),
     ("schedule_overlap", "benchmarks.bench_schedule"),
     ("scenarios", "benchmarks.bench_scenarios"),
+    ("sweeps", "benchmarks.bench_sweeps"),
     ("roofline", "benchmarks.bench_roofline"),
 )
 

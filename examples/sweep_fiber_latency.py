@@ -1,0 +1,57 @@
+"""Fiber-latency campaign: overlap benefit vs per-DC-pair WAN RTT.
+
+Thin wrapper over ``repro.scenario.fiber_latency_campaign`` (same pattern
+as ``examples/train_geo.py``): one declarative sweep — per-pair RTT
+(``TopologySpec.wan_pairs``, the asymmetric-WAN axis) crossed with the
+compute/communication overlap fraction — executed serially or over a
+process pool, printing the joined table and the Papavasileiou-style
+overlap-benefit-vs-RTT curve ("Modeling the Impact of Fiber Latency on
+Compute-Communication Overlap").
+
+Run:  PYTHONPATH=src python examples/sweep_fiber_latency.py
+      PYTHONPATH=src python examples/sweep_fiber_latency.py --workers 4
+      PYTHONPATH=src python examples/sweep_fiber_latency.py \
+          --rtt-ms 2 10 30 60 120 --overlap 0 0.5 1.0
+"""
+
+import argparse
+
+from repro.scenario import fiber_latency_campaign, run_sweep
+from repro.scenario.sweep import overlap_benefit_curve
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--rtt-ms", type=float, nargs="+", default=[2.0, 10.0, 30.0, 60.0],
+                    help="per-DC-pair WAN RTTs to sweep (ms)")
+    ap.add_argument("--overlap", type=float, nargs="+", default=[0.0, 0.75],
+                    help="overlap fractions to sweep (must include 0 for the curve)")
+    ap.add_argument("--compute-seconds", type=float, default=0.35)
+    ap.add_argument("--grad-bytes", type=int, default=48_000_000)
+    ap.add_argument("--workers", type=int, default=0,
+                    help="process-pool size; 0/1 = serial (identical table)")
+    args = ap.parse_args()
+
+    sweep = fiber_latency_campaign(
+        rtt_ms=tuple(args.rtt_ms),
+        overlap_fractions=tuple(args.overlap),
+        grad_bytes=args.grad_bytes,
+        compute_seconds=args.compute_seconds,
+    )
+    result = run_sweep(sweep, workers=args.workers)
+
+    print(f"{len(result.rows)} variants ({sweep.name})")
+    print(f"{'variant':>16} {'step_s':>8} {'sync_s':>8}")
+    for row in result.rows:
+        print(f"{row.name:>16} {row.metrics['mean_step_seconds']:8.3f} "
+              f"{row.metrics['sync_wan_seconds']:8.3f}")
+
+    print("\noverlap benefit vs per-pair RTT (fraction of the no-overlap "
+          "step time recovered):")
+    for rtt, benefit in overlap_benefit_curve(result):
+        bar = "#" * int(round(benefit * 60))
+        print(f"  rtt {rtt:6.1f} ms  benefit {benefit:6.3f}  {bar}")
+
+
+if __name__ == "__main__":
+    main()

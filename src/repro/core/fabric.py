@@ -280,6 +280,7 @@ class Fabric:
         self.leaves: List[str] = []
         self.spines: List[str] = []
         self.wan_links: List[FrozenSet[str]] = []
+        self._node_dc: Dict[str, int] = {}
         self._switch_seed: Dict[str, int] = {}
         self._dist_cache: Dict[str, Dict[str, int]] = {}
         # incremental re-convergence: reverse link -> destination dependency
@@ -319,6 +320,8 @@ class Fabric:
             leaves = [f"d{dc}l{j}" for j in range(1, cfg.leaves_per_dc + 1)]
             self.spines.extend(spines)
             self.leaves.extend(leaves)
+            for sw in spines + leaves:
+                self._node_dc[sw] = dc
             for leaf in leaves:
                 for spine in spines:  # full bipartite leaf-spine Clos
                     self._add_link(leaf, spine)
@@ -334,6 +337,7 @@ class Fabric:
                         mac=f"aa:bb:{dc:02x}:{dc:02x}:{host_idx:02x}:{host_idx:02x}",
                     )
                     self.hosts[name] = host
+                    self._node_dc[name] = dc
                     self._add_link(leaf, name)
                     host_idx += 1
         # WAN: full bipartite spine<->spine between DC pairs (paper: each spine
@@ -371,6 +375,15 @@ class Fabric:
 
     def is_wan_link(self, u: str, v: str) -> bool:
         return frozenset((u, v)) in self._wan_link_set
+
+    def node_dc(self, name: str) -> int:
+        """1-based data center of a switch or host."""
+        return self._node_dc[name]
+
+    def wan_pair(self, u: str, v: str) -> Tuple[int, int]:
+        """Normalized (lo, hi) DC pair a WAN link spans."""
+        a, b = self._node_dc[u], self._node_dc[v]
+        return (a, b) if a <= b else (b, a)
 
     def link_up(self, u: str, v: str) -> bool:
         return frozenset((u, v)) not in self._down_links

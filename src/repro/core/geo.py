@@ -140,6 +140,7 @@ class GeoFabric:
         *,
         wan: NetemProfile = PAPER_WAN,
         lan: NetemProfile = PAPER_LAN,
+        wan_pairs: Optional[Dict[Tuple[int, int], NetemProfile]] = None,
         num_channels: int = 4,
         port_scheme: str = "qp_aware",
         seed: int = 0,
@@ -163,7 +164,9 @@ class GeoFabric:
         self.fabric = Fabric(self.config)
         self.evpn = EvpnControlPlane(self.fabric)
         self.tenancy = TenancyManager(self.fabric, self.evpn)
-        self.netem = Netem(self.fabric, wan=wan, lan=lan, seed=seed)
+        self.netem = Netem(
+            self.fabric, wan=wan, lan=lan, seed=seed, wan_pairs=wan_pairs
+        )
         self.timing = WanTimingModel(self.netem)
         self.detector = FailureDetector(self.fabric, self.evpn)
         self.num_pods = num_pods
@@ -428,8 +431,23 @@ class GeoFabric:
 
     def wan_roofline_seconds(self, cross_pod_bytes_per_chip: float, chips_per_pod: int) -> float:
         """WAN term for the multi-pod roofline: the pod's aggregate cross-pod
-        bytes squeezed through the DC-pair's WAN links."""
+        bytes squeezed through the DC-pair's WAN links.
+
+        Each WAN link contributes the bandwidth its *resolved* profile
+        grants (``netem.profile(u, v)`` — per-pair overrides included), not
+        the class default; the uniform case keeps the historical
+        ``bandwidth * n_links`` product bit-for-bit.
+        """
         total_bytes = cross_pod_bytes_per_chip * chips_per_pod
-        wan_bw_bytes = self.netem.wan.bandwidth_gbps * 1e9 / 8.0
-        n_links = max(len(self.fabric.wan_links), 1)
-        return total_bytes / (wan_bw_bytes * n_links)
+        link_gbps = [
+            self.netem.profile(*sorted(link)).bandwidth_gbps
+            for link in self.fabric.wan_links
+        ]
+        if not link_gbps:
+            link_gbps = [self.netem.wan.bandwidth_gbps]
+        if all(g == link_gbps[0] for g in link_gbps):
+            # uniform profiles: the historical product, bit-for-bit
+            aggregate_bytes_s = link_gbps[0] * 1e9 / 8.0 * len(link_gbps)
+        else:
+            aggregate_bytes_s = sum(g * 1e9 / 8.0 for g in link_gbps)
+        return total_bytes / aggregate_bytes_s

@@ -5,7 +5,9 @@ ContainerLab's ``netem`` and measures ~22 ms host-to-host RTT (Fig. 8) and
 ~800 Mbit/s effective spine-link throughput during training (§5.5).  This
 module reproduces both:
 
-* :class:`Netem` — per-link-class delay/jitter/bandwidth/loss;
+* :class:`Netem` — per-link profile resolution (``profile(u, v)``): link-class
+  delay/jitter/bandwidth/loss defaults, overridable per DC pair
+  (``wan_pairs`` — the asymmetric-WAN axis) and per individual link;
 * :func:`ping_rtt` — RTT samples along a fabric path (Fig. 8);
 * :class:`WanTimingModel` — deterministic per-collective transfer times used
   by the Fig. 14 reproduction and by the geo-runtime's step-time estimator:
@@ -61,9 +63,59 @@ TPU_DCI = NetemProfile(delay_ms=10.0, jitter_ms=0.5, bandwidth_gbps=72.0)
 #: forwarding in the emulation; sub-ms, calibrated against Fig. 8).
 SWITCH_FORWARDING_MS = 0.25
 
+#: Per-DC-pair WAN profile overrides, keyed by (dc_i, dc_j) with i < j after
+#: normalization: real geo deployments are asymmetric (per-pair fiber RTT is
+#: the axis Papavasileiou et al. sweep), so one ``wan`` class profile is only
+#: the *default*, not the whole map.
+WanPairMap = Dict[Tuple[int, int], NetemProfile]
+
+
+def normalize_wan_pairs(
+    wan_pairs: Optional[WanPairMap], num_dcs: Optional[int] = None
+) -> Dict[Tuple[int, int], NetemProfile]:
+    """Validate and key-normalize a per-DC-pair profile map.
+
+    Keys are unordered DC pairs — ``(2, 1)`` and ``(1, 2)`` name the same
+    fiber bundle — stored as ``(lo, hi)``.  Self-pairs, duplicate keys
+    (after normalization), and pairs outside ``1..num_dcs`` (when known)
+    raise; an empty/None map normalizes to ``{}``, the symmetric default.
+    """
+    out: Dict[Tuple[int, int], NetemProfile] = {}
+    for key, prof in (wan_pairs or {}).items():
+        i, j = int(key[0]), int(key[1])
+        if i == j:
+            raise ValueError(f"wan_pairs key {key!r} is not a DC *pair*")
+        lo, hi = (i, j) if i < j else (j, i)
+        if lo < 1 or (num_dcs is not None and hi > num_dcs):
+            raise ValueError(
+                f"wan_pairs key {key!r} outside DCs 1..{num_dcs}"
+            )
+        if (lo, hi) in out:
+            raise ValueError(
+                f"wan_pairs keys {key!r} and {(lo, hi)!r} name the same pair"
+            )
+        if not isinstance(prof, NetemProfile):
+            raise TypeError(f"wan_pairs[{key!r}] must be a NetemProfile")
+        out[(lo, hi)] = prof
+    return out
+
 
 class Netem:
-    """Link-class -> profile mapping over a :class:`Fabric`."""
+    """Per-link profile resolution over a :class:`Fabric`.
+
+    :meth:`profile` is the single source of truth every consumer (fluid
+    timing, congestion matrix, RTT sampling, roofline) resolves link
+    parameters through.  Resolution order:
+
+    1. an explicit per-link override (:meth:`override_link`);
+    2. for WAN links, the per-DC-pair map ``wan_pairs`` — the asymmetric-WAN
+       axis (one profile per inter-DC fiber bundle);
+    3. the link-class defaults ``wan`` / ``lan``.
+
+    With no overrides this is exactly the historical two-class behavior —
+    byte-identical, including the jitter RNG stream, which is untouched by
+    the resolution layer.
+    """
 
     def __init__(
         self,
@@ -71,14 +123,37 @@ class Netem:
         wan: NetemProfile = PAPER_WAN,
         lan: NetemProfile = PAPER_LAN,
         seed: int = 0,
+        *,
+        wan_pairs: Optional[WanPairMap] = None,
+        link_overrides: Optional[Dict[Tuple[str, str], NetemProfile]] = None,
     ):
         self.fabric = fabric
         self.wan = wan
         self.lan = lan
         self.rng = np.random.default_rng(seed)
+        self.wan_pairs = normalize_wan_pairs(wan_pairs, fabric.config.num_dcs)
+        self._link_overrides: Dict[frozenset, NetemProfile] = {}
+        for (u, v), prof in (link_overrides or {}).items():
+            self.override_link(u, v, prof)
+
+    def override_link(self, u: str, v: str, profile: NetemProfile) -> None:
+        """Pin one specific link (either endpoint order) to ``profile``."""
+        if not isinstance(profile, NetemProfile):
+            raise TypeError("link override must be a NetemProfile")
+        self._link_overrides[frozenset((u, v))] = profile
 
     def profile(self, u: str, v: str) -> NetemProfile:
-        return self.wan if self.fabric.is_wan_link(u, v) else self.lan
+        if self._link_overrides:
+            override = self._link_overrides.get(frozenset((u, v)))
+            if override is not None:
+                return override
+        if self.fabric.is_wan_link(u, v):
+            if self.wan_pairs:
+                pair = self.wan_pairs.get(self.fabric.wan_pair(u, v))
+                if pair is not None:
+                    return pair
+            return self.wan
+        return self.lan
 
     def one_way_delay_ms(self, path_links: Sequence[Tuple[str, str, bool]]) -> float:
         """One jittered one-way delay sample along (u, v, is_wan) links.
@@ -146,10 +221,7 @@ class WanTimingModel:
         per_link: Dict[Link, float] = {}
         worst: Tuple[float, Optional[Link], int] = (0.0, None, 0)
         for (u, v), nbytes in flow_bytes.items():
-            if u in self.fabric.hosts or v in self.fabric.hosts:
-                bw = self.netem.lan.bandwidth_gbps
-            else:
-                bw = self.netem.profile(u, v).bandwidth_gbps
+            bw = self.netem.profile(u, v).bandwidth_gbps
             secs = nbytes * 8.0 / (bw * 1e9)
             per_link[(u, v)] = secs
             if secs > worst[0]:

@@ -14,6 +14,16 @@ paper's §5 studies, so a new study is a spec edit::
 
     result = run_scenario(get_scenario("fig14_allreduce"))
     print(result.sync.wan_seconds, result.metrics())
+
+The sweep/campaign engine (:mod:`.sweep`, ISSUE 6) scales one spec to a
+fleet: a :class:`Sweep` expands dotted-field overrides into variants and
+joins their metrics into one gateable table (optionally over a process
+pool), and :func:`random_campaign` samples reproducible Monte Carlo
+campaigns over asymmetric per-DC-pair WANs::
+
+    from repro.scenario import fiber_latency_campaign
+
+    table = fiber_latency_campaign().run(workers=4)
 """
 
 from repro.core.geo import SyncOptions
@@ -31,6 +41,15 @@ from repro.scenario.spec import (
     WorkloadSpec,
     model_grad_bytes,
 )
+from repro.scenario.sweep import (
+    Sweep,
+    SweepResult,
+    SweepRow,
+    apply_overrides,
+    fiber_latency_campaign,
+    random_campaign,
+    run_sweep,
+)
 
 __all__ = [
     "EVENT_KINDS",
@@ -38,12 +57,19 @@ __all__ = [
     "ScenarioEvent",
     "ScenarioResult",
     "StepRecord",
+    "Sweep",
+    "SweepResult",
+    "SweepRow",
     "SyncOptions",
     "TopologySpec",
     "WorkloadSpec",
+    "apply_overrides",
+    "fiber_latency_campaign",
     "get_scenario",
     "model_grad_bytes",
+    "random_campaign",
     "register_scenario",
     "run_scenario",
+    "run_sweep",
     "scenario_names",
 ]

@@ -38,7 +38,7 @@ from typing import Dict, Optional, Tuple, Union
 from repro.core.fabric import FabricConfig
 from repro.core.geo import GeoFabric, SyncOptions
 from repro.core.schedule import CollectiveSchedule
-from repro.core.wan import NetemProfile, PAPER_LAN, PAPER_WAN
+from repro.core.wan import NetemProfile, PAPER_LAN, PAPER_WAN, normalize_wan_pairs
 
 __all__ = [
     "Scenario",
@@ -73,8 +73,13 @@ class TopologySpec:
     :class:`~repro.core.geo.GeoFabric` shape; ``fabric`` overrides it with
     a raw :class:`~repro.core.fabric.FabricConfig` (the 8-DC storm and the
     paper's asymmetric Fig. 1 topology need exact host layouts).
-    ``default_tenant=False`` skips the all-hosts training tenant so
-    tenancy scenarios can lay out their own VNIs via events.
+    ``wan_pairs`` assigns one :class:`NetemProfile` per inter-DC fiber
+    bundle — ``{(1, 3): NetemProfile(delay_ms=28.0, ...)}`` — resolved by
+    :meth:`Netem.profile <repro.core.wan.Netem.profile>` ahead of the
+    ``wan`` class default (a dict or pre-normalized entry tuple is
+    accepted; it is canonicalized so spec equality and the JSON round-trip
+    hold).  ``default_tenant=False`` skips the all-hosts training tenant
+    so tenancy scenarios can lay out their own VNIs via events.
     """
 
     num_pods: int = 2
@@ -86,6 +91,17 @@ class TopologySpec:
     seed: int = 0
     fabric: Optional[FabricConfig] = None
     default_tenant: bool = True
+    wan_pairs: Tuple[Tuple[Tuple[int, int], NetemProfile], ...] = ()
+
+    def __post_init__(self):
+        normalized = normalize_wan_pairs(dict(self.wan_pairs or ()), self.num_dcs)
+        object.__setattr__(
+            self, "wan_pairs", tuple(sorted(normalized.items()))
+        )
+
+    @property
+    def num_dcs(self) -> int:
+        return self.fabric.num_dcs if self.fabric is not None else self.num_pods
 
     def build(self) -> GeoFabric:
         """Materialize the emulated deployment."""
@@ -94,6 +110,7 @@ class TopologySpec:
             self.workers_per_pod,
             wan=self.wan,
             lan=self.lan,
+            wan_pairs=dict(self.wan_pairs) or None,
             num_channels=self.num_channels,
             port_scheme=self.port_scheme,
             seed=self.seed,
@@ -112,6 +129,9 @@ class TopologySpec:
             "seed": self.seed,
             "fabric": None if self.fabric is None else _fabric_dict(self.fabric),
             "default_tenant": self.default_tenant,
+            "wan_pairs": [
+                [list(pair), _profile_dict(p)] for pair, p in self.wan_pairs
+            ],
         }
 
     @classmethod
@@ -121,6 +141,9 @@ class TopologySpec:
         d["lan"] = NetemProfile(**d["lan"])
         if d.get("fabric") is not None:
             d["fabric"] = _fabric_from_dict(d["fabric"])
+        d["wan_pairs"] = tuple(
+            (tuple(pair), NetemProfile(**p)) for pair, p in d.get("wan_pairs", ())
+        )
         return cls(**d)
 
 
