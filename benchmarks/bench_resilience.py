@@ -1,0 +1,221 @@
+"""Resilience suite: gray failures, SRLG cuts, pod loss — executed and gated.
+
+ISSUE 7 tentpole: the injection -> detection -> adaptation loop priced end
+to end, with the three study conclusions as hard gates (not just numbers):
+
+* **brownout** — under a 4x bandwidth brownout on one DC pair, the
+  :class:`~repro.scenario.spec.DegradationPolicy` run finishes strictly
+  faster than the no-policy run; the SLA probe trips inside its
+  ``trip_after`` hysteresis window; and *no* BFD recovery timeline exists
+  in either run (gray failure by construction: the links never go down);
+* **SRLG atomicity** — a ``fiber_cut`` fails every member link through
+  one shared detection window, and the resulting routing + control-plane
+  state (per-link reroute stats, EVPN resync stats, and the costed
+  schedule's per-link byte counters) is byte-for-byte identical to
+  sequential per-link failure in the same order — the incremental
+  re-converger composes;
+* **pod-loss economics** — the priced recovery decomposes exactly:
+  ``lost_work = (detected_step - last pre-failure checkpoint) * step_time``
+  and ``total = lost_work + detect + restore + remesh``, with the downtime
+  charged to precisely the detection step of the timeline;
+* the degradation/storm campaign axes are worker-invariant: a 2-worker
+  process-pool run joins to the identical table.
+
+Every run's deterministic ``metrics()`` land as gated ``BenchRow`` rows
+(``BENCH_resilience.json``) under ``benchmarks/compare.py``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from repro.scenario import get_scenario, random_campaign, run_scenario, run_sweep
+
+from .common import BenchRow, timed
+
+CAMPAIGN_SEED = 17
+
+
+def _srlg_member_links(geo, pairs) -> List[Tuple[str, str]]:
+    """The WAN links a fiber_cut severs, in the runner's sorted order."""
+    members = set(pairs)
+    return sorted(
+        tuple(sorted(l))
+        for l in geo.fabric.wan_links
+        if geo.fabric.wan_pair(*l) in members and geo.fabric.link_up(*l)
+    )
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+
+    # -- gate: graceful degradation beats riding out the brownout ------------
+    with_policy, us_p = timed(lambda: run_scenario(get_scenario("wan_brownout")))
+    no_policy, us_n = timed(
+        lambda: run_scenario(get_scenario("wan_brownout", policy=None))
+    )
+    if with_policy.recoveries or no_policy.recoveries:
+        raise AssertionError(
+            "brownout must be gray: BFD produced a recovery timeline"
+        )
+    if not with_policy.total_seconds < no_policy.total_seconds:
+        raise AssertionError(
+            f"policy run ({with_policy.total_seconds:.3f}s) must beat "
+            f"no-policy ({no_policy.total_seconds:.3f}s) under the brownout"
+        )
+    policy = with_policy.scenario.policy
+    degrade_at = next(
+        e.at_step for e in with_policy.scenario.events if e.kind == "degrade_pair"
+    )
+    first_trip_ms = with_policy.metrics()["probe_first_trip_ms"]
+    # probe clock runs at 1000 ms/step; the trip must land exactly at the
+    # trip_after-th breaching observation (hysteresis window, no earlier)
+    expected_trip_ms = (degrade_at + policy.trip_after - 1) * 1000.0
+    if first_trip_ms != expected_trip_ms:
+        raise AssertionError(
+            f"probe tripped at {first_trip_ms}ms, expected {expected_trip_ms}ms "
+            f"(degrade at step {degrade_at}, trip_after={policy.trip_after})"
+        )
+    rows.append(
+        BenchRow(
+            name="brownout_policy",
+            us_per_call=us_p,
+            derived=(
+                f"total {with_policy.total_seconds:.2f}s (no-policy "
+                f"{no_policy.total_seconds:.2f}s), trip@{first_trip_ms:.0f}ms, "
+                f"BFD quiet"
+            ),
+            metrics=with_policy.metrics(),
+        )
+    )
+    rows.append(
+        BenchRow(
+            name="brownout_no_policy",
+            us_per_call=us_n,
+            derived="same brownout ridden at full cost",
+            metrics=no_policy.metrics(),
+        )
+    )
+
+    # -- gate: SRLG fiber cut == sequential per-link failure, byte for byte --
+    spec = get_scenario("srlg_fiber_cut")
+    pairs = spec.topology.srlg_pairs("subsea-1")
+    geo_group = spec.topology.build()
+    geo_seq = spec.topology.build()
+    links = _srlg_member_links(geo_group, pairs)
+    if len(links) < 2 or len({geo_group.fabric.wan_pair(*l) for l in links}) < 2:
+        raise AssertionError("SRLG gate needs links spanning multiple DC pairs")
+    _, group_reroutes, group_resyncs = geo_group.detector.fail_group(links)
+    seq_reroutes = [geo_seq.fabric.fail_link(*l) for l in links]
+    seq_resyncs = [geo_seq.evpn.resync_incremental(s) for s in seq_reroutes]
+    if [dataclasses.asdict(s) for s in group_reroutes] != [
+        dataclasses.asdict(s) for s in seq_reroutes
+    ]:
+        raise AssertionError("SRLG group reroute stats differ from sequential")
+    if [dataclasses.asdict(s) for s in group_resyncs] != [
+        dataclasses.asdict(s) for s in seq_resyncs
+    ]:
+        raise AssertionError("SRLG group EVPN resyncs differ from sequential")
+    grad = spec.workload.resolve_grad_bytes()
+    cost_group = geo_group.sync_cost("hier", grad, jitter=False)
+    cost_seq = geo_seq.sync_cost("hier", grad, jitter=False)
+    if dict(geo_group.fabric.link_bytes) != dict(geo_seq.fabric.link_bytes):
+        raise AssertionError("post-cut routed byte counters differ")
+    if cost_group.wan_seconds != cost_seq.wan_seconds:
+        raise AssertionError(
+            f"post-cut sync costs differ: group {cost_group.wan_seconds} "
+            f"vs sequential {cost_seq.wan_seconds}"
+        )
+    srlg_result, us_s = timed(lambda: run_scenario(get_scenario("srlg_fiber_cut")))
+    if len(srlg_result.recoveries) != 1:
+        raise AssertionError(
+            f"one fiber_cut must yield one shared detection timeline, got "
+            f"{len(srlg_result.recoveries)}"
+        )
+    if len(srlg_result.reroutes) != 2 * len(links):
+        raise AssertionError("expected one reroute per member link, cut + restore")
+    rows.append(
+        BenchRow(
+            name="srlg_fiber_cut",
+            us_per_call=us_s,
+            derived=(
+                f"{len(links)} links over {len(pairs)} DC pairs, one shared "
+                f"detection ({srlg_result.recoveries[0].recovery_ms:.0f}ms); "
+                f"state == sequential, post-cut sync {cost_group.wan_seconds:.3f}s"
+            ),
+            metrics=srlg_result.metrics(),
+        )
+    )
+
+    # -- gate: pod-loss lost work decomposes exactly --------------------------
+    pod_result, us_pod = timed(
+        lambda: run_scenario(get_scenario("pod_loss_recovery"))
+    )
+    if len(pod_result.pod_recoveries) != 1:
+        raise AssertionError("expected exactly one priced pod recovery")
+    rec = pod_result.pod_recoveries[0]
+    pricing = pod_result.scenario.policy
+    checkpoint = (rec.failed_at_step // pricing.checkpoint_every) * pricing.checkpoint_every
+    if rec.plan.lost_steps != rec.detected_at_step - checkpoint:
+        raise AssertionError(
+            f"lost_steps {rec.plan.lost_steps} != detection "
+            f"{rec.detected_at_step} - checkpoint {checkpoint}"
+        )
+    m = pod_result.metrics()
+    decomposed = m["pod_lost_work_seconds"] + m["pod_downtime_seconds"]
+    if abs(m["pod_total_cost_seconds"] - decomposed) > 1e-9:
+        raise AssertionError(
+            f"total cost {m['pod_total_cost_seconds']} != lost work + downtime "
+            f"{decomposed}"
+        )
+    downtime_steps = [s.step for s in pod_result.steps if s.downtime_seconds > 0]
+    if downtime_steps != [rec.detected_at_step]:
+        raise AssertionError(
+            f"downtime must be charged to the detection step "
+            f"{rec.detected_at_step}, found on {downtime_steps}"
+        )
+    rows.append(
+        BenchRow(
+            name="pod_loss_recovery",
+            us_per_call=us_pod,
+            derived=(
+                f"pod {rec.pod} died@{rec.failed_at_step} "
+                f"detected@{rec.detected_at_step}, {rec.plan.lost_steps} steps "
+                f"lost, downtime {rec.plan.total_downtime_s:.2f}s, "
+                f"mesh -> {rec.mesh.note}"
+            ),
+            metrics=m,
+        )
+    )
+
+    # -- gate: degradation/storm campaign axes are worker-invariant ----------
+    def _campaign():
+        return random_campaign(
+            seed=CAMPAIGN_SEED,
+            variants=4,
+            degrade_probability=0.7,
+            storm_probability=0.5,
+        )
+
+    mc, us_mc = timed(lambda: run_sweep(_campaign()))
+    mc_par = run_sweep(_campaign(), workers=2)
+    if [r.to_dict() for r in mc.rows] != [r.to_dict() for r in mc_par.rows]:
+        raise AssertionError(
+            "degradation campaign differs between serial and 2-worker runs"
+        )
+    kinds = {e.kind for v in _campaign().variants() for e in v.events}
+    if "degrade_pair" not in kinds or "fail_switch" not in kinds:
+        raise AssertionError(
+            f"campaign seed {CAMPAIGN_SEED} must exercise both new axes, got {kinds}"
+        )
+    for r in mc.rows:
+        rows.append(
+            BenchRow(
+                name=f"degrade_campaign_{r.name}",
+                us_per_call=us_mc / len(mc.rows),
+                derived=f"{len(r.overrides)} overrides",
+                metrics=dict(r.metrics),
+            )
+        )
+    return rows

@@ -30,6 +30,7 @@ SUITES = (
     ("schedule_overlap", "benchmarks.bench_schedule"),
     ("scenarios", "benchmarks.bench_scenarios"),
     ("sweeps", "benchmarks.bench_sweeps"),
+    ("resilience", "benchmarks.bench_resilience"),
     ("roofline", "benchmarks.bench_roofline"),
 )
 

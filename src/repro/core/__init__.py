@@ -88,6 +88,7 @@ from .ports import (
     qp_aware_port,
     rxe_baseline_port,
 )
+from .slaprobe import ProbeState, ProbeTransition, SlaProbe, SlaProbeBank
 from .tenancy import TenancyManager, Tenant
 from .wan import (
     Netem,
@@ -96,6 +97,7 @@ from .wan import (
     PAPER_WAN,
     TPU_DCI,
     WanTimingModel,
+    degraded_profile,
     ping_rtt,
 )
 
@@ -124,6 +126,8 @@ __all__ = [
     "PAPER_WAN",
     "Phase",
     "PhaseTiming",
+    "ProbeState",
+    "ProbeTransition",
     "QueuePair",
     "RecoveryTimeline",
     "RerouteStats",
@@ -131,6 +135,8 @@ __all__ = [
     "RouteType3",
     "SYNC_STRATEGIES",
     "ScheduleReport",
+    "SlaProbe",
+    "SlaProbeBank",
     "StrategyContext",
     "SyncCost",
     "SyncOptions",
@@ -149,6 +155,7 @@ __all__ = [
     "compare_schemes",
     "concurrent_ecmp_flow_weights",
     "congestion_report",
+    "degraded_profile",
     "ecmp_flow_weights",
     "ecmp_hash",
     "expected_collisions",

@@ -22,7 +22,7 @@ from __future__ import annotations
 
 import enum
 from dataclasses import dataclass, field
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from .evpn import EvpnControlPlane, EvpnResyncStats
 from .fabric import Fabric, RerouteStats
@@ -202,3 +202,97 @@ class FailureDetector:
         if self.evpn is not None:
             self.evpn.resync_incremental(stats)
         return stats
+
+    def fail_group(
+        self,
+        links: Sequence[Tuple[str, str]],
+        *,
+        mechanism: str = "bfd",
+        failure_at_ms: float = 0.0,
+        label: str = "group",
+        bfd_interval_ms: float = 10.0,
+        bfd_detect_mult: int = 3,
+        bgp_hold_s: float = 180.0,
+        propagation_hops: int = 3,
+    ) -> Tuple[RecoveryTimeline, List[RerouteStats], List[EvpnResyncStats]]:
+        """Fail several links *atomically* — one shared-cause event.
+
+        Models a spine/leaf switch death or an SRLG fiber cut: every
+        member link's BFD session times out in parallel (one detection
+        window, not one per link), the withdrawal/best-path/FIB pipeline
+        runs once, and the per-link re-convergence + EVPN resync are
+        applied in deterministic (sorted-input) order.  The routing state
+        after the group failure is byte-for-byte what sequential
+        :meth:`Fabric.fail_link` calls in the same order produce — the
+        incremental re-converger composes — which the
+        ``bench_resilience`` SRLG gate pins.
+
+        Returns the single shared :class:`RecoveryTimeline` (its
+        ``reroute``/``evpn_resync`` fields stay ``None``; the per-link
+        stats come back as lists so callers don't double-count).
+        """
+        links = [tuple(l) for l in links]
+        if not links:
+            raise ValueError(f"{label}: no links to fail")
+        u, v = links[0]
+        events: List[Tuple[float, str]] = [
+            (failure_at_ms, f"{label}: {len(links)} links down")
+        ]
+        if mechanism == "bfd":
+            session = BfdSession(
+                u, v, interval_ms=bfd_interval_ms, detect_mult=bfd_detect_mult
+            )
+            session.bring_up(failure_at_ms)
+            detected = session.time_to_detect(failure_at_ms)
+            events.append(
+                (
+                    detected,
+                    f"BFD detect on all {len(links)} sessions "
+                    f"({session.detect_time_ms:.0f} ms timer, parallel)",
+                )
+            )
+        elif mechanism == "bgp":
+            timer = BgpHoldTimer(u, v, hold_s=bgp_hold_s)
+            detected = timer.time_to_detect(failure_at_ms)
+            events.append((detected, f"BGP hold timer expiry ({bgp_hold_s:.0f} s)"))
+        else:
+            raise ValueError(f"unknown mechanism {mechanism!r}")
+
+        t = detected
+        t += WITHDRAWAL_PROPAGATION_MS_PER_HOP * propagation_hops
+        events.append((t, f"withdrawals propagated ({propagation_hops} hops)"))
+        t += BEST_PATH_RERUN_MS
+        events.append((t, "best-path recomputed"))
+        t += FIB_UPDATE_MS
+
+        reroutes: List[RerouteStats] = []
+        resyncs: List[EvpnResyncStats] = []
+        for lu, lv in links:
+            stats = self.fabric.fail_link(lu, lv)
+            reroutes.append(stats)
+            events.append(
+                (
+                    t,
+                    f"FIB reprogrammed for {lu}<->{lv} "
+                    f"({stats.patched} patched, {stats.rebuilt} rebuilt, "
+                    f"{stats.retained} untouched)",
+                )
+            )
+            if self.evpn is not None:
+                es = self.evpn.resync_incremental(stats)
+                resyncs.append(es)
+        timeline = RecoveryTimeline(
+            failure_at_ms=failure_at_ms,
+            detected_at_ms=detected,
+            converged_at_ms=t,
+            mechanism=mechanism,
+            events=events,
+        )
+        return timeline, reroutes, resyncs
+
+    def restore_group(
+        self, links: Sequence[Tuple[str, str]]
+    ) -> List[RerouteStats]:
+        """Restore several links in deterministic input order (each with
+        its incremental EVPN resync), the inverse of :meth:`fail_group`."""
+        return [self.restore(tuple(l)) for l in links]

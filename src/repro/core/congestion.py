@@ -126,7 +126,7 @@ def build_link_load_matrix(
     is_wan = np.zeros(len(links), dtype=bool)
     for i, (u, v) in enumerate(links):
         prof = netem.profile(u, v)
-        capacity[i] = prof.bandwidth_gbps
+        capacity[i] = prof.effective_bandwidth_gbps
         delay[i] = 2.0 * prof.delay_ms  # netem qdisc on both interfaces
         is_wan[i] = fabric.is_wan_link(u, v)
     hops = np.diff(paths.ptr)

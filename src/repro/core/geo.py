@@ -88,6 +88,12 @@ class SyncOptions:
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "SyncOptions":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - fields)
+        if unknown:
+            raise ValueError(
+                f"unknown SyncOptions key(s) {unknown}; valid: {sorted(fields)}"
+            )
         return cls(**d)
 
     @classmethod
@@ -205,12 +211,19 @@ class GeoFabric:
 
     # -- sync-strategy costing (Fig. 14 pipeline + beyond-paper schedules) ---
 
-    def strategy_context(self) -> StrategyContext:
-        """Topology facts for :mod:`repro.core.schedule` strategy builders."""
+    def strategy_context(self, exclude_pods: Tuple[int, ...] = ()) -> StrategyContext:
+        """Topology facts for :mod:`repro.core.schedule` strategy builders.
+
+        ``exclude_pods`` drops dead pods from the context (post-remesh
+        graceful degradation: survivors keep synchronizing among
+        themselves); excluding every pod raises.
+        """
+        dead = set(exclude_pods)
+        pods = [p for p in range(1, self.num_pods + 1) if p not in dead]
+        if not pods:
+            raise ValueError("cannot exclude every pod from the strategy context")
         return StrategyContext(
-            pod_workers=tuple(
-                tuple(self.workers(pod)) for pod in range(1, self.num_pods + 1)
-            ),
+            pod_workers=tuple(tuple(self.workers(pod)) for pod in pods),
             num_channels=self.num_channels,
             port_scheme=self.port_scheme,
         )
@@ -312,7 +325,7 @@ class GeoFabric:
             bottleneck = result.bottleneck_link
             bottleneck_bytes = result.bottleneck_bytes
             cap = (
-                self.netem.profile(*bottleneck).bandwidth_gbps
+                self.netem.profile(*bottleneck).effective_bandwidth_gbps
                 if bottleneck is not None
                 else 0.0
             )
@@ -440,11 +453,11 @@ class GeoFabric:
         """
         total_bytes = cross_pod_bytes_per_chip * chips_per_pod
         link_gbps = [
-            self.netem.profile(*sorted(link)).bandwidth_gbps
+            self.netem.profile(*sorted(link)).effective_bandwidth_gbps
             for link in self.fabric.wan_links
         ]
         if not link_gbps:
-            link_gbps = [self.netem.wan.bandwidth_gbps]
+            link_gbps = [self.netem.wan.effective_bandwidth_gbps]
         if all(g == link_gbps[0] for g in link_gbps):
             # uniform profiles: the historical product, bit-for-bit
             aggregate_bytes_s = link_gbps[0] * 1e9 / 8.0 * len(link_gbps)

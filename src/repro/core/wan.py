@@ -49,6 +49,43 @@ class NetemProfile:
     bandwidth_gbps: float = 10.0
     loss: float = 0.0
 
+    @property
+    def effective_bandwidth_gbps(self) -> float:
+        """Goodput after loss-induced retransmission: ``bw * (1 - loss)``.
+
+        The fluid/congestion models consume this, not the raw line rate, so
+        a loss spike injected by a gray-failure event shows up as a
+        bandwidth brownout without a packet-level model.  ``loss=0`` keeps
+        the historical value bit-for-bit (``bw * 1.0``).
+        """
+        return self.bandwidth_gbps * (1.0 - self.loss)
+
+
+def degraded_profile(
+    base: NetemProfile,
+    *,
+    bandwidth_fraction: float = 1.0,
+    extra_delay_ms: float = 0.0,
+    extra_loss: float = 0.0,
+) -> NetemProfile:
+    """``base`` under a gray failure: a bandwidth brownout, latency
+    inflation, and/or a loss spike — always derived from the pristine
+    profile, so re-degrading replaces rather than compounds."""
+    if not 0.0 < bandwidth_fraction <= 1.0:
+        raise ValueError(
+            f"bandwidth_fraction must be in (0, 1], got {bandwidth_fraction}"
+        )
+    if extra_delay_ms < 0.0:
+        raise ValueError("extra_delay_ms must be >= 0")
+    if not 0.0 <= extra_loss < 1.0:
+        raise ValueError("extra_loss must be in [0, 1)")
+    return NetemProfile(
+        delay_ms=base.delay_ms + extra_delay_ms,
+        jitter_ms=base.jitter_ms,
+        bandwidth_gbps=base.bandwidth_gbps * bandwidth_fraction,
+        loss=min(base.loss + extra_loss, 0.999),
+    )
+
 
 #: Paper defaults: WAN links get 5 ms +/- 1 ms per interface; LAN links are
 #: effectively free at ping granularity; the *effective* WAN throughput
@@ -133,6 +170,11 @@ class Netem:
         self.rng = np.random.default_rng(seed)
         self.wan_pairs = normalize_wan_pairs(wan_pairs, fabric.config.num_dcs)
         self._link_overrides: Dict[frozenset, NetemProfile] = {}
+        # gray-failure bookkeeping: what each degraded link/pair resolved to
+        # *before* its first degradation, so restore is exact and repeated
+        # degradations compose on the pristine base, never on each other
+        self._degraded_links: Dict[frozenset, Tuple[Optional[NetemProfile], NetemProfile]] = {}
+        self._degraded_pairs: Dict[Tuple[int, int], Optional[NetemProfile]] = {}
         for (u, v), prof in (link_overrides or {}).items():
             self.override_link(u, v, prof)
 
@@ -154,6 +196,125 @@ class Netem:
                     return pair
             return self.wan
         return self.lan
+
+    # -- gray-failure injection ----------------------------------------------
+
+    def _resolve_base(self, u: str, v: str) -> NetemProfile:
+        """Profile resolution ignoring any per-link override (the class/pair
+        layers only) — the pristine base a link degradation derives from."""
+        if self.fabric.is_wan_link(u, v):
+            if self.wan_pairs:
+                pair = self.wan_pairs.get(self.fabric.wan_pair(u, v))
+                if pair is not None:
+                    return pair
+            return self.wan
+        return self.lan
+
+    def degrade_link(
+        self,
+        u: str,
+        v: str,
+        *,
+        bandwidth_fraction: float = 1.0,
+        extra_delay_ms: float = 0.0,
+        extra_loss: float = 0.0,
+    ) -> NetemProfile:
+        """Brownout one link: install a degraded per-link override.
+
+        The base is whatever the link resolved to before its *first*
+        degradation (a manual :meth:`override_link`, the pair map, or the
+        class default) — re-degrading an already-degraded link replaces the
+        degradation relative to that base instead of compounding.
+        :meth:`restore_link_profile` undoes it exactly.
+        """
+        key = frozenset((u, v))
+        if key in self._degraded_links:
+            base = self._degraded_links[key][1]
+        else:
+            saved = self._link_overrides.get(key)
+            base = saved if saved is not None else self._resolve_base(u, v)
+            self._degraded_links[key] = (saved, base)
+        prof = degraded_profile(
+            base,
+            bandwidth_fraction=bandwidth_fraction,
+            extra_delay_ms=extra_delay_ms,
+            extra_loss=extra_loss,
+        )
+        self._link_overrides[key] = prof
+        return prof
+
+    def restore_link_profile(self, u: str, v: str) -> None:
+        """Undo :meth:`degrade_link` exactly (pre-degradation override or
+        class/pair resolution, whichever held before)."""
+        key = frozenset((u, v))
+        if key not in self._degraded_links:
+            raise ValueError(f"link {u}<->{v} is not degraded")
+        saved, _ = self._degraded_links.pop(key)
+        if saved is None:
+            self._link_overrides.pop(key, None)
+        else:
+            self._link_overrides[key] = saved
+
+    def degrade_pair(
+        self,
+        i: int,
+        j: int,
+        *,
+        bandwidth_fraction: float = 1.0,
+        extra_delay_ms: float = 0.0,
+        extra_loss: float = 0.0,
+    ) -> NetemProfile:
+        """Brownout every link of one inter-DC fiber bundle: install a
+        degraded ``wan_pairs`` entry for DC pair ``(i, j)``.
+
+        Per-link overrides still win (resolution order unchanged); the base
+        is the pair's pristine entry or the ``wan`` class default, and
+        re-degrading replaces rather than compounds — same contract as
+        :meth:`degrade_link`.
+        """
+        a, b = int(i), int(j)
+        if a == b:
+            raise ValueError(f"({i}, {j}) is not a DC *pair*")
+        lo, hi = (a, b) if a < b else (b, a)
+        num_dcs = self.fabric.config.num_dcs
+        if lo < 1 or hi > num_dcs:
+            raise ValueError(f"DC pair ({lo}, {hi}) outside DCs 1..{num_dcs}")
+        pair = (lo, hi)
+        if pair not in self._degraded_pairs:
+            self._degraded_pairs[pair] = self.wan_pairs.get(pair)
+        base = self._degraded_pairs[pair]
+        if base is None:
+            base = self.wan
+        prof = degraded_profile(
+            base,
+            bandwidth_fraction=bandwidth_fraction,
+            extra_delay_ms=extra_delay_ms,
+            extra_loss=extra_loss,
+        )
+        self.wan_pairs[pair] = prof
+        return prof
+
+    def restore_pair(self, i: int, j: int) -> None:
+        """Undo :meth:`degrade_pair` exactly."""
+        a, b = int(i), int(j)
+        pair = (a, b) if a < b else (b, a)
+        if pair not in self._degraded_pairs:
+            raise ValueError(f"DC pair {pair} is not degraded")
+        original = self._degraded_pairs.pop(pair)
+        if original is None:
+            self.wan_pairs.pop(pair, None)
+        else:
+            self.wan_pairs[pair] = original
+
+    @property
+    def degraded_pairs(self) -> Tuple[Tuple[int, int], ...]:
+        """Currently degraded DC pairs, sorted."""
+        return tuple(sorted(self._degraded_pairs))
+
+    @property
+    def degraded_links(self) -> Tuple[Tuple[str, str], ...]:
+        """Currently degraded individual links, sorted."""
+        return tuple(sorted(tuple(sorted(k)) for k in self._degraded_links))
 
     def one_way_delay_ms(self, path_links: Sequence[Tuple[str, str, bool]]) -> float:
         """One jittered one-way delay sample along (u, v, is_wan) links.
@@ -221,7 +382,7 @@ class WanTimingModel:
         per_link: Dict[Link, float] = {}
         worst: Tuple[float, Optional[Link], int] = (0.0, None, 0)
         for (u, v), nbytes in flow_bytes.items():
-            bw = self.netem.profile(u, v).bandwidth_gbps
+            bw = self.netem.profile(u, v).effective_bandwidth_gbps
             secs = nbytes * 8.0 / (bw * 1e9)
             per_link[(u, v)] = secs
             if secs > worst[0]:

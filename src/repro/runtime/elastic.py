@@ -32,6 +32,14 @@ class MeshPlan:
     def build(self) -> Mesh:
         return make_mesh(self.shape, self.axes)
 
+    def to_dict(self) -> dict:
+        return {
+            "shape": list(self.shape),
+            "axes": list(self.axes),
+            "npods": self.npods,
+            "note": self.note,
+        }
+
 
 def plan_remesh(
     current_pods: int,

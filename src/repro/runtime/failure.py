@@ -69,6 +69,11 @@ class HeartbeatMonitor:
                 newly_dead.append(wh.name)
             elif now_ms - wh.session.last_rx_ms > wh.session.interval_ms * 1.5:
                 wh.state = WorkerState.SUSPECT
+            else:
+                # heartbeats resumed inside the suspect window: a SUSPECT
+                # worker must fall back to HEALTHY even when the rx path
+                # touched the session directly rather than heartbeat().
+                wh.state = WorkerState.HEALTHY
         return newly_dead
 
     def alive(self) -> List[str]:

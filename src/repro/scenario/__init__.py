@@ -32,9 +32,15 @@ from repro.scenario.library import (
     register_scenario,
     scenario_names,
 )
-from repro.scenario.runner import ScenarioResult, StepRecord, run_scenario
+from repro.scenario.runner import (
+    PodRecovery,
+    ScenarioResult,
+    StepRecord,
+    run_scenario,
+)
 from repro.scenario.spec import (
     EVENT_KINDS,
+    DegradationPolicy,
     Scenario,
     ScenarioEvent,
     TopologySpec,
@@ -53,6 +59,8 @@ from repro.scenario.sweep import (
 
 __all__ = [
     "EVENT_KINDS",
+    "DegradationPolicy",
+    "PodRecovery",
     "Scenario",
     "ScenarioEvent",
     "ScenarioResult",

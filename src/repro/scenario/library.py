@@ -31,7 +31,13 @@ from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.fabric import Fabric, FabricConfig
 from repro.core.geo import SyncOptions
-from repro.scenario.spec import Scenario, ScenarioEvent, TopologySpec, WorkloadSpec
+from repro.scenario.spec import (
+    DegradationPolicy,
+    Scenario,
+    ScenarioEvent,
+    TopologySpec,
+    WorkloadSpec,
+)
 
 __all__ = [
     "AR_GRAD_BYTES",
@@ -286,6 +292,121 @@ def multi_tenant_churn(**kw) -> Scenario:
             "Multi-tenant churn (§5.4 beyond Table 1): per-step tenant "
             "detach/attach plus a leaf-isolation flap sequence; "
             "EvpnResyncStats rollups surface the control-plane blast radius."
+        ),
+    )
+
+
+@register_scenario("wan_brownout")
+def wan_brownout(
+    policy: Optional[DegradationPolicy] = DegradationPolicy(
+        degraded_sync_every=8, int8_wan=True
+    ),
+    bandwidth_fraction: float = 0.25,
+    **kw,
+) -> Scenario:
+    """Gray-failure brownout: one DC pair silently loses 4x bandwidth
+    mid-run (no link goes down — BFD stays UP throughout), then recovers.
+
+    With the default :class:`~repro.scenario.spec.DegradationPolicy` the
+    SLA probes trip after two breaching steps and the runner gracefully
+    degrades (sync every 8 steps, int8 WAN compression) until the probes
+    recover; ``policy=None`` rides the brownout at full cost — the
+    ``bench_resilience.py`` brownout gate prices the difference."""
+    events = (
+        ScenarioEvent(
+            kind="degrade_pair",
+            at_step=4,
+            pair=(1, 2),
+            bandwidth_fraction=bandwidth_fraction,
+        ),
+        ScenarioEvent(kind="restore_degradation", at_step=12, pair=(1, 2)),
+    )
+    return Scenario(
+        name="wan_brownout",
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, num_channels=4, seed=7),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=kw.pop("grad_bytes", AR_GRAD_BYTES),
+            steps=16,
+        ),
+        options=kw.pop("options", SyncOptions(jitter=False)),
+        events=events,
+        policy=policy,
+        description=(
+            "WAN brownout on pair (1,2): bandwidth quietly drops to a "
+            "fraction while BFD sessions stay UP; SLA probes trip with "
+            "hysteresis and the degradation policy falls back gracefully."
+        ),
+    )
+
+
+@register_scenario("srlg_fiber_cut")
+def srlg_fiber_cut(**kw) -> Scenario:
+    """SRLG fiber cut on a 4-DC fabric: the DC pairs (1,2) and (3,4)
+    share one conduit (``subsea-1``), so a single backhoe fails every WAN
+    link of both pairs *atomically* — one shared BFD detection window, one
+    withdrawal/best-path/FIB pipeline, per-link incremental reroute + EVPN
+    resync in deterministic order.  Leader-ring traffic between the cut
+    pairs transits the surviving DCs until the fiber is respliced.  The
+    resulting routing state is pinned byte-for-byte equal to sequential
+    per-link failure by the ``bench_resilience.py`` SRLG gate."""
+    events = (
+        ScenarioEvent(kind="fiber_cut", at_step=2, srlg="subsea-1"),
+        ScenarioEvent(kind="fiber_restore", at_step=5, srlg="subsea-1"),
+    )
+    return Scenario(
+        name="srlg_fiber_cut",
+        topology=TopologySpec(
+            num_pods=4,
+            workers_per_pod=2,
+            num_channels=4,
+            seed=9,
+            srlgs=(("subsea-1", ((1, 2), (3, 4))),),
+        ),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=kw.pop("grad_bytes", 64_000_000),
+            steps=8,
+        ),
+        options=kw.pop("options", SyncOptions(jitter=False)),
+        events=events,
+        policy=kw.pop("policy", None),
+        description=(
+            "Shared-risk-link-group cut: pairs (1,2) and (3,4) fail "
+            "together in one detection window; sync reroutes through the "
+            "surviving DCs until fiber_restore."
+        ),
+    )
+
+
+@register_scenario("pod_loss_recovery")
+def pod_loss_recovery(
+    policy: Optional[DegradationPolicy] = DegradationPolicy(),
+    **kw,
+) -> Scenario:
+    """Whole-pod loss priced end to end: pod 2 stops heartbeating at step
+    6, the HeartbeatMonitor declares it dead ~3 intervals later, and the
+    runner prices the recovery — roll back to the last checkpoint *before*
+    the death, restore over the WAN, re-mesh onto the survivor — into the
+    step timeline (``StepRecord.downtime_seconds``) and the
+    :class:`~repro.scenario.runner.PodRecovery` record.  Subsequent steps
+    cost the survivor-only schedule (single-DC: WAN sync disabled)."""
+    events = (ScenarioEvent(kind="pod_fail", at_step=6, pod=2),)
+    return Scenario(
+        name="pod_loss_recovery",
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, num_channels=4, seed=11),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=kw.pop("grad_bytes", AR_GRAD_BYTES),
+            steps=12,
+        ),
+        options=kw.pop("options", SyncOptions(jitter=False)),
+        events=events,
+        policy=policy,
+        description=(
+            "Pod-loss economics: lost work = steps since the last "
+            "pre-failure checkpoint, plus detection + checkpoint restore "
+            "+ elastic remesh downtime."
         ),
     )
 

@@ -22,16 +22,25 @@ the spec's :class:`~repro.core.geo.SyncOptions`, and returns a
 from __future__ import annotations
 
 import dataclasses
+import math
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
 from repro.core.bfd import RecoveryTimeline
 from repro.core.evpn import EvpnResyncStats
-from repro.core.fabric import RerouteStats
+from repro.core.fabric import RerouteStats, UnreachableError
 from repro.core.geo import GeoFabric, SyncCost
-from repro.scenario.spec import Scenario, ScenarioEvent
+from repro.core.schedule import build_schedule, with_compute_overlap
+from repro.core.slaprobe import ProbeState, ProbeTransition, SlaProbeBank
+from repro.scenario.spec import DegradationPolicy, Scenario, ScenarioEvent
 
-__all__ = ["ScenarioResult", "StepRecord", "apply_event", "run_scenario"]
+__all__ = [
+    "PodRecovery",
+    "ScenarioResult",
+    "StepRecord",
+    "apply_event",
+    "run_scenario",
+]
 
 
 @dataclass(frozen=True)
@@ -44,11 +53,41 @@ class StepRecord:
     compute_seconds: float  # compute term after straggler scaling
     straggler_factor: float
     events: Tuple[str, ...] = ()  # kinds of the events that fired this step
+    strategy: str = ""  # schedule actually costed (policy may have switched it)
+    degraded: bool = False  # was a DegradationPolicy adaptation active?
+    downtime_seconds: float = 0.0  # pod-loss detect/restore/remesh paid this step
 
     def to_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         d["events"] = list(self.events)
         return d
+
+
+@dataclass(frozen=True)
+class PodRecovery:
+    """One priced pod-loss episode: heartbeat detection -> checkpoint
+    restore -> elastic remesh, as the runner executed it."""
+
+    pod: int
+    failed_at_step: int
+    detected_at_step: int
+    plan: object  # repro.runtime.failure.RecoveryPlan
+    mesh: object  # repro.runtime.elastic.MeshPlan
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "pod": self.pod,
+            "failed_at_step": self.failed_at_step,
+            "detected_at_step": self.detected_at_step,
+            "detection_s": float(self.plan.detection_s),
+            "restore_s": float(self.plan.restore_s),
+            "remesh_s": float(self.plan.remesh_s),
+            "lost_steps": int(self.plan.lost_steps),
+            "lost_work_s": float(self.plan.lost_work_s),
+            "total_downtime_s": float(self.plan.total_downtime_s),
+            "total_cost_s": float(self.plan.total_cost_s),
+            "mesh": self.mesh.to_dict(),
+        }
 
 
 def _sync_cost_dict(c: SyncCost) -> Dict[str, object]:
@@ -109,6 +148,11 @@ class ScenarioResult:
     reroutes: List[RerouteStats] = field(default_factory=list)
     evpn_resyncs: List[EvpnResyncStats] = field(default_factory=list)
     geo: Optional[GeoFabric] = None
+    probe_transitions: List[ProbeTransition] = field(default_factory=list)
+    pod_recoveries: List[PodRecovery] = field(default_factory=list)
+    #: (at_step, pod) per pod_fail event, recorded by apply_event so the
+    #: trainer's replay sees them too; the runner's heartbeat loop prices them
+    pod_failures: List[Tuple[int, int]] = field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -148,6 +192,26 @@ class ScenarioResult:
             )
         if self.evpn_resyncs:
             out["evpn_mean_touched_frac"] = self.evpn_mean_touched_frac
+        if self.probe_transitions:
+            out["probe_trip_count"] = float(
+                sum(1 for t in self.probe_transitions if t.state == ProbeState.DEGRADED)
+            )
+            trips = [
+                t.at_ms for t in self.probe_transitions
+                if t.state == ProbeState.DEGRADED
+            ]
+            if trips:
+                out["probe_first_trip_ms"] = float(min(trips))
+        if self.pod_recoveries:
+            out["pod_lost_work_seconds"] = float(
+                sum(r.plan.lost_work_s for r in self.pod_recoveries)
+            )
+            out["pod_downtime_seconds"] = float(
+                sum(r.plan.total_downtime_s for r in self.pod_recoveries)
+            )
+            out["pod_total_cost_seconds"] = float(
+                sum(r.plan.total_cost_s for r in self.pod_recoveries)
+            )
         return out
 
     def to_dict(self) -> Dict[str, object]:
@@ -157,9 +221,51 @@ class ScenarioResult:
             "sync": None if self.sync is None else _sync_cost_dict(self.sync),
             "recoveries": [_recovery_dict(t) for t in self.recoveries],
             "evpn_resyncs": [_resync_dict(s) for s in self.evpn_resyncs],
+            "probe_transitions": [t.to_dict() for t in self.probe_transitions],
+            "pod_recoveries": [r.to_dict() for r in self.pod_recoveries],
             "metrics": self.metrics(),
             "total_seconds": self.total_seconds,
         }
+
+
+def _switch_links(geo: GeoFabric, node: str, *, down: bool) -> List[Tuple[str, str]]:
+    """Links incident to ``node``, filtered by current state, sorted."""
+    links = [
+        tuple(sorted(l))
+        for l in geo.fabric.all_links()
+        if node in l and geo.fabric.link_up(*l) != down
+    ]
+    if not links and not any(node in l for l in geo.fabric.all_links()):
+        raise ValueError(f"no links incident to node {node!r}")
+    return sorted(links)
+
+
+def _srlg_links(
+    geo: GeoFabric, pairs: Tuple[Tuple[int, int], ...], *, down: bool
+) -> List[Tuple[str, str]]:
+    """WAN links of the SRLG's member DC pairs, filtered by state, sorted."""
+    members = set(pairs)
+    return sorted(
+        tuple(sorted(l))
+        for l in geo.fabric.wan_links
+        if geo.fabric.wan_pair(*l) in members and geo.fabric.link_up(*l) != down
+    )
+
+
+def _apply_group_failure(
+    geo: GeoFabric,
+    result: ScenarioResult,
+    links: List[Tuple[str, str]],
+    *,
+    mechanism: str,
+    label: str,
+) -> None:
+    timeline, reroutes, resyncs = geo.detector.fail_group(
+        links, mechanism=mechanism, label=label
+    )
+    result.recoveries.append(timeline)
+    result.reroutes.extend(reroutes)
+    result.evpn_resyncs.extend(resyncs)
 
 
 def apply_event(
@@ -203,8 +309,90 @@ def apply_event(
     elif event.kind == "straggler":
         for s in range(event.at_step, event.at_step + event.duration_steps):
             straggler[s] = straggler.get(s, 1.0) * event.slowdown
+    elif event.kind == "degrade_link":
+        geo.netem.degrade_link(
+            *event.link,
+            bandwidth_fraction=event.bandwidth_fraction,
+            extra_delay_ms=event.extra_delay_ms,
+            extra_loss=event.extra_loss,
+        )
+    elif event.kind == "degrade_pair":
+        geo.netem.degrade_pair(
+            *event.pair,
+            bandwidth_fraction=event.bandwidth_fraction,
+            extra_delay_ms=event.extra_delay_ms,
+            extra_loss=event.extra_loss,
+        )
+    elif event.kind == "restore_degradation":
+        if event.link is not None:
+            geo.netem.restore_link_profile(*event.link)
+        else:
+            geo.netem.restore_pair(*event.pair)
+    elif event.kind == "fail_switch":
+        links = _switch_links(geo, event.node, down=False)
+        if links:
+            _apply_group_failure(
+                geo, result, links,
+                mechanism=event.mechanism,
+                label=f"switch {event.node} down",
+            )
+    elif event.kind == "restore_switch":
+        down = _switch_links(geo, event.node, down=True)
+        result.reroutes.extend(geo.detector.restore_group(down))
+    elif event.kind == "fiber_cut":
+        pairs = result.scenario.topology.srlg_pairs(event.srlg)
+        links = _srlg_links(geo, pairs, down=False)
+        if links:
+            _apply_group_failure(
+                geo, result, links,
+                mechanism=event.mechanism,
+                label=f"SRLG {event.srlg} cut ({len(pairs)} DC pairs)",
+            )
+    elif event.kind == "fiber_restore":
+        pairs = result.scenario.topology.srlg_pairs(event.srlg)
+        down = _srlg_links(geo, pairs, down=True)
+        result.reroutes.extend(geo.detector.restore_group(down))
+    elif event.kind == "pod_fail":
+        if event.pod > geo.num_pods:
+            raise ValueError(
+                f"pod_fail pod {event.pod} outside pods 1..{geo.num_pods}"
+            )
+        result.pod_failures.append((event.at_step, int(event.pod)))
     else:  # pragma: no cover - spec validation rejects unknown kinds
         raise ValueError(f"unknown event kind {event.kind!r}")
+
+
+def _wan_window_s(cost: SyncCost) -> float:
+    """Span of the schedule's WAN-carrying phases (the comm observation
+    window an SLA probe rates bytes against) — excludes a grafted compute
+    head, so overlapped and pure-sync steps measure consistently."""
+    spans = [(p.start_s, p.end_s) for p in cost.phases if p.wan_bytes > 0]
+    if not spans:
+        return float(cost.wan_seconds)
+    return max(e for _, e in spans) - min(s for s, _ in spans)
+
+
+def _pair_rates(geo: GeoFabric, cost: SyncCost) -> Dict[Tuple[int, int], float]:
+    """Observed per-DC-pair WAN rate (Gbit/s) of the last costed schedule,
+    from the fabric's routed byte counters and the comm window."""
+    window = _wan_window_s(cost)
+    if window <= 0.0:
+        return {}
+    pair_bytes: Dict[Tuple[int, int], int] = {}
+    for (u, v), b in geo.fabric.link_bytes.items():
+        if b and geo.fabric.is_wan_link(u, v):
+            pair = geo.fabric.wan_pair(u, v)
+            pair_bytes[pair] = pair_bytes.get(pair, 0) + b
+    return {p: b * 8.0 / (window * 1e9) for p, b in pair_bytes.items()}
+
+
+def _pair_rtt_ms(geo: GeoFabric, pair: Tuple[int, int]) -> float:
+    """Jitter-free leader RTT of a DC pair; inf when partitioned."""
+    leaders = geo.pod_leaders()
+    try:
+        return geo.netem.base_rtt_ms(leaders[pair[0] - 1], leaders[pair[1] - 1])
+    except UnreachableError:
+        return math.inf
 
 
 def run_scenario(
@@ -221,24 +409,88 @@ def run_scenario(
     it is the amortized sync cost alone.  The representative ``sync``
     rollup is costed jitter-free *before* any event fires, so it is a
     deterministic healthy-fabric baseline regardless of the event script.
+
+    With a :class:`~repro.scenario.spec.DegradationPolicy` on the spec,
+    the runner additionally closes the gray-failure loop: per-DC-pair
+    :class:`~repro.core.slaprobe.SlaProbe`\\ s calibrate against the
+    healthy representative, observe each step's achieved WAN rate and
+    leader RTT, and — once tripped — the policy's graceful degradation
+    (strategy fallback / raised sync period / int8 WAN compression)
+    applies from the next step until the probes recover.  ``pod_fail``
+    events drive the HeartbeatMonitor -> checkpoint-restore ->
+    ``plan_remesh`` chain: detection is priced into the step timeline
+    (``StepRecord.downtime_seconds``) and subsequent steps cost the
+    surviving-pod schedule; per-episode :class:`PodRecovery` records land
+    in the result.
     """
     geo = geo if geo is not None else scenario.topology.build()
     workload = scenario.workload
     grad_bytes = workload.resolve_grad_bytes()
     strategy = workload.strategy
+    policy = scenario.policy
     result = ScenarioResult(scenario=scenario, steps=[], sync=None, geo=geo)
 
+    baseline_rates: Dict[Tuple[int, int], float] = {}
     if strategy is not None:
         result.sync = geo.sync_cost(
             strategy,
             grad_bytes,
             options=dataclasses.replace(scenario.options, jitter=False),
         )
+        if policy is not None:
+            baseline_rates = _pair_rates(geo, result.sync)
+
+    # gray-failure probes: one per WAN DC pair, calibrated on the healthy
+    # representative (pairs the schedule never touches calibrate at rate 0,
+    # which disables their rate floor but keeps the RTT ceiling live)
+    probes: Optional[SlaProbeBank] = None
+    if policy is not None and strategy is not None and geo.num_pods > 1:
+        probes = SlaProbeBank(
+            rate_floor_frac=policy.rate_floor_frac,
+            rtt_ceiling_frac=policy.rtt_ceiling_frac,
+            trip_after=policy.trip_after,
+            recover_after=policy.recover_after,
+        )
+        for a in range(1, geo.num_pods + 1):
+            for b in range(a + 1, geo.num_pods + 1):
+                probes.calibrate(
+                    (a, b),
+                    rate_gbps=baseline_rates.get((a, b), 0.0),
+                    rtt_ms=_pair_rtt_ms(geo, (a, b)),
+                )
+        result.probe_transitions = probes.transitions
+
+    # pod-loss chain: a real HeartbeatMonitor on a step-indexed simulated
+    # clock (one heartbeat interval per step), priced via plan_recovery +
+    # the elastic coordinator's remesh plan.  Lazy import: repro.runtime
+    # pulls in jax, which control-plane-only sweeps must not pay for.
+    pricing = policy if policy is not None else DegradationPolicy()
+    monitor = coordinator = None
+    pod_names: List[str] = []
+    if any(e.kind == "pod_fail" for e in scenario.events):
+        from repro.runtime.elastic import ElasticCoordinator
+        from repro.runtime.failure import HeartbeatMonitor
+
+        pod_names = [f"pod{i}" for i in range(1, geo.num_pods + 1)]
+        monitor = HeartbeatMonitor(
+            pod_names,
+            interval_ms=pricing.heartbeat_interval_ms,
+            detect_mult=pricing.heartbeat_detect_mult,
+            start_ms=0.0,
+        )
+        coordinator = ElasticCoordinator(
+            pod_names, data=len(geo.workers(pod=1)), model=1
+        )
+    step_time_ref = workload.compute_seconds + (
+        result.sync.amortized_seconds if result.sync is not None else 0.0
+    )
 
     by_step: Dict[int, List[ScenarioEvent]] = {}
     for e in scenario.events:
         by_step.setdefault(e.at_step, []).append(e)
     straggler: Dict[int, float] = {}
+    silenced: Dict[int, int] = {}  # pod -> step its heartbeats stopped
+    dead_pods: set = set()
 
     # while no event has touched the fabric and the options are already
     # jitter-free, every pure-sync step costs exactly the representative
@@ -251,35 +503,128 @@ def run_scenario(
         for event in fired:
             apply_event(event, geo, result, straggler)
             fabric_pristine = fabric_pristine and event.kind == "straggler"
+            if event.kind == "pod_fail":
+                silenced.setdefault(int(event.pod), step)
+        downtime_s = 0.0
+        if monitor is not None:
+            now_ms = step * pricing.heartbeat_interval_ms
+            for idx, name in enumerate(pod_names, 1):
+                if idx not in silenced:
+                    monitor.heartbeat(name, now_ms)
+            for name in monitor.poll(now_ms):
+                idx = int(name[len("pod"):])
+                dead_pods.add(idx)
+                from repro.runtime.failure import plan_recovery
+
+                mesh = coordinator.on_pod_lost(name, step)
+                # rollback anchor: the last checkpoint *before* the pod
+                # died — nothing taken after the death is globally valid
+                failed_at = silenced.get(idx, step)
+                plan = plan_recovery(
+                    step=step,
+                    last_checkpoint_step=(failed_at // pricing.checkpoint_every)
+                    * pricing.checkpoint_every,
+                    step_time_s=step_time_ref,
+                    detect_time_ms=monitor.detect_time_ms(),
+                    checkpoint_bytes=float(grad_bytes),
+                    restore_bandwidth_gbps=pricing.restore_bandwidth_gbps,
+                    remesh_s=pricing.remesh_s,
+                )
+                result.pod_recoveries.append(
+                    PodRecovery(
+                        pod=idx,
+                        failed_at_step=failed_at,
+                        detected_at_step=step,
+                        plan=plan,
+                        mesh=mesh,
+                    )
+                )
+                downtime_s += plan.total_downtime_s
         if strategy is None or step >= workload.steps:
             continue  # event-only tail (or control-plane-only scenario)
         factor = straggler.get(step, 1.0)
         compute = workload.compute_seconds * factor
-        if workload.compute_seconds > 0:
-            seconds = geo.step_time(
-                strategy,
-                grad_bytes,
-                compute,
-                overlap_fraction=workload.overlap_fraction,
-                options=scenario.options,
+        degraded = probes is not None and probes.any_degraded
+        if policy is None and not dead_pods:
+            # the historical costing path, untouched (bit-identical
+            # timelines for every pre-existing scenario)
+            strategy_name = (
+                strategy if isinstance(strategy, str) else strategy.name
             )
-            sync_seconds = max(seconds - compute, 0.0)
+            if workload.compute_seconds > 0:
+                seconds = geo.step_time(
+                    strategy,
+                    grad_bytes,
+                    compute,
+                    overlap_fraction=workload.overlap_fraction,
+                    options=scenario.options,
+                )
+                sync_seconds = max(seconds - compute, 0.0)
+            else:
+                cost = (
+                    result.sync
+                    if reusable and fabric_pristine
+                    else geo.sync_cost(strategy, grad_bytes, options=scenario.options)
+                )
+                sync_seconds = cost.amortized_seconds
+                seconds = sync_seconds
         else:
-            cost = (
-                result.sync
-                if reusable and fabric_pristine
-                else geo.sync_cost(strategy, grad_bytes, options=scenario.options)
-            )
-            sync_seconds = cost.amortized_seconds
-            seconds = sync_seconds
+            # resilience path: cost the (possibly adapted) schedule over
+            # the surviving pods, then feed the probes what it observed
+            eff_strategy, eff_grad, eff_opts = strategy, grad_bytes, scenario.options
+            if degraded and policy is not None:
+                if policy.fallback_strategy is not None and isinstance(strategy, str):
+                    eff_strategy = policy.fallback_strategy
+                if policy.degraded_sync_every is not None:
+                    eff_opts = dataclasses.replace(
+                        eff_opts, sync_every=policy.degraded_sync_every
+                    )
+                if policy.int8_wan:
+                    eff_grad = max(int(grad_bytes * eff_opts.int8_ratio), 1)
+            if isinstance(eff_strategy, str):
+                schedule = build_schedule(
+                    eff_strategy,
+                    geo.strategy_context(tuple(sorted(dead_pods))),
+                    eff_grad,
+                    sync_every=eff_opts.sync_every,
+                    int8_ratio=eff_opts.int8_ratio,
+                )
+            else:
+                schedule = eff_strategy
+            strategy_name = schedule.name
+            if workload.compute_seconds > 0:
+                overlapped = with_compute_overlap(
+                    schedule, compute, workload.overlap_fraction
+                )
+                cost = geo.sync_cost(overlapped, options=eff_opts)
+                exposed = max(cost.wan_seconds - compute, 0.0)
+                sync_seconds = exposed / cost.sync_every
+                seconds = compute + sync_seconds
+            else:
+                cost = geo.sync_cost(schedule, options=eff_opts)
+                sync_seconds = cost.amortized_seconds
+                seconds = sync_seconds
+            if probes is not None:
+                rates = _pair_rates(geo, cost)
+                probe_now_ms = step * 1000.0  # one emulated second per step
+                for pair in probes.pairs:
+                    probes.observe(
+                        pair,
+                        probe_now_ms,
+                        rate_gbps=rates.get(pair, baseline_rates.get(pair, 0.0)),
+                        rtt_ms=_pair_rtt_ms(geo, pair),
+                    )
         result.steps.append(
             StepRecord(
                 step=step,
-                seconds=float(seconds),
+                seconds=float(seconds) + float(downtime_s),
                 sync_seconds=float(sync_seconds),
                 compute_seconds=float(compute),
                 straggler_factor=float(factor),
                 events=tuple(e.kind for e in fired),
+                strategy=strategy_name,
+                degraded=bool(degraded),
+                downtime_seconds=float(downtime_s),
             )
         )
     return result

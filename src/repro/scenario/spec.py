@@ -41,12 +41,24 @@ from repro.core.schedule import CollectiveSchedule
 from repro.core.wan import NetemProfile, PAPER_LAN, PAPER_WAN, normalize_wan_pairs
 
 __all__ = [
+    "DegradationPolicy",
     "Scenario",
     "ScenarioEvent",
     "SyncOptions",
     "TopologySpec",
     "WorkloadSpec",
 ]
+
+
+def _reject_unknown_keys(cls, d: Dict[str, object]) -> None:
+    """Clear error for unknown keys in a spec dict (sweep-override typos
+    used to die as a bare ``TypeError`` from ``cls(**d)``)."""
+    fields = {f.name for f in dataclasses.fields(cls)}
+    unknown = sorted(set(d) - fields)
+    if unknown:
+        raise ValueError(
+            f"unknown {cls.__name__} key(s) {unknown}; valid: {sorted(fields)}"
+        )
 
 
 def _profile_dict(p: NetemProfile) -> Dict[str, float]:
@@ -80,6 +92,13 @@ class TopologySpec:
     accepted; it is canonicalized so spec equality and the JSON round-trip
     hold).  ``default_tenant=False`` skips the all-hosts training tenant
     so tenancy scenarios can lay out their own VNIs via events.
+
+    ``srlgs`` declares *shared-risk link groups*: named sets of DC pairs
+    whose WAN links ride the same physical conduit (the sovereignty-driven
+    shared-fiber reality), so one ``fiber_cut`` event fails them together —
+    ``{"coastal": [(1, 2), (1, 3)]}`` (a dict or the canonicalized entry
+    tuple; pairs are normalized ``(lo, hi)`` and validated against
+    ``num_dcs`` exactly like ``wan_pairs`` keys).
     """
 
     num_pods: int = 2
@@ -92,12 +111,47 @@ class TopologySpec:
     fabric: Optional[FabricConfig] = None
     default_tenant: bool = True
     wan_pairs: Tuple[Tuple[Tuple[int, int], NetemProfile], ...] = ()
+    srlgs: Tuple[Tuple[str, Tuple[Tuple[int, int], ...]], ...] = ()
 
     def __post_init__(self):
         normalized = normalize_wan_pairs(dict(self.wan_pairs or ()), self.num_dcs)
         object.__setattr__(
             self, "wan_pairs", tuple(sorted(normalized.items()))
         )
+        object.__setattr__(self, "srlgs", self._normalize_srlgs(self.srlgs))
+
+    def _normalize_srlgs(
+        self, srlgs
+    ) -> Tuple[Tuple[str, Tuple[Tuple[int, int], ...]], ...]:
+        canon = []
+        for name, pairs in sorted(dict(srlgs or ()).items()):
+            if not name or not isinstance(name, str):
+                raise ValueError(
+                    f"SRLG name must be a non-empty string, got {name!r}"
+                )
+            norm = set()
+            for key in pairs:
+                i, j = int(key[0]), int(key[1])
+                if i == j:
+                    raise ValueError(f"SRLG {name!r} entry {key!r} is not a DC pair")
+                lo, hi = (i, j) if i < j else (j, i)
+                if lo < 1 or hi > self.num_dcs:
+                    raise ValueError(
+                        f"SRLG {name!r} pair {key!r} outside DCs 1..{self.num_dcs}"
+                    )
+                norm.add((lo, hi))
+            if not norm:
+                raise ValueError(f"SRLG {name!r} has no member pairs")
+            canon.append((name, tuple(sorted(norm))))
+        return tuple(canon)
+
+    def srlg_pairs(self, name: str) -> Tuple[Tuple[int, int], ...]:
+        """Member DC pairs of the named shared-risk group."""
+        for group, pairs in self.srlgs:
+            if group == name:
+                return pairs
+        known = tuple(g for g, _ in self.srlgs)
+        raise ValueError(f"unknown SRLG {name!r}; declared: {known}")
 
     @property
     def num_dcs(self) -> int:
@@ -132,17 +186,25 @@ class TopologySpec:
             "wan_pairs": [
                 [list(pair), _profile_dict(p)] for pair, p in self.wan_pairs
             ],
+            "srlgs": [
+                [name, [list(p) for p in pairs]] for name, pairs in self.srlgs
+            ],
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "TopologySpec":
         d = dict(d)
+        _reject_unknown_keys(cls, d)
         d["wan"] = NetemProfile(**d["wan"])
         d["lan"] = NetemProfile(**d["lan"])
         if d.get("fabric") is not None:
             d["fabric"] = _fabric_from_dict(d["fabric"])
         d["wan_pairs"] = tuple(
             (tuple(pair), NetemProfile(**p)) for pair, p in d.get("wan_pairs", ())
+        )
+        d["srlgs"] = tuple(
+            (name, tuple(tuple(p) for p in pairs))
+            for name, pairs in d.get("srlgs", ())
         )
         return cls(**d)
 
@@ -210,6 +272,7 @@ class WorkloadSpec:
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "WorkloadSpec":
+        _reject_unknown_keys(cls, d)
         return cls(**d)
 
 
@@ -236,11 +299,19 @@ def model_grad_bytes(model: str) -> int:
 
 #: The event kinds :func:`repro.scenario.runner.run_scenario` executes.
 EVENT_KINDS = (
-    "fail_link",      # BFD/BGP-detected link failure -> RecoveryTimeline
-    "restore_link",   # link comes back -> incremental reroute + EVPN resync
-    "tenant_attach",  # attach host to tenant (created on first use)
-    "tenant_detach",  # withdraw the host's Type-2 routes fabric-wide
-    "straggler",      # multiply compute_seconds for duration_steps steps
+    "fail_link",            # BFD/BGP-detected link failure -> RecoveryTimeline
+    "restore_link",         # link comes back -> incremental reroute + EVPN resync
+    "tenant_attach",        # attach host to tenant (created on first use)
+    "tenant_detach",        # withdraw the host's Type-2 routes fabric-wide
+    "straggler",            # multiply compute_seconds for duration_steps steps
+    "degrade_link",         # gray failure: brownout one link's NetemProfile
+    "degrade_pair",         # gray failure: brownout one DC pair's fiber bundle
+    "restore_degradation",  # lift a degrade_link/degrade_pair exactly
+    "fail_switch",          # atomic multi-link failure of a spine/leaf switch
+    "restore_switch",       # bring the switch's failed links back
+    "fiber_cut",            # SRLG cut: fail every member pair's WAN links atomically
+    "fiber_restore",        # bring the SRLG's links back
+    "pod_fail",             # pod stops heartbeating -> detect/restore/remesh chain
 )
 
 
@@ -253,6 +324,17 @@ class ScenarioEvent:
     ``host`` and — when the tenant does not exist yet — ``vni``;
     ``tenant_detach`` needs ``tenant`` + ``host``; ``straggler`` needs
     ``slowdown`` (compute multiplier) and ``duration_steps``.
+
+    Gray-failure kinds: ``degrade_link`` needs ``link``, ``degrade_pair``
+    needs ``pair`` — both take ``bandwidth_fraction`` (brownout),
+    ``extra_delay_ms`` (latency inflation) and ``extra_loss`` (loss
+    spike), applied through the :meth:`Netem.profile
+    <repro.core.wan.Netem.profile>` resolver mid-run;
+    ``restore_degradation`` needs exactly one of ``link``/``pair``.
+    ``fail_switch``/``restore_switch`` need ``node`` (a spine/leaf name);
+    ``fiber_cut``/``fiber_restore`` need ``srlg`` (declared in
+    ``TopologySpec.srlgs``); ``pod_fail`` needs ``pod`` (1-based DC
+    index).
     """
 
     kind: str
@@ -264,6 +346,13 @@ class ScenarioEvent:
     host: Optional[str] = None
     slowdown: float = 1.0
     duration_steps: int = 1
+    pair: Optional[Tuple[int, int]] = None
+    bandwidth_fraction: float = 1.0
+    extra_delay_ms: float = 0.0
+    extra_loss: float = 0.0
+    node: Optional[str] = None
+    srlg: Optional[str] = None
+    pod: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in EVENT_KINDS:
@@ -272,8 +361,32 @@ class ScenarioEvent:
             raise ValueError("at_step must be >= 0")
         if self.link is not None:
             object.__setattr__(self, "link", tuple(self.link))
-        if self.kind in ("fail_link", "restore_link") and self.link is None:
+        if self.pair is not None:
+            i, j = int(self.pair[0]), int(self.pair[1])
+            if i == j:
+                raise ValueError(f"event pair {self.pair!r} is not a DC pair")
+            object.__setattr__(self, "pair", (i, j) if i < j else (j, i))
+        if self.kind in ("fail_link", "restore_link", "degrade_link") and self.link is None:
             raise ValueError(f"{self.kind} event needs a link")
+        if self.kind == "degrade_pair" and self.pair is None:
+            raise ValueError("degrade_pair event needs a pair")
+        if self.kind == "restore_degradation" and (self.link is None) == (self.pair is None):
+            raise ValueError(
+                "restore_degradation event needs exactly one of link/pair"
+            )
+        if self.kind in ("degrade_link", "degrade_pair"):
+            if not 0.0 < self.bandwidth_fraction <= 1.0:
+                raise ValueError("bandwidth_fraction must be in (0, 1]")
+            if self.extra_delay_ms < 0.0:
+                raise ValueError("extra_delay_ms must be >= 0")
+            if not 0.0 <= self.extra_loss < 1.0:
+                raise ValueError("extra_loss must be in [0, 1)")
+        if self.kind in ("fail_switch", "restore_switch") and self.node is None:
+            raise ValueError(f"{self.kind} event needs a node")
+        if self.kind in ("fiber_cut", "fiber_restore") and self.srlg is None:
+            raise ValueError(f"{self.kind} event needs an srlg name")
+        if self.kind == "pod_fail" and (self.pod is None or self.pod < 1):
+            raise ValueError("pod_fail event needs a pod index >= 1")
         if self.kind in ("tenant_attach", "tenant_detach") and (
             self.tenant is None or self.host is None
         ):
@@ -287,13 +400,84 @@ class ScenarioEvent:
     def to_dict(self) -> Dict[str, object]:
         d = dataclasses.asdict(self)
         d["link"] = None if self.link is None else list(self.link)
+        d["pair"] = None if self.pair is None else list(self.pair)
         return d
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "ScenarioEvent":
         d = dict(d)
+        _reject_unknown_keys(cls, d)
         if d.get("link") is not None:
             d["link"] = tuple(d["link"])
+        if d.get("pair") is not None:
+            d["pair"] = tuple(d["pair"])
+        return cls(**d)
+
+
+@dataclass(frozen=True)
+class DegradationPolicy:
+    """How a scenario detects gray failures and gracefully degrades.
+
+    **Detection** (the :class:`~repro.core.slaprobe.SlaProbeBank` knobs):
+    per-DC-pair probes calibrate against the healthy baseline and trip
+    when the observed WAN rate falls below ``rate_floor_frac`` of it or
+    the leader RTT exceeds ``rtt_ceiling_frac`` times it, for
+    ``trip_after`` consecutive steps; ``recover_after`` clean steps
+    recover (hysteresis both ways).
+
+    **Adaptation** while any probe is DEGRADED (applied from the *next*
+    step — detect, then react): switch to ``fallback_strategy`` (any
+    :func:`repro.core.schedule.register_strategy` name, e.g. ``hier`` to
+    concentrate WAN traffic on leaders), raise the sync period to
+    ``degraded_sync_every``, and/or engage int8 WAN compression
+    (``int8_wan`` — gradient bytes scaled by the options' ``int8_ratio``,
+    the :mod:`repro.distributed.compression` wire format).
+
+    **Pod-loss recovery pricing** (the HeartbeatMonitor -> checkpoint ->
+    remesh chain): heartbeat cadence/multiplier, the periodic checkpoint
+    cadence that bounds lost work, and restore/remesh cost constants fed
+    to :func:`repro.runtime.failure.plan_recovery`.
+    """
+
+    rate_floor_frac: float = 0.5
+    rtt_ceiling_frac: float = 2.0
+    trip_after: int = 2
+    recover_after: int = 2
+    fallback_strategy: Optional[str] = None
+    degraded_sync_every: Optional[int] = None
+    int8_wan: bool = False
+    heartbeat_interval_ms: float = 100.0
+    heartbeat_detect_mult: int = 3
+    checkpoint_every: int = 4
+    restore_bandwidth_gbps: float = 10.0
+    remesh_s: float = 30.0
+
+    def __post_init__(self):
+        if not 0.0 <= self.rate_floor_frac <= 1.0:
+            raise ValueError("rate_floor_frac must be in [0, 1]")
+        if self.rtt_ceiling_frac < 1.0:
+            raise ValueError("rtt_ceiling_frac must be >= 1")
+        if self.trip_after < 1 or self.recover_after < 1:
+            raise ValueError("trip_after/recover_after must be >= 1")
+        if self.degraded_sync_every is not None and self.degraded_sync_every < 1:
+            raise ValueError("degraded_sync_every must be >= 1")
+        if self.heartbeat_interval_ms <= 0:
+            raise ValueError("heartbeat_interval_ms must be > 0")
+        if self.heartbeat_detect_mult < 1:
+            raise ValueError("heartbeat_detect_mult must be >= 1")
+        if self.checkpoint_every < 1:
+            raise ValueError("checkpoint_every must be >= 1")
+        if self.restore_bandwidth_gbps <= 0:
+            raise ValueError("restore_bandwidth_gbps must be > 0")
+        if self.remesh_s < 0:
+            raise ValueError("remesh_s must be >= 0")
+
+    def to_dict(self) -> Dict[str, object]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "DegradationPolicy":
+        _reject_unknown_keys(cls, d)
         return cls(**d)
 
 
@@ -310,6 +494,9 @@ class Scenario:
     options: SyncOptions = field(default_factory=SyncOptions)
     events: Tuple[ScenarioEvent, ...] = ()
     description: str = ""
+    #: gray-failure detection + graceful degradation; None (the default)
+    #: keeps the runner's historical behavior byte-for-byte
+    policy: Optional[DegradationPolicy] = None
 
     def __post_init__(self):
         object.__setattr__(self, "events", tuple(self.events))
@@ -331,10 +518,13 @@ class Scenario:
             "options": self.options.to_dict(),
             "events": [e.to_dict() for e in self.events],
             "description": self.description,
+            "policy": None if self.policy is None else self.policy.to_dict(),
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "Scenario":
+        _reject_unknown_keys(cls, d)
+        policy = d.get("policy")
         return cls(
             name=d["name"],
             topology=TopologySpec.from_dict(d["topology"]),
@@ -342,4 +532,5 @@ class Scenario:
             options=SyncOptions.from_dict(d["options"]),
             events=tuple(ScenarioEvent.from_dict(e) for e in d["events"]),
             description=d.get("description", ""),
+            policy=None if policy is None else DegradationPolicy.from_dict(policy),
         )

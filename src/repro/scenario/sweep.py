@@ -360,6 +360,8 @@ def random_campaign(
     bandwidth_gbps_range: Tuple[float, float] = (0.4, 2.0),
     flap_probability: float = 0.5,
     straggler_probability: float = 0.5,
+    degrade_probability: float = 0.0,
+    storm_probability: float = 0.0,
 ) -> Sweep:
     """Sample a reproducible Monte Carlo campaign as a :class:`Sweep`.
 
@@ -373,7 +375,18 @@ def random_campaign(
     * an overlap fraction and per-variant spec seed;
     * optionally a WAN flap script (fail + BFD recovery + restore of one
       sampled spine-pair link) and a straggler mix (sampled slowdown over
-      a sampled step span).
+      a sampled step span);
+    * with ``degrade_probability > 0``, a gray-failure brownout: one
+      sampled DC pair quietly loses a sampled bandwidth fraction and
+      gains latency (``degrade_pair`` — BFD never fires), restored one
+      step later;
+    * with ``storm_probability > 0``, a multi-pair flap storm: one
+      sampled spine dies whole (``fail_switch`` — every incident link,
+      WAN links to *all* peer DCs included, fails atomically through one
+      shared detection window), then comes back.
+
+    The two new axes draw nothing when their probability is 0, so
+    campaigns generated before they existed replay byte-identically.
     """
     rng = np.random.default_rng(seed)
     base = base if base is not None else _campaign_base()
@@ -404,6 +417,29 @@ def random_campaign(
                     slowdown=float(rng.uniform(1.5, 4.0)),
                     duration_steps=int(rng.integers(1, base.workload.steps + 1)),
                 )
+            )
+        if degrade_probability > 0 and float(rng.uniform()) < degrade_probability:
+            pairs = sorted(wan_pairs)
+            pair = pairs[int(rng.integers(0, len(pairs)))]
+            at = int(rng.integers(0, base.workload.steps))
+            events.append(
+                ScenarioEvent(
+                    kind="degrade_pair",
+                    at_step=at,
+                    pair=pair,
+                    bandwidth_fraction=float(rng.uniform(0.2, 0.8)),
+                    extra_delay_ms=float(rng.uniform(0.0, 10.0)),
+                )
+            )
+            events.append(
+                ScenarioEvent(kind="restore_degradation", at_step=at + 1, pair=pair)
+            )
+        if storm_probability > 0 and float(rng.uniform()) < storm_probability:
+            node = f"d{int(rng.integers(1, num_pods + 1))}s{int(rng.integers(1, 3))}"
+            at = int(rng.integers(0, base.workload.steps))
+            events.append(ScenarioEvent(kind="fail_switch", at_step=at, node=node))
+            events.append(
+                ScenarioEvent(kind="restore_switch", at_step=at + 1, node=node)
             )
         overrides.append(
             {

@@ -1,0 +1,335 @@
+"""Resilience subsystem tests (ISSUE 7): gray-failure injection ->
+SLA-probe detection -> graceful degradation, SRLG atomicity, and the full
+pod-kill -> checkpoint-restore -> remesh -> deterministic-data-resume loop.
+
+Layered like the subsystem itself:
+
+* :class:`TestSlaProbe` — the threshold-with-hysteresis state machine and
+  the calibrated per-pair bank (``repro.core.slaprobe``);
+* :class:`TestDegradationApi` — netem brownouts resolve, replace (never
+  compound), and restore exactly (``repro.core.wan``);
+* :class:`TestSrlgAtomicity` — ``fail_group`` over an SRLG's member links
+  is state-identical to sequential per-link failure;
+* :class:`TestRunnerResilience` — ``run_scenario`` closes the loop:
+  probes trip/recover, the policy adapts from the *next* step, pod loss
+  is priced into the timeline, and the no-policy path stays untouched;
+* :class:`TestFailureRecoveryLoop` — the runtime substrate end to end:
+  kill a pod, detect by heartbeat, restore the latest pre-failure
+  checkpoint, remesh, and resume the data pipeline deterministically.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core.slaprobe import ProbeState, SlaProbe, SlaProbeBank
+from repro.scenario import (
+    DegradationPolicy,
+    Scenario,
+    ScenarioEvent,
+    SyncOptions,
+    TopologySpec,
+    WorkloadSpec,
+    get_scenario,
+    run_scenario,
+)
+
+
+def _small_geo(num_pods=2, seed=5, **kw):
+    return TopologySpec(num_pods=num_pods, workers_per_pod=2, seed=seed, **kw).build()
+
+
+class TestSlaProbe:
+    def test_trip_needs_consecutive_breaches(self):
+        p = SlaProbe(pair=(1, 2), rate_floor_gbps=1.0, trip_after=2, recover_after=2)
+        assert p.observe(0.0, rate_gbps=0.5, rtt_ms=10.0) == ProbeState.HEALTHY
+        assert p.observe(1.0, rate_gbps=2.0, rtt_ms=10.0) == ProbeState.HEALTHY
+        # a clean sample reset the streak; two in a row now trip
+        p.observe(2.0, rate_gbps=0.5, rtt_ms=10.0)
+        assert p.observe(3.0, rate_gbps=0.5, rtt_ms=10.0) == ProbeState.DEGRADED
+
+    def test_recovery_hysteresis(self):
+        p = SlaProbe(pair=(1, 2), rate_floor_gbps=1.0, trip_after=1, recover_after=2)
+        p.observe(0.0, rate_gbps=0.0, rtt_ms=1.0)
+        assert p.state == ProbeState.DEGRADED
+        p.observe(1.0, rate_gbps=2.0, rtt_ms=1.0)
+        assert p.state == ProbeState.DEGRADED  # one clean sample is noise
+        p.observe(2.0, rate_gbps=2.0, rtt_ms=1.0)
+        assert p.state == ProbeState.HEALTHY
+
+    def test_rtt_ceiling_trips_alone(self):
+        p = SlaProbe(pair=(1, 2), rate_floor_gbps=0.0, rtt_ceiling_ms=50.0, trip_after=1)
+        assert p.observe(0.0, rate_gbps=0.0, rtt_ms=51.0) == ProbeState.DEGRADED
+
+    def test_clock_must_be_monotonic(self):
+        p = SlaProbe(pair=(1, 2))
+        p.observe(5.0, rate_gbps=1.0, rtt_ms=1.0)
+        with pytest.raises(ValueError):
+            p.observe(4.0, rate_gbps=1.0, rtt_ms=1.0)
+
+    def test_bank_calibration_and_transitions(self):
+        bank = SlaProbeBank(rate_floor_frac=0.5, rtt_ceiling_frac=2.0, trip_after=1)
+        bank.calibrate((1, 2), rate_gbps=2.0, rtt_ms=20.0)
+        with pytest.raises(ValueError):
+            bank.calibrate((1, 2), rate_gbps=2.0, rtt_ms=20.0)
+        # healthy sample, then a breach, then recovery — every change recorded
+        bank.observe((1, 2), 0.0, rate_gbps=2.0, rtt_ms=20.0)
+        bank.observe((1, 2), 1.0, rate_gbps=0.5, rtt_ms=20.0)
+        assert bank.tripped() == ((1, 2),) and bank.any_degraded
+        bank.observe((1, 2), 2.0, rate_gbps=2.0, rtt_ms=20.0)
+        bank.observe((1, 2), 3.0, rate_gbps=2.0, rtt_ms=20.0)
+        assert bank.tripped() == ()
+        assert [t.state for t in bank.transitions] == [
+            ProbeState.DEGRADED,
+            ProbeState.HEALTHY,
+        ]
+
+    def test_zero_rate_calibration_disables_rate_floor(self):
+        """A pair that carries no baseline traffic must not trip on rate —
+        only its RTT ceiling stays live (the runner's uncarried-pair rule)."""
+        bank = SlaProbeBank(trip_after=1)
+        bank.calibrate((1, 3), rate_gbps=0.0, rtt_ms=20.0)
+        assert bank.observe((1, 3), 0.0, rate_gbps=0.0, rtt_ms=20.0) == ProbeState.HEALTHY
+        assert bank.observe((1, 3), 1.0, rate_gbps=0.0, rtt_ms=100.0) == ProbeState.DEGRADED
+
+
+class TestDegradationApi:
+    def test_degrade_pair_resolves_and_restores_exactly(self):
+        geo = _small_geo()
+        link = next(iter(geo.fabric.wan_links))
+        before = geo.netem.profile(*link)
+        geo.netem.degrade_pair(1, 2, bandwidth_fraction=0.5, extra_delay_ms=3.0)
+        after = geo.netem.profile(*link)
+        assert after.bandwidth_gbps == pytest.approx(before.bandwidth_gbps * 0.5)
+        assert after.delay_ms == pytest.approx(before.delay_ms + 3.0)
+        assert geo.netem.degraded_pairs == ((1, 2),)
+        geo.netem.restore_pair(1, 2)
+        assert geo.netem.profile(*link) == before
+        assert geo.netem.degraded_pairs == ()
+
+    def test_redegrade_replaces_never_compounds(self):
+        geo = _small_geo()
+        link = next(iter(geo.fabric.wan_links))
+        base = geo.netem.profile(*link)
+        geo.netem.degrade_pair(1, 2, bandwidth_fraction=0.5)
+        geo.netem.degrade_pair(1, 2, bandwidth_fraction=0.5)
+        assert geo.netem.profile(*link).bandwidth_gbps == pytest.approx(
+            base.bandwidth_gbps * 0.5  # not 0.25
+        )
+        geo.netem.restore_pair(1, 2)
+        assert geo.netem.profile(*link) == base
+
+    def test_degrade_link_wins_over_pair(self):
+        geo = _small_geo()
+        links = sorted(tuple(sorted(l)) for l in geo.fabric.wan_links)
+        target, other = links[0], links[-1]
+        geo.netem.degrade_pair(1, 2, bandwidth_fraction=0.5)
+        geo.netem.degrade_link(*target, bandwidth_fraction=0.1)
+        pair_prof = geo.netem.profile(*other)
+        link_prof = geo.netem.profile(*target)
+        assert link_prof.bandwidth_gbps < pair_prof.bandwidth_gbps
+        geo.netem.restore_link_profile(*target)
+        assert geo.netem.profile(*target) == pair_prof
+
+    def test_restore_without_degradation_raises(self):
+        geo = _small_geo()
+        with pytest.raises(ValueError):
+            geo.netem.restore_pair(1, 2)
+        with pytest.raises(ValueError):
+            geo.netem.restore_link_profile("d1s1", "d2s1")
+
+    def test_brownout_raises_cost_and_rtt_without_bfd(self):
+        """The gray regime: the link never goes down (no recovery timeline
+        is even possible — no detector involvement), but costs rise."""
+        geo = _small_geo()
+        [a, b] = geo.pod_leaders()
+        healthy_cost = geo.sync_cost("hier", 8_000_000, jitter=False).wan_seconds
+        healthy_rtt = geo.netem.base_rtt_ms(a, b)
+        geo.netem.degrade_pair(1, 2, bandwidth_fraction=0.25, extra_delay_ms=5.0)
+        assert all(geo.fabric.link_up(*l) for l in geo.fabric.wan_links)
+        assert geo.sync_cost("hier", 8_000_000, jitter=False).wan_seconds > healthy_cost
+        assert geo.netem.base_rtt_ms(a, b) > healthy_rtt
+
+
+class TestSrlgAtomicity:
+    def test_fail_group_equals_sequential(self):
+        spec = get_scenario("srlg_fiber_cut")
+        pairs = spec.topology.srlg_pairs("subsea-1")
+        geo_a, geo_b = spec.topology.build(), spec.topology.build()
+        members = set(pairs)
+        links = sorted(
+            tuple(sorted(l))
+            for l in geo_a.fabric.wan_links
+            if geo_a.fabric.wan_pair(*l) in members
+        )
+        assert len({geo_a.fabric.wan_pair(*l) for l in links}) == len(pairs) == 2
+        timeline, reroutes, resyncs = geo_a.detector.fail_group(links)
+        seq_reroutes = [geo_b.fabric.fail_link(*l) for l in links]
+        seq_resyncs = [geo_b.evpn.resync_incremental(s) for s in seq_reroutes]
+        assert [dataclasses.asdict(s) for s in reroutes] == [
+            dataclasses.asdict(s) for s in seq_reroutes
+        ]
+        assert [dataclasses.asdict(s) for s in resyncs] == [
+            dataclasses.asdict(s) for s in seq_resyncs
+        ]
+        assert dict(geo_a.fabric.link_bytes) == dict(geo_b.fabric.link_bytes)
+        # one shared detection window for the whole group
+        assert timeline.recovery_ms > 0
+
+    def test_restore_group_brings_all_links_back(self):
+        spec = get_scenario("srlg_fiber_cut")
+        geo = spec.topology.build()
+        members = set(spec.topology.srlg_pairs("subsea-1"))
+        links = sorted(
+            tuple(sorted(l))
+            for l in geo.fabric.wan_links
+            if geo.fabric.wan_pair(*l) in members
+        )
+        geo.detector.fail_group(links)
+        assert all(not geo.fabric.link_up(*l) for l in links)
+        geo.detector.restore_group(links)
+        assert all(geo.fabric.link_up(*l) for l in links)
+
+
+def _healthy_scenario(**kw) -> Scenario:
+    return Scenario(
+        name="healthy",
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, seed=5),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=64_000_000,
+            compute_seconds=0.3,
+            overlap_fraction=0.5,
+            steps=4,
+        ),
+        options=SyncOptions(jitter=False),
+        **kw,
+    )
+
+
+class TestRunnerResilience:
+    def test_policy_path_matches_legacy_on_healthy_fabric(self):
+        """With no degradation to react to, the resilience costing path is
+        step-for-step identical to the historical one — the policy only
+        changes what happens *after* a probe trips."""
+        legacy = run_scenario(_healthy_scenario())
+        adapted = run_scenario(_healthy_scenario(policy=DegradationPolicy()))
+        assert [s.seconds for s in legacy.steps] == [s.seconds for s in adapted.steps]
+        assert [s.sync_seconds for s in legacy.steps] == [
+            s.sync_seconds for s in adapted.steps
+        ]
+        assert adapted.steps[0].sync_seconds > 0  # sync genuinely exposed
+        assert not adapted.probe_transitions
+        assert not any(s.degraded for s in adapted.steps)
+
+    def test_brownout_trips_probe_and_adapts_next_step(self):
+        result = run_scenario(get_scenario("wan_brownout"))
+        policy = result.scenario.policy
+        degrade_at = next(
+            e.at_step for e in result.scenario.events if e.kind == "degrade_pair"
+        )
+        trip_step = degrade_at + policy.trip_after - 1
+        trips = [t for t in result.probe_transitions if t.state == ProbeState.DEGRADED]
+        assert trips and trips[0].at_ms == trip_step * 1000.0
+        # detect, then react: the tripping step itself is costed un-adapted
+        assert result.steps[trip_step].degraded is False
+        assert result.steps[trip_step + 1].degraded is True
+        # hysteresis recovers after the restore event
+        recovers = [t for t in result.probe_transitions if t.state == ProbeState.HEALTHY]
+        assert recovers and not result.steps[-1].degraded
+        # gray by construction: BFD saw nothing
+        assert result.recoveries == []
+
+    def test_brownout_policy_beats_no_policy(self):
+        adapted = run_scenario(get_scenario("wan_brownout"))
+        rode_out = run_scenario(get_scenario("wan_brownout", policy=None))
+        assert adapted.total_seconds < rode_out.total_seconds
+
+    def test_pod_fail_is_priced_into_the_timeline(self):
+        result = run_scenario(get_scenario("pod_loss_recovery"))
+        assert len(result.pod_recoveries) == 1
+        rec = result.pod_recoveries[0]
+        assert rec.pod == 2
+        assert rec.detected_at_step > rec.failed_at_step
+        pricing = result.scenario.policy
+        anchor = (rec.failed_at_step // pricing.checkpoint_every) * pricing.checkpoint_every
+        assert rec.plan.lost_steps == rec.detected_at_step - anchor
+        # downtime lands on the detection step, nowhere else
+        charged = [s.step for s in result.steps if s.downtime_seconds > 0]
+        assert charged == [rec.detected_at_step]
+        # a sole survivor has no WAN peer: post-remesh steps cost no sync
+        post = [s for s in result.steps if s.step > rec.detected_at_step]
+        assert post and all(s.sync_seconds == 0.0 for s in post)
+        assert "collapsed" in rec.mesh.note
+
+    def test_resilience_results_json_serializable(self):
+        for name in ("wan_brownout", "srlg_fiber_cut", "pod_loss_recovery"):
+            d = json.dumps(run_scenario(get_scenario(name)).to_dict())
+            assert json.loads(d)["metrics"], name
+
+
+class TestFailureRecoveryLoop:
+    def test_kill_restore_remesh_resume(self, tmp_path):
+        """The satellite's end-to-end drill, on the real runtime substrate:
+        a pod dies mid-run; the heartbeat monitor detects it; training
+        rolls back to the latest *pre-failure* checkpoint; the mesh
+        collapses to the survivors; and the data loader reproduces the
+        rollback step's batch exactly (no silent data skew)."""
+        import jax
+
+        from repro.checkpoint import CheckpointStore
+        from repro.data import DataConfig, ShardedLoader
+        from repro.runtime import HeartbeatMonitor, plan_recovery, plan_remesh
+
+        cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=13)
+        loader = ShardedLoader(cfg)
+        store = CheckpointStore(tmp_path)
+        tree = {"w": jax.numpy.arange(8, dtype=jax.numpy.float32)}
+        mon = HeartbeatMonitor(["pod1", "pod2"], interval_ms=100.0, detect_mult=3)
+
+        checkpoint_every, fail_at, batches = 4, 6, []
+        detected_step = None
+        for step in range(10):
+            batches.append(loader.next_batch())
+            if step % checkpoint_every == 0:
+                store.save(step, tree, metadata={"data_step": step})
+            now = step * 100.0
+            mon.heartbeat("pod1", now)
+            if step < fail_at:
+                mon.heartbeat("pod2", now)
+            dead = mon.poll(now)
+            if dead:
+                detected_step = step
+                break
+        assert dead == ["pod2"]
+        assert fail_at < detected_step < 10
+
+        # the pod died *silently*: a checkpoint landed at step 8, after the
+        # failure but before detection — blindly resuming from latest_step()
+        # would bake the dead pod's stale state in.  Roll back to the last
+        # checkpoint that predates the failure instead (the runner's anchor).
+        assert store.latest_step() == 8
+        anchor = (fail_at // checkpoint_every) * checkpoint_every
+        assert anchor == 4 and anchor in store.steps()
+        restored, meta = store.restore(anchor, tree)
+        np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+        plan = plan_recovery(
+            step=detected_step,
+            last_checkpoint_step=anchor,
+            step_time_s=1.0,
+            detect_time_ms=mon.detect_time_ms(),
+            checkpoint_bytes=1e8,
+        )
+        assert plan.lost_steps == detected_step - anchor
+        mesh = plan_remesh(2, 1, data=4, model=2)
+        assert mesh.shape == (4, 2)  # pod axis collapsed, survivors keep going
+
+        # deterministic resume: the loader seeks to the restored data step
+        resumed = ShardedLoader(cfg, start_step=meta["data_step"])
+        np.testing.assert_array_equal(
+            resumed.next_batch()["tokens"], batches[anchor]["tokens"]
+        )

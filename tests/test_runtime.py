@@ -133,6 +133,23 @@ class TestFailure:
         assert dead == ["pod1"]
         assert mon.alive() == ["pod0"]
 
+    def test_suspect_recovers_to_healthy(self):
+        """A SUSPECT worker whose heartbeats resume must return to HEALTHY
+        on the next poll — even when the rx path touched the BFD session
+        directly instead of going through heartbeat() (regression: poll
+        had no SUSPECT -> HEALTHY edge, so the state stuck forever)."""
+        from repro.runtime.failure import WorkerState
+
+        mon = HeartbeatMonitor(["pod0"], interval_ms=10, detect_mult=3)
+        mon.heartbeat("pod0", 100.0)
+        mon.poll(120.0)  # 20ms > 1.5 * interval -> SUSPECT
+        assert mon.workers["pod0"].state == WorkerState.SUSPECT
+        # heartbeats resume via the raw session (no state reset side effect)
+        mon.workers["pod0"].session.on_rx(125.0)
+        mon.poll(130.0)
+        assert mon.workers["pod0"].state == WorkerState.HEALTHY
+        assert mon.alive() == ["pod0"]
+
     def test_recovery_plan_economics(self):
         plan = plan_recovery(
             step=100, last_checkpoint_step=90, step_time_s=2.0,

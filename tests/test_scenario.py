@@ -25,10 +25,12 @@ from repro.core.fabric import FabricConfig
 from repro.core.geo import GeoFabric, SyncOptions
 from repro.core.wan import NetemProfile
 from repro.scenario import (
+    DegradationPolicy,
     Scenario,
     ScenarioEvent,
     TopologySpec,
     WorkloadSpec,
+    apply_overrides,
     get_scenario,
     run_scenario,
     scenario_names,
@@ -108,6 +110,151 @@ class TestJsonRoundTrip:
             ScenarioEvent(kind="tenant_attach", host="d1h1")  # no tenant
         with pytest.raises(ValueError):
             ScenarioEvent(kind="straggler", slowdown=0.5)
+
+    def test_resilience_event_validation(self):
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="degrade_link")  # no link
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="degrade_pair")  # no pair
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="degrade_pair", pair=(1, 1))  # not a pair
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="degrade_pair", pair=(1, 2), bandwidth_fraction=0.0)
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="degrade_pair", pair=(1, 2), extra_loss=1.0)
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="restore_degradation")  # neither link nor pair
+        with pytest.raises(ValueError):
+            ScenarioEvent(  # both link and pair
+                kind="restore_degradation", link=("a", "b"), pair=(1, 2)
+            )
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="fail_switch")  # no node
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="fiber_cut")  # no srlg
+        with pytest.raises(ValueError):
+            ScenarioEvent(kind="pod_fail")  # no pod
+        # pair keys normalize to sorted order, like TopologySpec.wan_pairs
+        e = ScenarioEvent(kind="degrade_pair", pair=(2, 1), bandwidth_fraction=0.5)
+        assert e.pair == (1, 2)
+
+
+def _resilient_scenario() -> Scenario:
+    """Every resilience extension in one spec: SRLGs, a policy, and every
+    new event kind."""
+    return Scenario(
+        name="resilient",
+        topology=TopologySpec(
+            num_pods=4,
+            workers_per_pod=2,
+            seed=3,
+            srlgs=(
+                ("subsea-1", ((1, 2), (3, 4))),
+                ("terrestrial", ((2, 3),)),
+            ),
+        ),
+        workload=WorkloadSpec(strategy="hier", grad_bytes=8_000_000, steps=6),
+        options=SyncOptions(jitter=False),
+        events=(
+            ScenarioEvent(
+                kind="degrade_link",
+                at_step=0,
+                link=("d1s1", "d2s1"),
+                bandwidth_fraction=0.5,
+                extra_delay_ms=2.0,
+                extra_loss=0.01,
+            ),
+            ScenarioEvent(kind="restore_degradation", at_step=1, link=("d1s1", "d2s1")),
+            ScenarioEvent(
+                kind="degrade_pair", at_step=1, pair=(1, 2), bandwidth_fraction=0.25
+            ),
+            ScenarioEvent(kind="restore_degradation", at_step=2, pair=(1, 2)),
+            ScenarioEvent(kind="fail_switch", at_step=2, node="d1s1"),
+            ScenarioEvent(kind="restore_switch", at_step=3, node="d1s1"),
+            ScenarioEvent(kind="fiber_cut", at_step=3, srlg="subsea-1"),
+            ScenarioEvent(kind="fiber_restore", at_step=4, srlg="subsea-1"),
+            ScenarioEvent(kind="pod_fail", at_step=5, pod=4),
+        ),
+        policy=DegradationPolicy(
+            fallback_strategy="hier", degraded_sync_every=8, int8_wan=True
+        ),
+        description="resilience extensions exercised end to end",
+    )
+
+
+class TestResilienceSpec:
+    """ISSUE 7 spec extensions: SRLGs + DegradationPolicy + gray-failure
+    events JSON round-trip, reject unknown keys, and stay reachable
+    through sweep dotted overrides."""
+
+    def test_resilient_round_trip_identity(self):
+        s = _resilient_scenario()
+        assert Scenario.from_dict(json.loads(json.dumps(s.to_dict()))) == s
+
+    def test_srlg_lookup(self):
+        topo = _resilient_scenario().topology
+        assert topo.srlg_pairs("subsea-1") == ((1, 2), (3, 4))
+        with pytest.raises(ValueError):
+            topo.srlg_pairs("nonexistent")
+
+    def test_from_dict_rejects_unknown_keys(self):
+        s = _resilient_scenario()
+        cases = [
+            (Scenario, s.to_dict()),
+            (TopologySpec, s.topology.to_dict()),
+            (WorkloadSpec, s.workload.to_dict()),
+            (SyncOptions, s.options.to_dict()),
+            (ScenarioEvent, s.events[0].to_dict()),
+            (DegradationPolicy, s.policy.to_dict()),
+        ]
+        for cls, d in cases:
+            bad = dict(d)
+            bad["not_a_field"] = 1
+            with pytest.raises(ValueError, match="not_a_field"):
+                cls.from_dict(bad)
+
+    def test_policy_validation(self):
+        with pytest.raises(ValueError):
+            DegradationPolicy(rate_floor_frac=1.5)
+        with pytest.raises(ValueError):
+            DegradationPolicy(rtt_ceiling_frac=0.5)
+        with pytest.raises(ValueError):
+            DegradationPolicy(trip_after=0)
+        with pytest.raises(ValueError):
+            DegradationPolicy(degraded_sync_every=0)
+        with pytest.raises(ValueError):
+            DegradationPolicy(checkpoint_every=0)
+
+    def test_extensions_reachable_via_sweep_overrides(self):
+        """Dotted overrides reach every new axis: the srlg declaration,
+        the degradation policy, and gray-failure event scripts."""
+        base = Scenario(
+            name="base",
+            topology=TopologySpec(num_pods=2, workers_per_pod=2, seed=5),
+            workload=WorkloadSpec(grad_bytes=4_000_000, steps=2),
+            options=SyncOptions(jitter=False),
+        )
+        v = apply_overrides(
+            base,
+            {
+                "topology.srlgs": (("g", ((1, 2),)),),
+                "policy": DegradationPolicy(int8_wan=True),
+                "events": (
+                    ScenarioEvent(
+                        kind="degrade_pair",
+                        at_step=0,
+                        pair=(1, 2),
+                        bandwidth_fraction=0.5,
+                    ),
+                    ScenarioEvent(kind="fiber_cut", at_step=1, srlg="g"),
+                ),
+            },
+        )
+        assert v.topology.srlg_pairs("g") == ((1, 2),)
+        assert v.policy.int8_wan is True
+        assert {e.kind for e in v.events} == {"degrade_pair", "fiber_cut"}
+        # and the varied spec still serializes (campaign artifact contract)
+        assert Scenario.from_dict(json.loads(json.dumps(v.to_dict()))) == v
 
 
 class TestSyncOptionsBackCompat:

@@ -311,6 +311,29 @@ class TestSweepEngine:
         assert [r.to_dict() for r in ra.rows] == [r.to_dict() for r in rb.rows]
         assert ra.seed == 7
 
+    def test_degradation_axes_deterministic_and_worker_invariant(self):
+        kw = dict(variants=4, degrade_probability=0.8, storm_probability=0.6)
+        a = random_campaign(seed=21, **kw)
+        b = random_campaign(seed=21, **kw)
+        assert a.overrides == b.overrides
+        kinds = {e.kind for ov in a.overrides for e in ov.get("events", ())}
+        assert "degrade_pair" in kinds and "restore_degradation" in kinds
+        assert "fail_switch" in kinds and "restore_switch" in kinds
+        ra = run_sweep(a)
+        rb = run_sweep(b, workers=2)
+        assert [r.to_dict() for r in ra.rows] == [r.to_dict() for r in rb.rows]
+
+    def test_degradation_axes_off_by_default_preserve_draw_stream(self):
+        """Campaigns generated before the degradation/storm axes existed
+        must replay byte-identically: probability 0 consumes no draws."""
+        legacy = random_campaign(seed=6, variants=4)
+        explicit = random_campaign(
+            seed=6, variants=4, degrade_probability=0.0, storm_probability=0.0
+        )
+        assert legacy.overrides == explicit.overrides
+        kinds = {e.kind for ov in legacy.overrides for e in ov.get("events", ())}
+        assert kinds <= {"fail_link", "restore_link", "straggler"}
+
     def test_random_campaign_seeds_differ(self):
         a = random_campaign(seed=1, variants=3)
         b = random_campaign(seed=2, variants=3)
