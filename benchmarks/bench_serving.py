@@ -1,0 +1,184 @@
+"""Geo-serving suite: inference co-load on the training fabric, gated.
+
+ISSUE 8 tentpole gates (study conclusions, not just numbers):
+
+* **co-scheduling contention** — the same deterministic request trace is
+  priced twice, on a quiescent fabric and co-scheduled with a flat
+  AllReduce: training must *strictly* inflate serving p99 (shared
+  links, one max-min allocator — the "99 Problems" thesis, networking
+  binds both workloads);
+* **goodput-under-flap** — ``serving_under_flap``: the SLO-miss window
+  must coincide with the brownout/flap, the failover sweep must migrate
+  a nonzero number of sessions (paying WAN KV bytes), and goodput must
+  fully recover afterwards — the whole arc, trip -> migrate -> recover;
+* **trace determinism** — a sweep over serving seeds joins to a
+  byte-identical table serial vs 2-worker process pool (serving results
+  are a pure function of the spec).
+
+Every run's ``metrics()`` land as gated rows (``BENCH_serving.json``)
+under ``benchmarks/compare.py`` — ``serving_p99_ms``/``_p50``-suffixed
+metrics gate lower-is-better.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+from repro.scenario import (
+    Scenario,
+    ServingSpec,
+    Sweep,
+    SyncOptions,
+    TopologySpec,
+    WorkloadSpec,
+    get_scenario,
+    run_scenario,
+    run_sweep,
+)
+from repro.scenario.library import AR_GRAD_BYTES, DISTILGPT2_KV_BYTES_PER_TOKEN
+
+from .common import BenchRow, timed
+
+#: the shared co-load both contention scenarios price
+COLOAD = ServingSpec(
+    users=300_000,
+    requests_per_user_step=3e-5,
+    remote_fraction=0.25,
+    mean_tokens=128,
+    session_tokens=1024,
+    kv_bytes_per_token=DISTILGPT2_KV_BYTES_PER_TOKEN,
+    slo_ms=400.0,
+    seed=31,
+)
+
+
+def _contention_scenario(name: str, strategy) -> Scenario:
+    return Scenario(
+        name=name,
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, num_channels=4, seed=3),
+        workload=WorkloadSpec(strategy=strategy, grad_bytes=AR_GRAD_BYTES, steps=8),
+        options=SyncOptions(jitter=False),
+        serving=COLOAD,
+        description="serving co-load contention study",
+    )
+
+
+def run() -> List[BenchRow]:
+    rows: List[BenchRow] = []
+
+    # -- gate: co-scheduled training strictly inflates serving p99 -----------
+    quiescent, us_q = timed(
+        lambda: run_scenario(_contention_scenario("serving_quiescent", None))
+    )
+    cosched, us_c = timed(
+        lambda: run_scenario(_contention_scenario("serving_cosched", "allreduce"))
+    )
+    p99_q = quiescent.metrics()["serving_p99_ms"]
+    p99_c = cosched.metrics()["serving_p99_ms"]
+    if not p99_c > p99_q:
+        raise AssertionError(
+            f"co-scheduled training must inflate serving p99: quiescent "
+            f"{p99_q:.1f}ms vs co-scheduled {p99_c:.1f}ms"
+        )
+    if quiescent.metrics()["serving_requests"] != cosched.metrics()["serving_requests"]:
+        raise AssertionError("both runs must price the identical request trace")
+    rows.append(
+        BenchRow(
+            name="serving_quiescent",
+            us_per_call=us_q,
+            derived=(
+                f"{int(quiescent.metrics()['serving_requests'])} requests, "
+                f"p99 {p99_q:.1f}ms (no training)"
+            ),
+            metrics=quiescent.metrics(),
+        )
+    )
+    rows.append(
+        BenchRow(
+            name="serving_cosched",
+            us_per_call=us_c,
+            derived=(
+                f"same trace under AllReduce: p99 {p99_c:.1f}ms "
+                f"({p99_c / p99_q:.1f}x quiescent)"
+            ),
+            metrics=cosched.metrics(),
+        )
+    )
+
+    # -- gate: goodput-under-flap recovers after failover ---------------------
+    flap, us_f = timed(lambda: run_scenario(get_scenario("serving_under_flap")))
+    spec = flap.scenario
+    degrade_at = next(
+        e.at_step for e in spec.events if e.kind == "degrade_pair"
+    )
+    per_step = {s.step: s for s in flap.serving_steps}
+    migrate_step = next(
+        (s.step for s in flap.serving_steps if s.migrated_sessions > 0), None
+    )
+    if migrate_step is None:
+        raise AssertionError("failover must migrate a nonzero session count")
+    if not migrate_step > degrade_at:
+        raise AssertionError(
+            f"migration at step {migrate_step} must follow the brownout "
+            f"at step {degrade_at} (detection has hysteresis)"
+        )
+    if flap.metrics()["serving_migration_bytes"] <= 0:
+        raise AssertionError("migrated sessions must pay WAN KV bytes")
+    flap_window = range(degrade_at, migrate_step)
+    misses_in_flap = sum(per_step[s].slo_misses for s in flap_window)
+    if misses_in_flap == 0:
+        raise AssertionError("the brownout window must produce SLO misses")
+    after = [s for s in flap.serving_steps if s.step >= migrate_step]
+    misses_after = sum(s.slo_misses for s in after)
+    if misses_after != 0:
+        raise AssertionError(
+            f"goodput must fully recover after failover; "
+            f"{misses_after} misses from step {migrate_step} on"
+        )
+    p99_peak = max(per_step[s].p99_ms for s in flap_window)
+    p99_after = max(s.p99_ms for s in after)
+    if not p99_peak > 2.0 * p99_after:
+        raise AssertionError(
+            f"flap p99 peak {p99_peak:.0f}ms must clearly dominate "
+            f"post-failover p99 {p99_after:.0f}ms"
+        )
+    rows.append(
+        BenchRow(
+            name="serving_under_flap",
+            us_per_call=us_f,
+            derived=(
+                f"flap p99 peak {p99_peak:.0f}ms -> {p99_after:.0f}ms after "
+                f"{int(flap.metrics()['serving_migrated_sessions'])} migrations "
+                f"({flap.metrics()['serving_migration_bytes'] / 1e6:.0f} MB KV)"
+            ),
+            metrics=flap.metrics(),
+        )
+    )
+
+    # -- gate: serving metrics byte-identical across sweep worker counts -----
+    base = _contention_scenario("serving_seed_sweep", None)
+    sweep = Sweep(
+        base=base,
+        overrides=tuple(
+            {"name": f"seed{s:02d}", "serving.seed": s} for s in (5, 23, 31)
+        ),
+        name="serving_seed_sweep",
+    )
+    serial, us_sw = timed(lambda: run_sweep(sweep))
+    parallel = run_sweep(sweep, workers=2)
+    if [r.to_dict() for r in serial.rows] != [r.to_dict() for r in parallel.rows]:
+        raise AssertionError(
+            "serving sweep differs between serial and 2-worker runs"
+        )
+    for r in serial.rows:
+        if "serving_p99_ms" not in r.metrics:
+            raise AssertionError(f"variant {r.name} lost its serving metrics")
+        rows.append(
+            BenchRow(
+                name=f"serving_sweep_{r.name}",
+                us_per_call=us_sw / len(serial.rows),
+                derived=f"p99 {r.metrics['serving_p99_ms']:.1f}ms",
+                metrics=dict(r.metrics),
+            )
+        )
+    return rows

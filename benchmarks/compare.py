@@ -18,8 +18,9 @@ from the metric name by :func:`metric_direction`:
 
 * ``*_gbps``, ``*_mbps``, ``*_speedup``, ``*_improvement_pct`` — higher is
   better (a >threshold drop regresses);
-* ``*_s``, ``*_ms``, ``*_seconds``, ``*_factor``, ``*_frac``, ``*_bytes``
-  — lower is better (a >threshold rise regresses);
+* ``*_s``, ``*_ms``, ``*_seconds``, ``*_factor``, ``*_frac``, ``*_bytes``,
+  and the latency-percentile suffixes ``*_p50``/``*_p99`` — lower is
+  better (a >threshold rise regresses);
 * anything else — treated as a pinned reproducibility observable: a
   >threshold move in *either* direction regresses.
 
@@ -48,7 +49,9 @@ from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
 
 HIGHER_IS_BETTER_SUFFIXES = ("_gbps", "_mbps", "_speedup", "_improvement_pct")
-LOWER_IS_BETTER_SUFFIXES = ("_s", "_ms", "_seconds", "_factor", "_frac", "_bytes")
+LOWER_IS_BETTER_SUFFIXES = (
+    "_s", "_ms", "_seconds", "_factor", "_frac", "_bytes", "_p50", "_p99",
+)
 
 
 def metric_direction(name: str) -> str:

@@ -31,6 +31,7 @@ SUITES = (
     ("scenarios", "benchmarks.bench_scenarios"),
     ("sweeps", "benchmarks.bench_sweeps"),
     ("resilience", "benchmarks.bench_resilience"),
+    ("serving", "benchmarks.bench_serving"),
     ("roofline", "benchmarks.bench_roofline"),
 )
 

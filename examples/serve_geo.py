@@ -1,0 +1,63 @@
+"""Geo-serving walkthrough: millions of users on the training fabric.
+
+Runs the ``serving_under_flap`` library scenario — inference traffic
+co-scheduled with hierarchical training through one gray-failure arc
+(WAN brownout -> SLA-probe trip -> session failover -> recovery) — and
+prints the per-step serving story: request counts, latency percentiles,
+SLO misses, and the migration wave with its concrete WAN KV bytes.
+
+Then it bridges sim to silicon: the first trace request of the peak step
+is materialized as a real model batch via ``repro.serving.request_batch``
+(the same helper ``repro.launch.serve`` uses) and run through prefill.
+
+Run:  PYTHONPATH=src python examples/serve_geo.py
+"""
+
+from repro.scenario import get_scenario, run_scenario
+
+
+def main() -> None:
+    scenario = get_scenario("serving_under_flap")
+    print(f"=== {scenario.name}: {scenario.description}\n")
+    result = run_scenario(scenario)
+
+    print(f"{'step':>4s} {'reqs':>5s} {'remote':>6s} {'p50 ms':>8s} "
+          f"{'p99 ms':>9s} {'miss':>5s} {'migrated':>8s} {'KV MB':>7s}")
+    for s in result.serving_steps:
+        flag = " <- failover wave" if s.migrated_sessions else ""
+        print(f"{s.step:>4d} {s.requests:>5d} {s.remote_requests:>6d} "
+              f"{s.p50_ms:>8.1f} {s.p99_ms:>9.1f} {s.slo_misses:>5d} "
+              f"{s.migrated_sessions:>8d} {s.migration_bytes / 1e6:>7.1f}{flag}")
+
+    m = result.metrics()
+    print(f"\n{int(m['serving_requests'])} requests, "
+          f"p99 {m['serving_p99_ms']:.0f} ms, "
+          f"{m['serving_slo_miss_frac']:.1%} SLO misses, "
+          f"{int(m['serving_migrated_sessions'])} sessions migrated "
+          f"({m['serving_migration_bytes'] / 1e6:.0f} MB of KV over the WAN)")
+
+    # sim -> silicon: serve the peak step's first request for real
+    peak = max(result.serving_steps, key=lambda s: s.requests)
+    from repro.serving import generate_trace
+
+    engine_trace = generate_trace(
+        scenario.serving, scenario.topology.num_pods, scenario.workload.steps
+    )
+    req = engine_trace[peak.step][0]
+    print(f"\nmaterializing request rid={req.rid} "
+          f"({req.tokens} tokens, home DC {req.home_dc}) as a model batch:")
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.models import init_params, prefill
+    from repro.serving import request_batch
+
+    cfg = get_smoke_config("distilgpt2-82m")
+    batch = request_batch(cfg, req)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    logits, _cache = prefill(params, batch, cfg, max_len=req.tokens + 8)
+    print(f"prefill logits: {logits.shape}")
+
+
+if __name__ == "__main__":
+    main()

@@ -53,6 +53,7 @@ from .flows import (
     all_to_all_flows,
     hierarchical_all_to_all_flows,
     hierarchical_flows,
+    open_loop_flows,
     parameter_server_flows,
     pipeline_p2p_flows,
     reduce_scatter_flows,
@@ -164,6 +165,7 @@ __all__ = [
     "hash_32",
     "hierarchical_all_to_all_flows",
     "hierarchical_flows",
+    "open_loop_flows",
     "load_factor",
     "make_correlated_queue_pairs",
     "make_queue_pairs",

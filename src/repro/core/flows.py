@@ -104,6 +104,36 @@ def _pair_flows(
     ]
 
 
+def open_loop_flows(
+    src: str,
+    dst: str,
+    flow_id: int,
+    nbytes: int,
+    *,
+    num_channels: int = 1,
+    scheme: str = "qp_aware",
+    k_bins: int = 4,
+    base_qpn: int = 0x5E0000,
+    qp_stride: int = 1,
+) -> List[Flow]:
+    """One open-loop transfer (a serving request's KV handoff or a session
+    migration): ``nbytes`` from ``src`` to ``dst`` as its own peer
+    connection.
+
+    ``flow_id`` plays the role the collectives' ``pair_id`` plays — it
+    seeds the QPN so every request hashes independently under ECMP.  The
+    ``base_qpn`` default puts serving QPs in a plane disjoint from the
+    collectives' ``0x11`` so co-scheduled traffic never collides on a
+    queue pair number.
+    """
+    if nbytes <= 0:
+        return []
+    return _pair_flows(
+        src, dst, int(flow_id), int(nbytes), num_channels, scheme, k_bins,
+        base_qpn, qp_stride,
+    )
+
+
 def ring_allreduce_flows(
     workers: Sequence[str],
     total_bytes: int,

@@ -1,0 +1,55 @@
+"""Frontend-aware synthetic batch construction, shared by the serving CLI
+(:mod:`repro.launch.serve`) and the geo-serving request model
+(:mod:`repro.serving.requests`).
+
+Each model frontend takes a different prompt pytree — ``frame`` wants
+embeddings, ``patch`` wants a token/patch split, plain LMs want tokens —
+and both call sites need bit-identical RNG usage, so the branching lives
+here exactly once.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+__all__ = ["decode_step_input", "synthetic_prompt_batch"]
+
+
+def synthetic_prompt_batch(cfg, key, batch: int, prompt_len: int) -> Dict[str, object]:
+    """A synthetic prefill batch matching ``cfg.frontend``'s input pytree."""
+    import jax
+
+    if cfg.frontend == "frame":
+        return {
+            "frame_embeds": jax.random.normal(
+                key, (batch, prompt_len, cfg.frontend_dim)
+            )
+        }
+    if cfg.frontend == "patch":
+        p = cfg.num_prefix_tokens
+        if prompt_len <= p:
+            raise ValueError(
+                f"patch frontend needs prompt_len > {p} prefix tokens, "
+                f"got {prompt_len}"
+            )
+        return {
+            "tokens": jax.random.randint(
+                key, (batch, prompt_len - p), 0, cfg.vocab_size
+            ),
+            "patch_embeds": jax.random.normal(key, (batch, p, cfg.frontend_dim)),
+        }
+    return {
+        "tokens": jax.random.randint(key, (batch, prompt_len), 0, cfg.vocab_size)
+    }
+
+
+def decode_step_input(cfg, key, tokens, batch: int, i: int):
+    """The per-step decode input: frame frontends feed fresh embeddings
+    (folded-in RNG per step), token frontends feed back the argmax."""
+    import jax
+
+    if cfg.frontend == "frame":
+        return jax.random.normal(
+            jax.random.fold_in(key, i), (batch, 1, cfg.frontend_dim)
+        )
+    return tokens

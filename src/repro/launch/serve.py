@@ -14,7 +14,7 @@ import argparse
 import time
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="distilgpt2-82m")
     ap.add_argument("--batch", type=int, default=4)
@@ -22,12 +22,13 @@ def main() -> None:
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--full-config", action="store_true")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    args = ap.parse_args(argv)
 
     import jax
     import jax.numpy as jnp
 
     from repro.configs import get_config, get_smoke_config
+    from repro.launch.batches import decode_step_input, synthetic_prompt_batch
     from repro.models import decode_step, init_params, prefill
 
     cfg = get_config(args.arch) if args.full_config else get_smoke_config(args.arch)
@@ -35,20 +36,7 @@ def main() -> None:
     params = init_params(key, cfg)
     max_len = args.prompt_len + args.gen
 
-    if cfg.frontend == "frame":
-        batch = {
-            "frame_embeds": jax.random.normal(
-                key, (args.batch, args.prompt_len, cfg.frontend_dim)
-            )
-        }
-    elif cfg.frontend == "patch":
-        p = cfg.num_prefix_tokens
-        batch = {
-            "tokens": jax.random.randint(key, (args.batch, args.prompt_len - p), 0, cfg.vocab_size),
-            "patch_embeds": jax.random.normal(key, (args.batch, p, cfg.frontend_dim)),
-        }
-    else:
-        batch = {"tokens": jax.random.randint(key, (args.batch, args.prompt_len), 0, cfg.vocab_size)}
+    batch = synthetic_prompt_batch(cfg, key, args.batch, args.prompt_len)
 
     t0 = time.time()
     prefill_jit = jax.jit(lambda pr, b: prefill(pr, b, cfg, max_len=max_len))
@@ -65,12 +53,7 @@ def main() -> None:
     t0 = time.time()
     for i in range(args.gen):
         pos = jnp.int32(args.prompt_len + i)
-        if cfg.frontend == "frame":
-            step_in = jax.random.normal(
-                jax.random.fold_in(key, i), (args.batch, 1, cfg.frontend_dim)
-            )
-        else:
-            step_in = tokens
+        step_in = decode_step_input(cfg, key, tokens, args.batch, i)
         logits, cache = decode_jit(params, step_in, cache, pos)
         tokens = jnp.argmax(logits, axis=-1)
         generated.append(tokens)

@@ -43,9 +43,11 @@ from repro.scenario.spec import (
     DegradationPolicy,
     Scenario,
     ScenarioEvent,
+    ServingSpec,
     TopologySpec,
     WorkloadSpec,
     model_grad_bytes,
+    model_kv_bytes,
 )
 from repro.scenario.sweep import (
     Sweep,
@@ -64,6 +66,7 @@ __all__ = [
     "Scenario",
     "ScenarioEvent",
     "ScenarioResult",
+    "ServingSpec",
     "StepRecord",
     "Sweep",
     "SweepResult",
@@ -75,6 +78,7 @@ __all__ = [
     "fiber_latency_campaign",
     "get_scenario",
     "model_grad_bytes",
+    "model_kv_bytes",
     "random_campaign",
     "register_scenario",
     "run_scenario",

@@ -35,6 +35,7 @@ from repro.scenario.spec import (
     DegradationPolicy,
     Scenario,
     ScenarioEvent,
+    ServingSpec,
     TopologySpec,
     WorkloadSpec,
 )
@@ -42,6 +43,7 @@ from repro.scenario.spec import (
 __all__ = [
     "AR_GRAD_BYTES",
     "CALIBRATED_COMPUTE_S",
+    "DISTILGPT2_KV_BYTES_PER_TOKEN",
     "PS_GRAD_BYTES",
     "SCALED8",
     "STORM_GRAD_BYTES",
@@ -336,6 +338,74 @@ def wan_brownout(
             "WAN brownout on pair (1,2): bandwidth quietly drops to a "
             "fraction while BFD sessions stay UP; SLA probes trip with "
             "hysteresis and the degradation policy falls back gracefully."
+        ),
+    )
+
+
+#: distilgpt2-82m decode-cache bytes per context token
+#: (= ``model_kv_bytes("distilgpt2-82m")``, pinned so control-plane-only
+#: runs never import jax).
+DISTILGPT2_KV_BYTES_PER_TOKEN = 18_432
+
+
+@register_scenario("serving_under_flap")
+def serving_under_flap(
+    policy: Optional[DegradationPolicy] = DegradationPolicy(),
+    serving: Optional[ServingSpec] = None,
+    **kw,
+) -> Scenario:
+    """Geo-serving through a WAN brownout + BFD flap: 400k users across
+    two DCs, half of DC-crossing sessions steadily served remote, while a
+    hierarchical leader sync trains underneath on the same spine WAN.
+
+    The event arc: pair (1,2) browns out at step 4 (bandwidth to 20%,
+    +30 ms), a spine WAN link BFD-flaps at step 5/6, and the brownout
+    lifts at step 10.  With the default detection-only policy the SLA
+    probes trip after the second breaching observation, the session
+    router's failover sweep re-homes every remote session (paying
+    leader-to-leader KV migration bytes), serving p99 collapses back
+    under the SLO, and once the probes recover the remote class resumes —
+    goodput-under-flap, priced end to end.  ``bench_serving.py`` gates
+    the whole arc."""
+    if serving is None:
+        serving = ServingSpec(
+            users=400_000,
+            requests_per_user_step=2e-5,
+            remote_fraction=0.5,
+            mean_tokens=128,
+            session_tokens=1024,
+            kv_bytes_per_token=DISTILGPT2_KV_BYTES_PER_TOKEN,
+            slo_ms=400.0,
+            seed=23,
+        )
+    events = (
+        ScenarioEvent(
+            kind="degrade_pair",
+            at_step=4,
+            pair=(1, 2),
+            bandwidth_fraction=0.2,
+            extra_delay_ms=30.0,
+        ),
+        ScenarioEvent(kind="fail_link", at_step=5, link=("d1s1", "d2s1")),
+        ScenarioEvent(kind="restore_link", at_step=6, link=("d1s1", "d2s1")),
+        ScenarioEvent(kind="restore_degradation", at_step=10, pair=(1, 2)),
+    )
+    return Scenario(
+        name="serving_under_flap",
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, num_channels=4, seed=19),
+        workload=WorkloadSpec(
+            strategy="hier",
+            grad_bytes=kw.pop("grad_bytes", AR_GRAD_BYTES),
+            steps=14,
+        ),
+        options=kw.pop("options", SyncOptions(jitter=False)),
+        events=events,
+        policy=policy,
+        serving=serving,
+        description=(
+            "Inference co-load through a gray-failure arc: brownout + BFD "
+            "flap trip the SLA probes, the affinity router fails user "
+            "sessions over (KV migration priced on the WAN), p99 recovers."
         ),
     )
 

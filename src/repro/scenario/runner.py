@@ -153,6 +153,8 @@ class ScenarioResult:
     #: (at_step, pod) per pod_fail event, recorded by apply_event so the
     #: trainer's replay sees them too; the runner's heartbeat loop prices them
     pod_failures: List[Tuple[int, int]] = field(default_factory=list)
+    #: per-step ServingStepStats when the scenario carries a ServingSpec
+    serving_steps: List = field(default_factory=list)
 
     @property
     def total_seconds(self) -> float:
@@ -212,6 +214,25 @@ class ScenarioResult:
             out["pod_total_cost_seconds"] = float(
                 sum(r.plan.total_cost_s for r in self.pod_recoveries)
             )
+        if self.serving_steps:
+            import numpy as np
+
+            requests = sum(s.requests for s in self.serving_steps)
+            out["serving_requests"] = float(requests)
+            lat = [l for s in self.serving_steps for l in s.latencies_ms]
+            if lat:
+                out["serving_p50_ms"] = float(np.percentile(lat, 50))
+                out["serving_p99_ms"] = float(np.percentile(lat, 99))
+            misses = sum(s.slo_misses for s in self.serving_steps)
+            out["serving_slo_miss_frac"] = (
+                float(misses) / requests if requests else 0.0
+            )
+            out["serving_migrated_sessions"] = float(
+                sum(s.migrated_sessions for s in self.serving_steps)
+            )
+            out["serving_migration_bytes"] = float(
+                sum(s.migration_bytes for s in self.serving_steps)
+            )
         return out
 
     def to_dict(self) -> Dict[str, object]:
@@ -223,6 +244,7 @@ class ScenarioResult:
             "evpn_resyncs": [_resync_dict(s) for s in self.evpn_resyncs],
             "probe_transitions": [t.to_dict() for t in self.probe_transitions],
             "pod_recoveries": [r.to_dict() for r in self.pod_recoveries],
+            "serving_steps": [s.to_dict() for s in self.serving_steps],
             "metrics": self.metrics(),
             "total_seconds": self.total_seconds,
         }
@@ -362,20 +384,22 @@ def apply_event(
         raise ValueError(f"unknown event kind {event.kind!r}")
 
 
-def _wan_window_s(cost: SyncCost) -> float:
+def _wan_window_s(phases, fallback_s: float) -> float:
     """Span of the schedule's WAN-carrying phases (the comm observation
     window an SLA probe rates bytes against) — excludes a grafted compute
     head, so overlapped and pure-sync steps measure consistently."""
-    spans = [(p.start_s, p.end_s) for p in cost.phases if p.wan_bytes > 0]
+    spans = [(p.start_s, p.end_s) for p in phases if p.wan_bytes > 0]
     if not spans:
-        return float(cost.wan_seconds)
+        return float(fallback_s)
     return max(e for _, e in spans) - min(s for s, _ in spans)
 
 
-def _pair_rates(geo: GeoFabric, cost: SyncCost) -> Dict[Tuple[int, int], float]:
+def _pair_rates(
+    geo: GeoFabric, phases, fallback_s: float
+) -> Dict[Tuple[int, int], float]:
     """Observed per-DC-pair WAN rate (Gbit/s) of the last costed schedule,
     from the fabric's routed byte counters and the comm window."""
-    window = _wan_window_s(cost)
+    window = _wan_window_s(phases, fallback_s)
     if window <= 0.0:
         return {}
     pair_bytes: Dict[Tuple[int, int], int] = {}
@@ -393,6 +417,143 @@ def _pair_rtt_ms(geo: GeoFabric, pair: Tuple[int, int]) -> float:
         return geo.netem.base_rtt_ms(leaders[pair[0] - 1], leaders[pair[1] - 1])
     except UnreachableError:
         return math.inf
+
+
+def _fabric_health(geo: GeoFabric, probes: Optional[SlaProbeBank], dead_pods):
+    """The serving router's per-step view of the fabric.
+
+    A pair is bad when it is partitioned, when its SLA probe is tripped
+    (scenarios with a :class:`DegradationPolicy` — detection with
+    hysteresis, the realistic signal), or — probe-less — when ``Netem``
+    currently degrades it (ground truth, reaction without detection lag).
+    """
+    from repro.serving.router import FabricHealth
+
+    alive = frozenset(
+        p for p in range(1, geo.num_pods + 1) if p not in dead_pods
+    )
+    rtt: Dict[Tuple[int, int], float] = {}
+    bad: set = set()
+    for a in range(1, geo.num_pods + 1):
+        for b in range(a + 1, geo.num_pods + 1):
+            r = _pair_rtt_ms(geo, (a, b))
+            rtt[(a, b)] = r
+            if r == math.inf:
+                bad.add((a, b))
+    if probes is not None:
+        bad.update(probes.tripped())
+    else:
+        bad.update(geo.netem.degraded_pairs)
+    return FabricHealth(alive=alive, bad_pairs=frozenset(bad), rtt_ms=rtt)
+
+
+def _serving_step(
+    engine,
+    geo: GeoFabric,
+    step: int,
+    *,
+    training_active: bool,
+    strategy,
+    grad_bytes: int,
+    compute: float,
+    policy: Optional[DegradationPolicy],
+    options,
+    overlap_fraction: float,
+    degraded: bool,
+    dead_pods,
+    probes: Optional[SlaProbeBank],
+    baseline_rates: Dict[Tuple[int, int], float],
+):
+    """Cost one step with serving co-load: route the step's requests,
+    append their flows as dependency-free phases to the (possibly
+    policy-adapted) training schedule, and run both through
+    :func:`~repro.core.congestion.simulate_schedule` — one max-min
+    allocation prices the contention in both directions.
+
+    Always the event-driven simulator (serving latency needs the per-flow
+    timeline), always jitter-free (determinism is the serving contract).
+    Returns ``(seconds, sync_seconds, strategy_name)`` for the training
+    record, or ``None`` on serving-only steps.
+    """
+    from repro.core.congestion import simulate_schedule
+    from repro.core.schedule import CollectiveSchedule
+
+    health = _fabric_health(geo, probes, dead_pods)
+    plan = engine.plan_step(step, geo, health)
+
+    training_phases: Tuple = ()
+    sync_every = 1
+    strategy_name = ""
+    eff_opts = options
+    name = "serving"
+    if training_active:
+        eff_strategy, eff_grad = strategy, grad_bytes
+        if degraded and policy is not None:
+            if policy.fallback_strategy is not None and isinstance(strategy, str):
+                eff_strategy = policy.fallback_strategy
+            if policy.degraded_sync_every is not None:
+                eff_opts = dataclasses.replace(
+                    eff_opts, sync_every=policy.degraded_sync_every
+                )
+            if policy.int8_wan:
+                eff_grad = max(int(grad_bytes * eff_opts.int8_ratio), 1)
+        if isinstance(eff_strategy, str):
+            schedule = build_schedule(
+                eff_strategy,
+                geo.strategy_context(tuple(sorted(dead_pods))),
+                eff_grad,
+                sync_every=eff_opts.sync_every,
+                int8_ratio=eff_opts.int8_ratio,
+            )
+        else:
+            schedule = eff_strategy
+        strategy_name = schedule.name
+        if compute > 0:
+            schedule = with_compute_overlap(schedule, compute, overlap_fraction)
+        training_phases = schedule.phases
+        sync_every = max(schedule.sync_every, 1)
+        name = f"{schedule.name}+serving"
+
+    all_phases = tuple(training_phases) + plan.phases
+    report = None
+    if all_phases:
+        combined = CollectiveSchedule(name, all_phases, sync_every=sync_every)
+        report = simulate_schedule(
+            geo.fabric,
+            geo.netem,
+            combined,
+            check_reachability=geo.tenancy.reachable,
+            ecmp_weighted=eff_opts.ecmp_weighted,
+        )
+    engine.finish_step(plan, report)
+
+    if probes is not None and report is not None:
+        rates = _pair_rates(geo, report.phase_timings, report.seconds)
+        probe_now_ms = step * 1000.0  # one emulated second per step
+        for pair in probes.pairs:
+            probes.observe(
+                pair,
+                probe_now_ms,
+                rate_gbps=rates.get(pair, baseline_rates.get(pair, 0.0)),
+                rtt_ms=_pair_rtt_ms(geo, pair),
+            )
+    if not training_active:
+        return None
+    train_names = {p.name for p in training_phases}
+    train_end = 0.0
+    if report is not None:
+        train_end = max(
+            (p.end_s for p in report.phase_timings if p.name in train_names),
+            default=0.0,
+        )
+    if compute > 0:
+        exposed = max(train_end - compute, 0.0)
+        sync_seconds = exposed / sync_every
+        seconds = compute + sync_seconds
+    else:
+        sync_seconds = train_end / sync_every
+        seconds = sync_seconds
+    return seconds, sync_seconds, strategy_name
 
 
 def run_scenario(
@@ -422,6 +583,17 @@ def run_scenario(
     (``StepRecord.downtime_seconds``) and subsequent steps cost the
     surviving-pod schedule; per-episode :class:`PodRecovery` records land
     in the result.
+
+    With a :class:`~repro.scenario.spec.ServingSpec` on the spec, every
+    step additionally runs the geo-serving co-load: the
+    :class:`~repro.serving.engine.ServingEngine` routes that step's
+    deterministic request trace (sticky sessions, probe/degradation-driven
+    failover) and its flows join the training schedule inside one
+    event-driven max-min simulation — per-step
+    :class:`~repro.serving.engine.ServingStepStats` land on
+    ``result.serving_steps``.  Serving steps are always costed by the
+    event-driven simulator and jitter-free; scenarios without a
+    ``ServingSpec`` keep the historical costing path bit-for-bit.
     """
     geo = geo if geo is not None else scenario.topology.build()
     workload = scenario.workload
@@ -429,6 +601,19 @@ def run_scenario(
     strategy = workload.strategy
     policy = scenario.policy
     result = ScenarioResult(scenario=scenario, steps=[], sync=None, geo=geo)
+
+    # serving co-load: lazy import so scenarios without a ServingSpec never
+    # pay for (or depend on) the serving subsystem
+    engine = None
+    if scenario.serving is not None:
+        from repro.serving.engine import ServingEngine
+
+        engine = ServingEngine(
+            scenario.serving,
+            num_dcs=geo.num_pods,
+            num_steps=scenario.num_steps,
+            port_scheme=geo.port_scheme,
+        )
 
     baseline_rates: Dict[Tuple[int, int], float] = {}
     if strategy is not None:
@@ -438,7 +623,9 @@ def run_scenario(
             options=dataclasses.replace(scenario.options, jitter=False),
         )
         if policy is not None:
-            baseline_rates = _pair_rates(geo, result.sync)
+            baseline_rates = _pair_rates(
+                geo, result.sync.phases, result.sync.wan_seconds
+            )
 
     # gray-failure probes: one per WAN DC pair, calibrated on the healthy
     # representative (pairs the schedule never touches calibrate at rate 0,
@@ -540,12 +727,33 @@ def run_scenario(
                     )
                 )
                 downtime_s += plan.total_downtime_s
-        if strategy is None or step >= workload.steps:
+        training_active = strategy is not None and step < workload.steps
+        if engine is None and not training_active:
             continue  # event-only tail (or control-plane-only scenario)
         factor = straggler.get(step, 1.0)
-        compute = workload.compute_seconds * factor
+        compute = workload.compute_seconds * factor if training_active else 0.0
         degraded = probes is not None and probes.any_degraded
-        if policy is None and not dead_pods:
+        if engine is not None:
+            served = _serving_step(
+                engine,
+                geo,
+                step,
+                training_active=training_active,
+                strategy=strategy,
+                grad_bytes=grad_bytes,
+                compute=compute,
+                policy=policy,
+                options=scenario.options,
+                overlap_fraction=workload.overlap_fraction,
+                degraded=degraded,
+                dead_pods=dead_pods,
+                probes=probes,
+                baseline_rates=baseline_rates,
+            )
+            if served is None:
+                continue  # serving-only step: stats on result.serving_steps
+            seconds, sync_seconds, strategy_name = served
+        elif policy is None and not dead_pods:
             # the historical costing path, untouched (bit-identical
             # timelines for every pre-existing scenario)
             strategy_name = (
@@ -605,7 +813,7 @@ def run_scenario(
                 sync_seconds = cost.amortized_seconds
                 seconds = sync_seconds
             if probes is not None:
-                rates = _pair_rates(geo, cost)
+                rates = _pair_rates(geo, cost.phases, cost.wan_seconds)
                 probe_now_ms = step * 1000.0  # one emulated second per step
                 for pair in probes.pairs:
                     probes.observe(
@@ -627,4 +835,6 @@ def run_scenario(
                 downtime_seconds=float(downtime_s),
             )
         )
+    if engine is not None:
+        result.serving_steps = list(engine.stats)
     return result

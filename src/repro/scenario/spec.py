@@ -44,9 +44,12 @@ __all__ = [
     "DegradationPolicy",
     "Scenario",
     "ScenarioEvent",
+    "ServingSpec",
     "SyncOptions",
     "TopologySpec",
     "WorkloadSpec",
+    "model_grad_bytes",
+    "model_kv_bytes",
 ]
 
 
@@ -297,6 +300,143 @@ def model_grad_bytes(model: str) -> int:
     return cached
 
 
+_MODEL_KV_BYTES: Dict[str, int] = {}
+
+
+def model_kv_bytes(model: str, tokens: int = 1) -> int:
+    """Decode-cache (KV / recurrent-state) bytes a served session holds
+    per context token, times ``tokens`` (cached per model).
+
+    Mirrors :func:`model_grad_bytes`: exact and allocation-free via
+    ``jax.eval_shape`` over the model's ``decode_32k`` cache layout,
+    amortized to per-token bytes.  Recurrent/RWKV layers hold O(1) state
+    independent of context length, so their per-token share is tiny —
+    exactly the serving-cost asymmetry sub-quadratic archs buy.
+    """
+    if tokens < 0:
+        raise ValueError("tokens must be >= 0")
+    per_token = _MODEL_KV_BYTES.get(model)
+    if per_token is None:
+        import jax
+        import numpy as np
+
+        from repro.configs import get_config
+        from repro.launch.shapes import SHAPES, decode_cache_specs
+
+        spec = SHAPES["decode_32k"]
+        cache = decode_cache_specs(get_config(model), "decode_32k")
+        total = sum(
+            int(np.prod(s.shape)) * s.dtype.itemsize
+            for s in jax.tree.leaves(cache)
+        )
+        per_token = max(total // (spec.global_batch * spec.seq_len), 1)
+        _MODEL_KV_BYTES[model] = per_token
+    return per_token * int(tokens)
+
+
+@dataclass(frozen=True)
+class ServingSpec:
+    """Geo-serving co-load: open-loop inference traffic on the training fabric.
+
+    **Request generation** (``repro.serving.traffic``): each DC hosts a
+    pinned user population (``users_per_dc``, or ``users`` split evenly —
+    the data-sovereignty assumption), producing Poisson arrivals per step
+    at ``requests_per_user_step``, modulated by a sinusoidal diurnal curve
+    whose peak rotates across DCs (time zones), with heavy-tailed
+    (lognormal/Pareto) per-request token counts.  The whole trace is a
+    pure function of this spec and ``seed``, so serving results are
+    byte-identical across sweep worker counts.
+
+    **KV sizing**: each request moves ``tokens * kv_bytes_per_token``
+    bytes (the prefill -> decode-host cache handoff) and a migrated
+    session moves ``session_tokens * kv_bytes_per_token``.  Per-token
+    bytes come explicitly or from a ``repro.configs`` model name via
+    :func:`model_kv_bytes` (the ``grad_bytes``/``model`` duality of
+    :class:`WorkloadSpec`).
+
+    **Affinity + failover** (``repro.serving.router``): sessions are
+    sticky to their home DC; ``remote_fraction`` of users are steadily
+    served cross-DC (the traffic class WAN brownouts actually hurt).  With
+    ``failover=True`` the router re-homes a session when its serving pair
+    trips an :class:`~repro.core.slaprobe.SlaProbe` (or, without probes,
+    when a ``degrade_pair`` lands or the pair partitions), paying the
+    session's KV migration bytes over the WAN.
+
+    Requests whose modeled latency exceeds ``slo_ms`` are SLO misses;
+    goodput is reported as ``serving_slo_miss_frac`` (lower is better).
+    """
+
+    users: int = 1_000_000
+    users_per_dc: Tuple[int, ...] = ()
+    requests_per_user_step: float = 8e-6
+    diurnal_amplitude: float = 0.5
+    diurnal_period_steps: int = 24
+    tail: str = "lognormal"
+    tail_sigma: float = 0.8
+    tail_alpha: float = 2.5
+    mean_tokens: int = 256
+    session_tokens: int = 2048
+    model: Optional[str] = None
+    kv_bytes_per_token: int = 0
+    remote_fraction: float = 0.0
+    slo_ms: float = 250.0
+    failover: bool = True
+    seed: int = 0
+
+    def __post_init__(self):
+        object.__setattr__(
+            self, "users_per_dc", tuple(int(u) for u in self.users_per_dc)
+        )
+        if self.users < 0 or any(u < 0 for u in self.users_per_dc):
+            raise ValueError("user populations must be >= 0")
+        if self.requests_per_user_step < 0:
+            raise ValueError("requests_per_user_step must be >= 0")
+        if not 0.0 <= self.diurnal_amplitude <= 1.0:
+            raise ValueError("diurnal_amplitude must be in [0, 1]")
+        if self.diurnal_period_steps < 1:
+            raise ValueError("diurnal_period_steps must be >= 1")
+        if self.tail not in ("lognormal", "pareto"):
+            raise ValueError(
+                f"tail must be 'lognormal' or 'pareto', got {self.tail!r}"
+            )
+        if self.tail_sigma <= 0:
+            raise ValueError("tail_sigma must be > 0")
+        if self.tail_alpha <= 1.0:
+            raise ValueError("tail_alpha must be > 1 (finite mean)")
+        if self.mean_tokens < 1:
+            raise ValueError("mean_tokens must be >= 1")
+        if self.session_tokens < 0:
+            raise ValueError("session_tokens must be >= 0")
+        if not 0.0 <= self.remote_fraction <= 1.0:
+            raise ValueError("remote_fraction must be in [0, 1]")
+        if self.slo_ms <= 0:
+            raise ValueError("slo_ms must be > 0")
+        if self.kv_bytes_per_token < 0:
+            raise ValueError("kv_bytes_per_token must be >= 0")
+
+    def resolve_kv_bytes_per_token(self) -> int:
+        """Per-token KV bytes: explicit, or derived from ``model``."""
+        if self.kv_bytes_per_token > 0:
+            return self.kv_bytes_per_token
+        if self.model is not None:
+            return model_kv_bytes(self.model)
+        raise ValueError(
+            "ServingSpec needs kv_bytes_per_token > 0 or a model name"
+        )
+
+    def to_dict(self) -> Dict[str, object]:
+        d = dataclasses.asdict(self)
+        d["users_per_dc"] = list(self.users_per_dc)
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, object]) -> "ServingSpec":
+        d = dict(d)
+        _reject_unknown_keys(cls, d)
+        d["users_per_dc"] = tuple(d.get("users_per_dc", ()))
+        return cls(**d)
+
+
 #: The event kinds :func:`repro.scenario.runner.run_scenario` executes.
 EVENT_KINDS = (
     "fail_link",            # BFD/BGP-detected link failure -> RecoveryTimeline
@@ -497,6 +637,9 @@ class Scenario:
     #: gray-failure detection + graceful degradation; None (the default)
     #: keeps the runner's historical behavior byte-for-byte
     policy: Optional[DegradationPolicy] = None
+    #: geo-serving co-load on the same fabric; None (the default) keeps
+    #: the runner's costing path byte-for-byte
+    serving: Optional[ServingSpec] = None
 
     def __post_init__(self):
         object.__setattr__(self, "events", tuple(self.events))
@@ -519,12 +662,14 @@ class Scenario:
             "events": [e.to_dict() for e in self.events],
             "description": self.description,
             "policy": None if self.policy is None else self.policy.to_dict(),
+            "serving": None if self.serving is None else self.serving.to_dict(),
         }
 
     @classmethod
     def from_dict(cls, d: Dict[str, object]) -> "Scenario":
         _reject_unknown_keys(cls, d)
         policy = d.get("policy")
+        serving = d.get("serving")
         return cls(
             name=d["name"],
             topology=TopologySpec.from_dict(d["topology"]),
@@ -533,4 +678,5 @@ class Scenario:
             events=tuple(ScenarioEvent.from_dict(e) for e in d["events"]),
             description=d.get("description", ""),
             policy=None if policy is None else DegradationPolicy.from_dict(policy),
+            serving=None if serving is None else ServingSpec.from_dict(serving),
         )

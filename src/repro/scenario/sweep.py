@@ -46,6 +46,7 @@ from repro.scenario.runner import run_scenario
 from repro.scenario.spec import (
     Scenario,
     ScenarioEvent,
+    ServingSpec,
     SyncOptions,
     TopologySpec,
     WorkloadSpec,
@@ -362,6 +363,7 @@ def random_campaign(
     straggler_probability: float = 0.5,
     degrade_probability: float = 0.0,
     storm_probability: float = 0.0,
+    serving_probability: float = 0.0,
 ) -> Sweep:
     """Sample a reproducible Monte Carlo campaign as a :class:`Sweep`.
 
@@ -383,10 +385,14 @@ def random_campaign(
     * with ``storm_probability > 0``, a multi-pair flap storm: one
       sampled spine dies whole (``fail_switch`` — every incident link,
       WAN links to *all* peer DCs included, fails atomically through one
-      shared detection window), then comes back.
+      shared detection window), then comes back;
+    * with ``serving_probability > 0``, a geo-serving co-load: a sampled
+      :class:`~repro.scenario.spec.ServingSpec` (population, per-user
+      request rate, remote fraction, per-token KV bytes, its own seed)
+      rides the training fabric, adding ``serving_*`` metrics to the row.
 
-    The two new axes draw nothing when their probability is 0, so
-    campaigns generated before they existed replay byte-identically.
+    Probability-gated axes draw nothing when their probability is 0, so
+    campaigns generated before an axis existed replay byte-identically.
     """
     rng = np.random.default_rng(seed)
     base = base if base is not None else _campaign_base()
@@ -441,6 +447,17 @@ def random_campaign(
             events.append(
                 ScenarioEvent(kind="restore_switch", at_step=at + 1, node=node)
             )
+        serving: Optional[ServingSpec] = None
+        if serving_probability > 0 and float(rng.uniform()) < serving_probability:
+            serving = ServingSpec(
+                users=int(rng.integers(50_000, 500_001)),
+                requests_per_user_step=float(rng.uniform(2e-6, 2e-5)),
+                remote_fraction=float(rng.uniform(0.0, 0.5)),
+                kv_bytes_per_token=int(rng.integers(8_192, 65_537)),
+                mean_tokens=128,
+                session_tokens=1024,
+                seed=int(rng.integers(0, 2**31 - 1)),
+            )
         overrides.append(
             {
                 "name": f"mc{i:03d}_p{num_pods}",
@@ -449,6 +466,7 @@ def random_campaign(
                 "topology.seed": int(rng.integers(0, 2**31 - 1)),
                 "workload.overlap_fraction": float(rng.choice([0.0, 0.25, 0.5, 0.75, 1.0])),
                 "events": tuple(events),
+                **({"serving": serving} if serving is not None else {}),
             }
         )
     return Sweep(

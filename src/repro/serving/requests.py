@@ -1,0 +1,34 @@
+"""Materialize a trace :class:`~repro.serving.traffic.Request` as a real
+model input batch.
+
+The simulator prices a request by its KV bytes; this module is the
+execution-side counterpart — the same frontend-aware batch construction
+the serving CLI uses (:mod:`repro.launch.batches`), keyed off the
+request's trace identity so a given request always materializes the same
+prompt.  ``examples/serve_geo.py`` uses it to run a traced request
+through a real prefill.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.serving.traffic import Request
+
+__all__ = ["request_batch"]
+
+
+def request_batch(cfg, request: Request, *, key=None) -> Dict[str, object]:
+    """A batch-of-one prefill input for ``request``, deterministic in
+    ``request.rid`` unless an explicit ``key`` is passed."""
+    import jax
+
+    from repro.launch.batches import synthetic_prompt_batch
+
+    if key is None:
+        key = jax.random.PRNGKey(request.rid)
+    prompt_len = max(request.tokens, 1)
+    if cfg.frontend == "patch":
+        # the patch frontend needs room for its prefix tokens
+        prompt_len += cfg.num_prefix_tokens
+    return synthetic_prompt_batch(cfg, key, 1, prompt_len)

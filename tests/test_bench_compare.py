@@ -54,6 +54,18 @@ class TestMetricDirection:
         assert metric_direction("step_f75_seconds") == "lower"
         assert metric_direction("mystery_quantity") == "pinned"
 
+    def test_latency_percentiles_gate_lower(self):
+        """ISSUE 8 satellite: serving latency percentiles are lower-is-
+        better, so a p99 regression in BENCH_serving.json trips CI."""
+        assert metric_direction("serving_p99_ms") == "lower"
+        assert metric_direction("serving_p50_ms") == "lower"
+        assert metric_direction("tail_p99") == "lower"
+        assert metric_direction("tail_p50") == "lower"
+        up = Delta(
+            "serving", "flap", "x_p99", baseline=100.0, new=130.0, direction="lower"
+        )
+        assert up.regressed(0.20)
+
     def test_delta_directionality(self):
         up = Delta("s", "r", "x_ms", baseline=100.0, new=130.0, direction="lower")
         assert up.regressed(0.20)

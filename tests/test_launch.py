@@ -98,6 +98,47 @@ class TestInputSpecs:
         assert n > 4e11
 
 
+class TestServeCli:
+    """ISSUE 8 satellite: serve.py's batch construction now lives in
+    ``repro.launch.batches`` and is shared with the serving request
+    model — the CLI must keep working through the shared helper."""
+
+    def test_serve_smoke(self, capsys):
+        from repro.launch import serve
+
+        serve.main(
+            ["--arch", "distilgpt2-82m", "--batch", "2", "--prompt-len", "8",
+             "--gen", "2"]
+        )
+        out = capsys.readouterr().out
+        assert "prefill: 2x8" in out
+        assert "decode: 2 steps" in out
+        assert "sample[0]:" in out
+
+    def test_synthetic_prompt_batch_shapes(self):
+        from repro.launch.batches import synthetic_prompt_batch
+
+        cfg = get_config("distilgpt2-82m")
+        key = jax.random.PRNGKey(0)
+        batch = synthetic_prompt_batch(cfg, key, 2, 8)
+        assert batch["tokens"].shape == (2, 8)
+        # deterministic in the key
+        again = synthetic_prompt_batch(cfg, key, 2, 8)
+        assert (batch["tokens"] == again["tokens"]).all()
+
+    def test_request_batch_reuses_helper(self):
+        """The serving request model builds batches through the same
+        helper, keyed by request id."""
+        from repro.launch.batches import synthetic_prompt_batch
+        from repro.serving import Request, request_batch
+
+        cfg = get_config("distilgpt2-82m")
+        req = Request(rid=7, step=0, home_dc=1, user=42, tokens=8)
+        got = request_batch(cfg, req)
+        want = synthetic_prompt_batch(cfg, jax.random.PRNGKey(7), 1, 8)
+        assert (got["tokens"] == want["tokens"]).all()
+
+
 class _FakeMesh:
     """Shape/axis view of a mesh (this process has 1 real device)."""
 

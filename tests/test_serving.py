@@ -1,0 +1,370 @@
+"""Geo-serving subsystem (ISSUE 8): open-loop traffic, session affinity
+routing, co-scheduled pricing, and the declarative surface.
+
+Covers the tentpole guarantees:
+
+* **trace determinism** — ``generate_trace`` is a pure function of
+  ``(spec, num_dcs, num_steps)``; rotating diurnal curves and both tail
+  families behave as specified;
+* **session/KV affinity** — routes are sticky, the steady
+  ``remote_fraction`` class is a deterministic per-user hash, and
+  failover (per-request and the step-boundary sweep) pays concrete
+  WAN migration bytes exactly when the old KV is still reachable;
+* **runner integration** — ``ServingSpec`` on a ``Scenario`` yields
+  per-step rollups and gated metrics; co-scheduled training strictly
+  inflates serving p99 vs a quiescent fabric; scenarios *without* a
+  ``ServingSpec`` report no serving metrics at all;
+* **declarative surface** — strict ``from_dict``, JSON round-trip, and
+  sweep worker-count invariance.
+"""
+
+import json
+
+import pytest
+
+from repro.core.geo import GeoFabric
+from repro.scenario import (
+    Scenario,
+    ServingSpec,
+    Sweep,
+    SyncOptions,
+    TopologySpec,
+    WorkloadSpec,
+    get_scenario,
+    model_kv_bytes,
+    run_scenario,
+    run_sweep,
+)
+from repro.serving import (
+    MIGRATION_PHASE,
+    SERVING_PHASE,
+    FabricHealth,
+    ServingEngine,
+    SessionRouter,
+    diurnal_factor,
+    generate_trace,
+    resolve_populations,
+)
+
+KV = 16_384  # explicit bytes/token: keeps unit tests off the model configs
+
+
+def _spec(**kw) -> ServingSpec:
+    base = dict(
+        users=40_000,
+        requests_per_user_step=1e-4,
+        mean_tokens=64,
+        session_tokens=256,
+        kv_bytes_per_token=KV,
+        seed=11,
+    )
+    base.update(kw)
+    return ServingSpec(**base)
+
+
+def _health(num_dcs=2, dead=(), bad=(), rtt=25.0) -> FabricHealth:
+    alive = frozenset(d for d in range(1, num_dcs + 1) if d not in dead)
+    pairs = {
+        (a, b): rtt
+        for a in range(1, num_dcs + 1)
+        for b in range(a + 1, num_dcs + 1)
+    }
+    return FabricHealth(
+        alive=alive, bad_pairs=frozenset(bad), rtt_ms=pairs
+    )
+
+
+class TestTraffic:
+    def test_trace_is_pure_function_of_spec(self):
+        spec = _spec()
+        assert generate_trace(spec, 2, 6) == generate_trace(spec, 2, 6)
+        assert generate_trace(spec, 2, 6) != generate_trace(
+            _spec(seed=12), 2, 6
+        )
+
+    def test_populations_split_or_explicit(self):
+        assert sum(resolve_populations(_spec(users=10_001), 4)) == 10_001
+        explicit = _spec(users_per_dc=(5, 0, 7))
+        assert resolve_populations(explicit, 3) == (5, 0, 7)
+        with pytest.raises(ValueError, match="users_per_dc"):
+            resolve_populations(explicit, 2)
+
+    def test_diurnal_peak_rotates_across_dcs(self):
+        spec = _spec(diurnal_amplitude=0.5, diurnal_period_steps=24)
+        peak = {
+            dc: max(range(24), key=lambda s: diurnal_factor(spec, s, dc, 4))
+            for dc in (1, 2, 3, 4)
+        }
+        assert len(set(peak.values())) == 4  # no two DCs peak together
+        for dc in (1, 2, 3, 4):
+            lo = min(diurnal_factor(spec, s, dc, 4) for s in range(24))
+            hi = max(diurnal_factor(spec, s, dc, 4) for s in range(24))
+            assert 0.5 <= lo and hi <= 1.5
+
+    @pytest.mark.parametrize("tail", ["lognormal", "pareto"])
+    def test_tails_mean_and_floor(self, tail):
+        spec = _spec(tail=tail, users=400_000, requests_per_user_step=2e-5)
+        reqs = [r for step in generate_trace(spec, 2, 10) for r in step]
+        assert len(reqs) > 50
+        assert all(r.tokens >= 1 for r in reqs)
+        mean = sum(r.tokens for r in reqs) / len(reqs)
+        assert 0.5 * spec.mean_tokens < mean < 2.0 * spec.mean_tokens
+        # heavy tail: the max is a clear multiple of the mean
+        assert max(r.tokens for r in reqs) > 2 * mean
+
+    def test_rids_unique_and_requests_pinned_to_population(self):
+        spec = _spec()
+        reqs = [r for step in generate_trace(spec, 3, 6) for r in step]
+        assert len({r.rid for r in reqs}) == len(reqs)
+        pops = resolve_populations(spec, 3)
+        assert all(0 <= r.user < pops[r.home_dc - 1] for r in reqs)
+
+
+class TestRouter:
+    def test_home_affinity_is_sticky(self):
+        router = SessionRouter(_spec(), num_dcs=2)
+        h = _health()
+        first = router.route(1, 42, h)
+        assert first.serving_dc == 1 and not first.migrated
+        again = router.route(1, 42, h)
+        assert again.serving_dc == 1 and not again.migrated
+
+    def test_remote_fraction_hash_is_deterministic(self):
+        spec = _spec(remote_fraction=0.5)
+        a = SessionRouter(spec, num_dcs=3)
+        b = SessionRouter(spec, num_dcs=3)
+        h = _health(num_dcs=3)
+        routes_a = [a.route(1, u, h).serving_dc for u in range(200)]
+        routes_b = [b.route(1, u, h).serving_dc for u in range(200)]
+        assert routes_a == routes_b
+        remote = sum(dc != 1 for dc in routes_a)
+        assert 0 < remote < 200  # both classes present
+
+    def test_all_remote_picks_lowest_rtt_healthy_dc(self):
+        spec = _spec(remote_fraction=1.0)
+        router = SessionRouter(spec, num_dcs=3)
+        rtts = {(1, 2): 80.0, (1, 3): 20.0, (2, 3): 40.0}
+        h = FabricHealth(
+            alive=frozenset({1, 2, 3}),
+            bad_pairs=frozenset(),
+            rtt_ms=rtts,
+        )
+        assert router.route(1, 0, h).serving_dc == 3
+
+    def test_dead_serving_dc_migrates_without_kv_source(self):
+        spec = _spec(remote_fraction=1.0)
+        router = SessionRouter(spec, num_dcs=2)
+        assert router.route(1, 0, _health()).serving_dc == 2
+        moved = router.route(1, 0, _health(dead=(2,)))
+        assert moved.migrated and moved.serving_dc == 1
+        assert moved.kv_source is None  # the cache died with DC 2
+
+    def test_bad_pair_migrates_home_paying_kv(self):
+        spec = _spec(remote_fraction=1.0)
+        router = SessionRouter(spec, num_dcs=2)
+        router.route(1, 0, _health())
+        moved = router.route(1, 0, _health(bad=((1, 2),)))
+        assert moved.migrated and moved.serving_dc == 1
+        assert moved.kv_source == 2  # DC 2 is alive: KV transfers over WAN
+
+    def test_failover_off_keeps_degraded_placement(self):
+        spec = _spec(remote_fraction=1.0, failover=False)
+        router = SessionRouter(spec, num_dcs=2)
+        router.route(1, 0, _health())
+        stuck = router.route(1, 0, _health(bad=((1, 2),)))
+        assert stuck.serving_dc == 2 and not stuck.migrated
+        assert router.rehome_all(_health(bad=((1, 2),))) == []
+
+    def test_rehome_sweep_moves_idle_sessions(self):
+        """The step-boundary sweep re-homes sessions that issue no
+        request this step — live users feel a brownout regardless."""
+        spec = _spec(remote_fraction=1.0)
+        router = SessionRouter(spec, num_dcs=2)
+        for u in range(5):
+            router.route(1, u, _health())
+        moves = router.rehome_all(_health(bad=((1, 2),)))
+        assert [(m[0], m[1]) for m in moves] == [(1, u) for u in range(5)]
+        assert all(m[3].migrated and m[3].kv_source == 2 for m in moves)
+        # sweep already re-homed them: routing again migrates nothing
+        assert not router.route(1, 0, _health(bad=((1, 2),))).migrated
+
+    def test_nowhere_to_go_drops_the_session(self):
+        router = SessionRouter(_spec(), num_dcs=2)
+        router.route(1, 0, _health())
+        assert router.route(1, 0, _health(dead=(1, 2))) is None
+
+
+class TestEngine:
+    def _engine(self, **kw):
+        return ServingEngine(spec=_spec(**kw), num_dcs=2, num_steps=4)
+
+    def test_plan_emits_request_flows_and_stats(self):
+        geo = GeoFabric(2, 2, seed=3)
+        eng = self._engine()
+        plan = eng.plan_step(0, geo, _health())
+        assert len(plan.placements) > 0 and plan.dropped == 0
+        names = {p.name for p in plan.phases}
+        assert SERVING_PHASE in names and MIGRATION_PHASE not in names
+        stats = eng.finish_step(plan, report=None)
+        assert stats.requests == len(plan.placements)
+        assert stats.tokens == sum(r.tokens for r, _rt, _h in plan.placements)
+        assert stats.p99_ms == 0.0  # no report: wire cost unpriced
+
+    def test_migration_bytes_are_sessions_times_kv(self):
+        geo = GeoFabric(2, 2, seed=3)
+        eng = self._engine(remote_fraction=1.0)
+        eng.plan_step(0, geo, _health())  # establish remote sessions
+        plan = eng.plan_step(1, geo, _health(bad=((1, 2),)))
+        assert plan.migrated_sessions > 0
+        assert plan.migration_bytes == (
+            plan.migrated_sessions * eng.session_kv_bytes
+        )
+        assert any(p.name == MIGRATION_PHASE for p in plan.phases)
+
+    def test_two_engines_plan_identically(self):
+        geo = GeoFabric(2, 2, seed=3)
+        a, b = self._engine(), self._engine()
+        for step in range(2):
+            assert a.plan_step(step, geo, _health()) == b.plan_step(
+                step, geo, _health()
+            )
+
+
+def _scenario(strategy, serving, steps=4, name="serving_unit") -> Scenario:
+    return Scenario(
+        name=name,
+        topology=TopologySpec(num_pods=2, workers_per_pod=2, seed=3),
+        workload=WorkloadSpec(strategy=strategy, grad_bytes=96_000_000, steps=steps),
+        options=SyncOptions(jitter=False),
+        serving=serving,
+    )
+
+
+class TestRunnerIntegration:
+    def test_serving_rollups_and_metrics(self):
+        result = run_scenario(_scenario("allreduce", _spec()))
+        assert [s.step for s in result.serving_steps] == [0, 1, 2, 3]
+        m = result.metrics()
+        assert m["serving_requests"] == sum(
+            s.requests for s in result.serving_steps
+        )
+        for key in (
+            "serving_p50_ms",
+            "serving_p99_ms",
+            "serving_slo_miss_frac",
+            "serving_migrated_sessions",
+            "serving_migration_bytes",
+        ):
+            assert key in m
+        assert len(result.to_dict()["serving_steps"]) == 4
+
+    def test_no_servingspec_means_no_serving_metrics(self):
+        result = run_scenario(_scenario("allreduce", None))
+        assert result.serving_steps == []
+        assert not any(k.startswith("serving_") for k in result.metrics())
+        assert result.to_dict()["serving_steps"] == []
+
+    def test_training_strictly_inflates_serving_p99(self):
+        """The co-scheduling tentpole: same trace, same fabric — adding
+        the AllReduce must make every step's serving p99 worse."""
+        spec = _spec(
+            users=200_000,
+            requests_per_user_step=5e-5,
+            remote_fraction=0.3,
+            seed=7,
+        )
+
+        def sc(strategy, name):
+            return Scenario(
+                name=name,
+                topology=TopologySpec(
+                    num_pods=2, workers_per_pod=2, num_channels=4, seed=3
+                ),
+                workload=WorkloadSpec(
+                    strategy=strategy, grad_bytes=312_000_000, steps=4
+                ),
+                options=SyncOptions(jitter=False),
+                serving=spec,
+            )
+
+        quiet = run_scenario(sc(None, "quiet"))
+        busy = run_scenario(sc("allreduce", "busy"))
+        q = [s.p99_ms for s in quiet.serving_steps]
+        b = [s.p99_ms for s in busy.serving_steps]
+        assert [s.requests for s in quiet.serving_steps] == [
+            s.requests for s in busy.serving_steps
+        ]
+        assert all(bi > qi for qi, bi in zip(q, b))
+
+    def test_serving_under_flap_migrates_and_recovers(self):
+        result = run_scenario(get_scenario("serving_under_flap"))
+        m = result.metrics()
+        assert m["serving_migrated_sessions"] > 0
+        assert m["serving_migration_bytes"] > 0
+        mig_step = next(
+            s.step for s in result.serving_steps if s.migrated_sessions > 0
+        )
+        assert all(
+            s.slo_misses == 0
+            for s in result.serving_steps
+            if s.step >= mig_step
+        )
+
+
+class TestDeclarativeSurface:
+    def test_scenario_json_round_trip(self):
+        sc = _scenario("allreduce", _spec(users_per_dc=(7, 9)))
+        assert Scenario.from_dict(json.loads(json.dumps(sc.to_dict()))) == sc
+        assert sc.to_dict()["serving"]["users_per_dc"] == [7, 9]
+        bare = _scenario("allreduce", None)
+        assert bare.to_dict()["serving"] is None
+        assert Scenario.from_dict(json.loads(json.dumps(bare.to_dict()))) == bare
+
+    def test_from_dict_rejects_unknown_keys(self):
+        d = _spec().to_dict()
+        d["typo_field"] = 1
+        with pytest.raises(ValueError, match="typo_field"):
+            ServingSpec.from_dict(d)
+
+    @pytest.mark.parametrize(
+        "kw,msg",
+        [
+            (dict(tail="uniform"), "tail"),
+            (dict(tail_alpha=1.0), "alpha"),
+            (dict(diurnal_amplitude=1.5), "amplitude"),
+            (dict(remote_fraction=-0.1), "remote_fraction"),
+            (dict(slo_ms=0.0), "slo_ms"),
+        ],
+    )
+    def test_validation(self, kw, msg):
+        with pytest.raises(ValueError, match=msg):
+            _spec(**kw)
+
+    def test_kv_bytes_resolution(self):
+        assert _spec().resolve_kv_bytes_per_token() == KV
+        derived = _spec(kv_bytes_per_token=0, model="distilgpt2-82m")
+        assert derived.resolve_kv_bytes_per_token() == model_kv_bytes(
+            "distilgpt2-82m"
+        )
+        assert model_kv_bytes("distilgpt2-82m") == 18_432
+        assert model_kv_bytes("distilgpt2-82m", tokens=3) == 3 * 18_432
+        with pytest.raises(ValueError, match="kv_bytes_per_token"):
+            _spec(kv_bytes_per_token=0).resolve_kv_bytes_per_token()
+
+    def test_sweep_worker_counts_agree(self):
+        base = _scenario(None, _spec(users=100_000), name="sw")
+        sweep = Sweep(
+            base=base,
+            overrides=(
+                {"name": "s1", "serving.seed": 1},
+                {"name": "s2", "serving.seed": 2},
+                {"name": "s3", "serving.remote_fraction": 0.4},
+            ),
+            name="serving_workers",
+        )
+        serial = run_sweep(sweep)
+        parallel = run_sweep(sweep, workers=2)
+        assert [r.to_dict() for r in serial.rows] == [
+            r.to_dict() for r in parallel.rows
+        ]
+        assert all("serving_p99_ms" in r.metrics for r in serial.rows)

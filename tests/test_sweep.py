@@ -343,3 +343,27 @@ class TestSweepEngine:
         sweep = random_campaign(seed=3, variants=3)
         for v in sweep.variants():
             assert Scenario.from_dict(json.loads(json.dumps(v.to_dict()))) == v
+
+    def test_serving_axis_deterministic_and_worker_invariant(self):
+        """ISSUE 8 satellite: the ``serving_probability`` axis draws
+        ServingSpecs deterministically and survives the process pool."""
+        kw = dict(variants=3, serving_probability=1.0)
+        a = random_campaign(seed=42, **kw)
+        b = random_campaign(seed=42, **kw)
+        assert a.overrides == b.overrides
+        assert all("serving" in ov for ov in a.overrides)
+        for v in a.variants():
+            assert v.serving is not None
+            assert Scenario.from_dict(json.loads(json.dumps(v.to_dict()))) == v
+        ra = run_sweep(a)
+        rb = run_sweep(b, workers=2)
+        assert [r.to_dict() for r in ra.rows] == [r.to_dict() for r in rb.rows]
+        assert all("serving_p99_ms" in r.metrics for r in ra.rows)
+
+    def test_serving_axis_off_by_default_preserves_draw_stream(self):
+        """Campaigns generated before the serving axis existed must
+        replay byte-identically: probability 0 consumes no draws."""
+        legacy = random_campaign(seed=6, variants=4)
+        explicit = random_campaign(seed=6, variants=4, serving_probability=0.0)
+        assert legacy.overrides == explicit.overrides
+        assert all("serving" not in ov for ov in legacy.overrides)
