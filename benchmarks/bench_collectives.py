@@ -12,6 +12,12 @@ over the WAN links.
 Also measures the batched routing engine against the sequential per-flow
 walk on a >=10k-flow all-to-all workload (steady state, next-hop tables
 warm) and asserts the two produce byte-identical counters.
+
+The SCALED64 tier (ISSUE 9, :mod:`benchmarks.scaled64`) scales further:
+64 DCs, 256 hosts, and the ~100k-flow leader-ring workload routed through
+the fabric in one batch — the topology-scale end of the same sweep.  The
+event-loop side of the tier (incremental vs from-scratch allocator) is
+gated in :mod:`benchmarks.bench_scenarios`.
 """
 
 from __future__ import annotations
@@ -137,4 +143,29 @@ def run() -> List[BenchRow]:
         raise AssertionError(
             f"batched router speedup {speedup:.1f}x below {MIN_SPEEDUP:.0f}x target"
         )
+
+    # SCALED64 routing row: the 64-DC leader-ring workload through the
+    # batched router (machine-independent shape facts gated; wall-clock
+    # reported per flow, never gated).
+    from .scaled64 import build_scaled64
+
+    fabric64, _, sched64 = build_scaled64()
+    flows64 = sched64.all_flows()
+    _, us = timed(lambda: route_flows_batched(fabric64, flows64))
+    lf64, skew64 = _wan_metrics(fabric64)
+    rows.append(
+        BenchRow(
+            name="scaled64_ring_routing",
+            us_per_call=us / len(flows64),
+            derived=(
+                f"{len(flows64)} flows over {len(fabric64.hosts)} hosts / "
+                f"{len(fabric64.wan_links)} WAN links | load_factor={lf64:.3f} "
+                f"skew={skew64:.5f}"
+            ),
+            metrics={
+                "scaled64_num_flows": float(len(flows64)),
+                "scaled64_wan_load_factor": lf64,
+            },
+        )
+    )
     return rows

@@ -19,17 +19,42 @@ Cross-scenario gates (the study conclusions, not just the numbers):
 * ``bfd_flap_storm`` / ``multi_tenant_churn``: every flap produces a
   recovery timeline / EVPN resync record, and recovery stays in the BFD
   class (~110 ms), not the BGP class.
+
+ISSUE 9 adds the allocator gates:
+
+* **library equivalence** — representative multi-phase scenarios re-run
+  with the from-scratch :class:`_FullEpochAllocator`
+  (``INCREMENTAL_EVENT_LOOP = False``) must reproduce the incremental
+  run's ``ScenarioResult.metrics()`` *exactly* (dict equality, no
+  tolerance) — the repo's byte-identity-gate convention
+  (``docs/ARCHITECTURE.md``) applied to the event loop;
+* **SCALED64** (:mod:`benchmarks.scaled64`) — the 64-DC / ~100k-flow
+  leader-ring schedule replayed through ``_simulate_events`` with both
+  allocators: per-flow timelines and per-link peak throughput must be
+  byte-identical, and the incremental event loop must be >=
+  ``MIN_EVENT_LOOP_SPEEDUP``x faster wall-clock (assertion, like the
+  batched-router gate — wall-clock is never a compared metric).
 """
 
 from __future__ import annotations
 
 from typing import Dict, List
 
+import numpy as np
+
+from repro.core import congestion
 from repro.scenario import ScenarioResult, get_scenario, run_scenario, scenario_names
 
 from .common import BenchRow, timed
 
 OVERLAP_FRACTIONS = (0.0, 0.5)  # the full sweep is gated in fig14_training
+
+#: Multi-phase library scenarios re-run under the from-scratch allocator
+#: for the exact-equality gate (cheap ones — the gate is about identity,
+#: not coverage; the property test covers random DAG shapes).
+EQUIVALENCE_SCENARIOS = ("rs_ag_overlap", "serving_under_flap")
+
+MIN_EVENT_LOOP_SPEEDUP = 5.0
 
 
 def _row(name: str, result: ScenarioResult, us: float) -> BenchRow:
@@ -108,6 +133,88 @@ def run() -> List[BenchRow]:
     churn = results["multi_tenant_churn"]
     if not churn.evpn_resyncs:
         raise AssertionError("churn scenario must surface EvpnResyncStats")
+    # -- allocator gates (ISSUE 9) -------------------------------------------
+    # library equivalence: from-scratch oracle reproduces the incremental
+    # run's metrics exactly
+    assert congestion.INCREMENTAL_EVENT_LOOP, "bench assumes incremental default"
+    congestion.INCREMENTAL_EVENT_LOOP = False
+    try:
+        for name in EQUIVALENCE_SCENARIOS:
+            full = run_scenario(get_scenario(name))
+            if full.metrics() != results[name].metrics():
+                raise AssertionError(
+                    f"scenario {name!r}: from-scratch allocator metrics "
+                    "diverge from incremental run"
+                )
+    finally:
+        congestion.INCREMENTAL_EVENT_LOOP = True
+
+    # SCALED64: byte-identity + wall-clock speedup of the event loop itself
+    from .scaled64 import build_scaled64
+
+    fabric64, netem64, sched64 = build_scaled64()
+    flows64 = sched64.all_flows()
+    nb64 = np.asarray([f.nbytes for f in flows64], dtype=np.float64)
+    slices64 = sched64.flow_slices()
+    fabric64.reset_counters()
+    _, paths64 = fabric64.route_flows_with_paths(flows64)
+    matrix64 = congestion.build_link_load_matrix(fabric64, netem64, paths64)
+    link_total64 = np.bincount(
+        matrix64.mem_link,
+        weights=nb64[matrix64.mem_flow],
+        minlength=len(matrix64.links),
+    )
+    rep_inc, inc_us = timed(
+        lambda: congestion._simulate_events(
+            sched64, matrix64, nb64, slices64, link_total64, incremental=True
+        )
+    )
+    rep_full, full_us = timed(
+        lambda: congestion._simulate_events(
+            sched64, matrix64, nb64, slices64, link_total64, incremental=False
+        )
+    )
+    identical = (
+        np.array_equal(rep_inc.flow_start_s, rep_full.flow_start_s)
+        and np.array_equal(rep_inc.flow_drain_s, rep_full.flow_drain_s)
+        and np.array_equal(rep_inc.completion_s, rep_full.completion_s)
+        and np.array_equal(
+            rep_inc.peak_throughput_gbps, rep_full.peak_throughput_gbps
+        )
+        and all(
+            a.start_s == b.start_s and a.end_s == b.end_s
+            for a, b in zip(rep_inc.phase_timings, rep_full.phase_timings)
+        )
+    )
+    if not identical:
+        raise AssertionError(
+            "SCALED64: incremental event loop diverged from the "
+            "from-scratch oracle"
+        )
+    speedup = full_us / inc_us
+    if speedup < MIN_EVENT_LOOP_SPEEDUP:
+        raise AssertionError(
+            f"SCALED64 event-loop speedup {speedup:.1f}x below "
+            f"{MIN_EVENT_LOOP_SPEEDUP:.0f}x target"
+        )
+    rows.append(
+        BenchRow(
+            name="scenario_scaled64_event_loop",
+            us_per_call=inc_us,
+            derived=(
+                f"{len(flows64)} flows, {len(sched64.phases)} rounds | "
+                f"incremental {inc_us / 1e6:.2f}s vs full "
+                f"{full_us / 1e6:.2f}s = {speedup:.1f}x (byte-identical; "
+                f"target >={MIN_EVENT_LOOP_SPEEDUP:.0f}x) | "
+                f"makespan {rep_inc.seconds:.3f}s"
+            ),
+            metrics={
+                "scaled64_makespan_seconds": rep_inc.seconds,
+                "scaled64_peak_wan_gbps": rep_inc.effective_wan_gbps,
+            },
+        )
+    )
+
     rows.append(
         BenchRow(
             name="scenario_gates",

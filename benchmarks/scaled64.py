@@ -1,0 +1,87 @@
+"""SCALED64 topology tier: 64 DCs, ~100k concurrent WAN flows (ISSUE 9).
+
+The regime "I've Got 99 Problems But FLOPS Ain't One" (PAPERS.md) argues
+is where networking dominates geo-training: 64 data centers, a ring of
+per-DC leaders, and enough concurrent collective rounds that ~100k flows
+are in flight at once.  This module builds that workload once so both
+bench suites share it:
+
+* ``bench_collectives.py`` routes it through the 64-DC fabric (the
+  topology-scale row);
+* ``bench_scenarios.py`` replays it through ``simulate_schedule``'s event
+  loop twice — warm-started :class:`_IncrementalAllocator` vs from-scratch
+  :class:`_FullEpochAllocator` — gating byte-identity and the >=5x
+  wall-clock speedup.
+
+Every ring pair gets its *own* WAN bandwidth (a deterministic spread over
+0.5-0.8 Gbit/s, the paper's effective-WAN band) so each pair drains at its
+own time: the event loop sees ~one drain event per pair per round, and
+because the pairs' directed WAN paths share no link, each event dirties
+exactly one allocator component out of 64 — the shape the incremental
+re-solve exists for.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from repro.core.fabric import Fabric, FabricConfig
+from repro.core.flows import Flow, ring_allreduce_flows
+from repro.core.schedule import CollectiveSchedule, Phase
+from repro.core.wan import Netem, NetemProfile
+
+#: 64 DCs x 2 spines x 2 leaves x 2 hosts/leaf = 256 hosts.
+NUM_DCS = 64
+SCALED64 = FabricConfig(
+    num_dcs=NUM_DCS,
+    spines_per_dc=2,
+    leaves_per_dc=2,
+    hosts_per_leaf=tuple(tuple(2 for _ in range(2)) for _ in range(NUM_DCS)),
+)
+
+#: 6 concurrent ring rounds x 64 pairs x 256 channels = 98 304 flows.
+NUM_ROUNDS = 6
+NUM_CHANNELS = 256
+GRAD_BYTES = 48_000_000
+
+
+def wan_pair_profiles() -> Dict[Tuple[int, int], NetemProfile]:
+    """Distinct per-ring-pair WAN bandwidths (deterministic 0.5-0.8 Gbit/s
+    spread) so every pair is its own bottleneck level and drain event."""
+    pairs: Dict[Tuple[int, int], NetemProfile] = {}
+    for i in range(1, NUM_DCS + 1):
+        j = i % NUM_DCS + 1
+        bw = 0.5 + 0.3 * ((i * 7) % 13) / 13.0
+        pairs[(i, j)] = NetemProfile(
+            delay_ms=5.0, jitter_ms=1.0, bandwidth_gbps=bw, loss=0.0
+        )
+    return pairs
+
+
+def leader_ring(fabric: Fabric) -> List[str]:
+    """One leader host per DC, in DC order (the DCI ring endpoints)."""
+    by_dc: Dict[int, List[str]] = {}
+    for name, h in fabric.hosts.items():
+        by_dc.setdefault(h.dc, []).append(name)
+    return [sorted(by_dc[dc])[0] for dc in sorted(by_dc)]
+
+
+def build_scaled64() -> Tuple[Fabric, Netem, CollectiveSchedule]:
+    """The SCALED64 fabric, per-pair netem, and ~100k-flow schedule."""
+    fabric = Fabric(SCALED64)
+    netem = Netem(fabric, wan_pairs=wan_pair_profiles())
+    leaders = leader_ring(fabric)
+    phases = []
+    for p in range(NUM_ROUNDS):
+        # +p*1_000_003 bytes de-synchronizes the rounds' drain times;
+        # disjoint QPN spans keep the rounds' flows distinct five-tuples
+        flows: List[Flow] = ring_allreduce_flows(
+            leaders,
+            GRAD_BYTES + p * 1_000_003,
+            num_channels=NUM_CHANNELS,
+            base_qpn=0x11 + p * NUM_CHANNELS * NUM_DCS * 2,
+        )
+        phases.append(Phase(name=f"round{p}", flows=tuple(flows), deps=()))
+    return fabric, netem, CollectiveSchedule(
+        name="scaled64_ring", phases=tuple(phases)
+    )

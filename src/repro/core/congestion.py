@@ -48,6 +48,21 @@ together.  This module refines that into a *flow-level* model:
   :class:`ScheduleReport` carries per-phase/per-flow timelines.  A
   single-phase schedule reproduces :func:`congestion_report` exactly.
 
+The event loop's per-epoch allocation is **component-decomposed and
+incremental** (ISSUE 9): the active flow x link membership graph is
+partitioned into connected components (flows coupled only transitively
+through shared directed links), every component is water-filled with its
+*own* level accumulator (:func:`_multi_max_min_rates`), and across
+events the default :class:`_IncrementalAllocator` re-solves only the
+components whose active-flow sets an arrival/completion actually changed
+— warm-starting everyone else from the previous epoch's rates, which are
+bit-for-bit what a from-scratch solve would recompute for them.
+``simulate_schedule(..., incremental=False)`` forces the from-scratch
+oracle (:class:`_FullEpochAllocator`); the two are gated byte-identical,
+the same discipline as ``Fabric._reconverge`` and
+``EvpnControlPlane.resync_incremental`` before them (see
+``docs/ARCHITECTURE.md``).
+
 Wired into :meth:`repro.core.wan.WanTimingModel.contended_transfer_time`
 / :meth:`~repro.core.wan.WanTimingModel.contended_schedule_time` (and from
 there ``GeoFabric.sync_cost(congestion=True)``) so Fig. 14-style
@@ -274,10 +289,48 @@ def _max_min_rates_arrays(
 ) -> np.ndarray:
     """:func:`max_min_rates` over raw membership arrays.
 
-    ``mem_f``/``mem_l`` may be any subset of a matrix's rows (the
-    event-driven simulator passes only the rows of currently-active
-    flows); flows with no rows get rate 0.  ``weights`` is always indexed
-    by global flow id, so a rows subset composes with it unchanged.
+    **The weighted max-min definition.**  An allocation is (weighted)
+    max-min fair when no flow's rate can be raised without lowering the
+    rate of another flow whose *normalized* rate (``rate / weight``) is
+    already no larger.  Progressive filling computes exactly that fixed
+    point: every unfrozen flow ``f`` rises at ``weights[f] * level`` for
+    one common scalar ``level``; when a link's residual capacity hits
+    zero it *saturates* and freezes every flow crossing it at the current
+    level; the loop repeats on the survivors.  Each round the binding
+    link is the one minimizing ``residual / (sum of unfrozen member
+    weights)``, so a round costs a ``bincount`` + a min over links, and
+    the whole solve is ``O(bottleneck levels x active memberships)`` in
+    pure NumPy.  ``weights=None`` (or all-ones, byte-for-byte) is the
+    classic unweighted allocation.
+
+    **The CSR membership layout.**  ``mem_f``/``mem_l`` are the
+    row-aligned halves of a flow x link incidence in coordinate form: row
+    ``r`` says flow ``mem_f[r]`` traverses link ``mem_l[r]``.  Rows are
+    laid out flow-major in ascending flow order (the
+    :func:`build_link_load_matrix` construction:
+    ``mem_flow = repeat(arange(F), hops_per_flow)``), so flow ``f``'s
+    rows are the contiguous slice ``row_ptr[f]:row_ptr[f+1]`` with
+    ``row_ptr = cumsum(hops_per_flow)`` — the property the incremental
+    event-loop allocator uses to gather any flow subset's rows in one
+    vectorized ragged gather.  ``mem_f``/``mem_l`` may be any subset of a
+    matrix's rows (the event-driven simulator passes only the rows of
+    currently-active flows); flows with no rows get rate 0.  ``weights``
+    is always indexed by global flow id, so a rows subset composes with
+    it unchanged.  Summation order matters for bit-identity: NumPy's
+    ``bincount`` accumulates in row order, so any two solvers that feed a
+    link the same rows in the same ascending order produce bitwise-equal
+    per-link sums — the invariant the incremental/full equivalence gate
+    rests on.
+
+    This single-level solver is the *static* allocator
+    (:func:`congestion_report` and the single-phase fast path).  The
+    event loop instead uses the component-decomposed
+    :func:`_multi_max_min_rates`: one shared scalar level couples every
+    component's float rounding (each round's step is the min over *all*
+    links), whereas per-component levels make disjoint subproblems price
+    independently — the property that lets an incremental solver reuse
+    untouched components' rates bit-for-bit.  The two differ only in
+    float rounding (same fixed point, different summation partitions).
     """
     rate = np.zeros(nflows)
     if nflows == 0 or mem_f.size == 0:
@@ -309,6 +362,290 @@ def _max_min_rates_arrays(
         last = np.unique(mem_f)
         rate[last] = level if weights is None else level * weights[last]
     return rate
+
+
+# -- component-decomposed epoch allocation (incremental event loop) ----------
+
+
+def _label_components(
+    mem_f: np.ndarray, mem_l: np.ndarray, nflows: int, nlinks: int
+) -> Tuple[np.ndarray, int]:
+    """Connected components of the flow x link membership rows.
+
+    Two flows are in the same component when they are coupled through a
+    chain of shared *directed* links — exactly the transitive "affected
+    frontier" of the incremental allocator: a rate change can only ever
+    propagate along shared links, so components are the unit of re-solve.
+    Labels spread by min-label propagation (scatter-min flow -> link ->
+    flow until a fixed point, ``O(diameter)`` vectorized passes).
+
+    Returns ``(comp, ncomp)`` where ``comp`` is a full ``(nflows,)``
+    array of compact component ids in ``[0, ncomp)`` (``-1`` for flows
+    with no rows present).  Compact ids are ordered by each component's
+    minimum flow id, so the labeling is a pure function of the row set.
+    """
+    comp = np.full(nflows, -1, dtype=np.int64)
+    if mem_f.size == 0:
+        return comp, 0
+    sentinel = np.iinfo(np.int64).max
+    flow_lab = np.full(nflows, sentinel, dtype=np.int64)
+    present = np.unique(mem_f)
+    flow_lab[present] = present
+    link_lab = np.full(nlinks, sentinel, dtype=np.int64)
+    while True:
+        np.minimum.at(link_lab, mem_l, flow_lab[mem_f])
+        prev = flow_lab[present].copy()
+        np.minimum.at(flow_lab, mem_f, link_lab[mem_l])
+        if np.array_equal(flow_lab[present], prev):
+            break
+    uniq, inv = np.unique(flow_lab[present], return_inverse=True)
+    comp[present] = inv
+    return comp, int(uniq.size)
+
+
+def _multi_max_min_rates(
+    mem_f: np.ndarray,
+    mem_l: np.ndarray,
+    capacity_gbps: np.ndarray,
+    nflows: int,
+    nlinks: int,
+    comp_f: np.ndarray,
+    ncomp: int,
+    weights: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Per-component weighted max-min over membership rows (the epoch solver).
+
+    Runs :func:`_max_min_rates_arrays`'s progressive filling on every
+    connected component *simultaneously*, each with its own level
+    accumulator: per round, each component's unfrozen flows rise by that
+    component's own min share (a segment-min over its links), its links'
+    residuals drop by exactly that step, and its newly saturated links
+    freeze their flows at the component level.  Because every operation
+    is elementwise per link / per component, a component's float
+    trajectory is *independent of which other components are present in
+    the call* — solving the full active set and solving any union of
+    whole components give bitwise-identical rates for those components.
+
+    That locality is the whole correctness argument for the incremental
+    event loop (the "frontier re-freeze" argument): an arrival/completion
+    changes the active-flow sets of the links on the affected flows'
+    paths only; components not sharing any of those links keep an
+    identical row multiset, and since this solver is a pure function of a
+    component's rows (in ascending row order — ``bincount`` sums in row
+    order), their previous epoch's rates ARE this epoch's from-scratch
+    answer, bit for bit.  Only the dirtied components (changed links plus
+    everything transitively attached — after re-labeling, since removals
+    can split a component and arrivals can merge several) need re-solving.
+
+    ``comp_f``/``ncomp`` come from :func:`_label_components` on the same
+    rows.  Flows with no rows get rate 0.
+    """
+    rate = np.zeros(nflows)
+    if nflows == 0 or mem_f.size == 0:
+        return rate
+    _check_weights(weights, nflows)
+    resid = capacity_gbps.astype(np.float64).copy()
+    level = np.zeros(ncomp)
+    # link -> component (consistent across a component's rows by definition;
+    # links never change component within one solve)
+    comp_l = np.full(nlinks, -1, dtype=np.int64)
+    comp_l[mem_l] = comp_f[mem_f]
+    for _ in range(nlinks + 1):
+        if mem_f.size == 0:
+            break
+        if weights is None:
+            n_l = np.bincount(mem_l, minlength=nlinks)
+        else:
+            n_l = np.bincount(mem_l, weights=weights[mem_f], minlength=nlinks)
+        has = np.nonzero(n_l > 0)[0]
+        if has.size == 0:
+            break
+        share = np.full(nlinks, np.inf)
+        share[has] = np.maximum(resid[has], 0.0) / n_l[has]
+        step_c = np.full(ncomp, np.inf)
+        np.minimum.at(step_c, comp_l[has], share[has])
+        act = np.isfinite(step_c)
+        if not act.any():
+            break
+        level[act] += step_c[act]
+        step_l = np.zeros(nlinks)
+        step_l[has] = step_c[comp_l[has]]
+        resid -= step_l * n_l
+        saturated = np.zeros(nlinks, dtype=bool)
+        saturated[has] = share[has] <= step_l[has] * (1.0 + _SATURATION_RTOL)
+        newly = np.unique(mem_f[saturated[mem_l]])
+        if newly.size:
+            lv = level[comp_f[newly]]
+            rate[newly] = lv if weights is None else lv * weights[newly]
+            keep = ~np.isin(mem_f, newly)
+            mem_f, mem_l = mem_f[keep], mem_l[keep]
+    if mem_f.size:  # numerical stragglers: freeze at the component level
+        last = np.unique(mem_f)
+        lv = level[comp_f[last]]
+        rate[last] = lv if weights is None else lv * weights[last]
+    return rate
+
+
+class _FullEpochAllocator:
+    """From-scratch per-epoch oracle: relabel + re-solve every component.
+
+    The reference implementation the incremental allocator is gated
+    byte-identical against (``simulate_schedule(..., incremental=False)``
+    and the ``bench_scenarios.py`` SCALED64 speedup gate's slow side):
+    each epoch it recomputes the component partition of the full active
+    row set and water-fills all components with
+    :func:`_multi_max_min_rates`, ``O(active memberships)`` per event
+    with no state carried across epochs.
+    """
+
+    def __init__(self, matrix: LinkLoadMatrix, weights: Optional[np.ndarray]):
+        self._mem_f = matrix.mem_flow
+        self._mem_l = matrix.mem_link
+        self._caps = matrix.capacity_gbps
+        self._nflows = matrix.num_flows
+        self._nlinks = len(matrix.links)
+        self._weights = weights
+        self.rates = np.zeros(self._nflows)
+        self.peak = np.zeros(self._nlinks)
+
+    def update(
+        self, active: np.ndarray, added: np.ndarray, removed: np.ndarray
+    ) -> None:
+        rows = active[self._mem_f]
+        rf, rl = self._mem_f[rows], self._mem_l[rows]
+        comp_f, ncomp = _label_components(rf, rl, self._nflows, self._nlinks)
+        self.rates = _multi_max_min_rates(
+            rf, rl, self._caps, self._nflows, self._nlinks, comp_f, ncomp,
+            self._weights,
+        )
+        thr = np.bincount(rl, weights=self.rates[rf], minlength=self._nlinks)
+        np.maximum(self.peak, thr, out=self.peak)
+
+
+class _IncrementalAllocator:
+    """Warm-started epoch allocator: re-freeze only the affected frontier.
+
+    Maintains across allocation epochs: the component id of every active
+    flow and link, each component's member list, every flow's solved
+    rate, and every link's summed throughput.  On an event batch
+    (``added`` flows entering at a phase start / ``removed`` flows whose
+    transfers drained):
+
+    1. the *dirty* component set = the components of every removed flow
+       plus every component owning a link that an added flow's path
+       touches — exactly the links whose active-flow sets changed, plus
+       everything transitively attached through shared links;
+    2. dirty members and arrivals are re-labeled from scratch
+       (:func:`_label_components` on their rows only — removals can split
+       a component, arrivals can merge several);
+    3. :func:`_multi_max_min_rates` re-solves just those rows; everyone
+       else keeps the previous epoch's rates, which are bitwise what a
+       full re-solve would return for them (see the locality argument on
+       :func:`_multi_max_min_rates`);
+    4. per-link throughput / the running peak are patched on the dirtied
+       links only (a clean link's stored sum was computed from the same
+       rows and rates a recomputation would use).
+
+    Per event this costs ``O(dirty memberships + nflows)`` instead of the
+    oracle's ``O(levels x active memberships)`` — on workloads whose DC
+    pairs are independent (the common geo case: per-pair WAN paths share
+    no directed link) an event re-solves one pair's flows instead of
+    100k.  Gated byte-identical to :class:`_FullEpochAllocator` in
+    ``tests/test_incremental_maxmin.py`` (random DAGs) and
+    ``benchmarks/bench_scenarios.py`` (library scenarios + SCALED64).
+    """
+
+    def __init__(self, matrix: LinkLoadMatrix, weights: Optional[np.ndarray]):
+        self._mem_f = matrix.mem_flow
+        self._mem_l = matrix.mem_link
+        self._caps = matrix.capacity_gbps
+        self._nflows = matrix.num_flows
+        self._nlinks = len(matrix.links)
+        self._weights = weights
+        self._hops = matrix.hops_per_flow
+        self._row_ptr = np.zeros(self._nflows + 1, dtype=np.int64)
+        np.cumsum(self._hops, out=self._row_ptr[1:])
+        self._comp_of_flow = np.full(self._nflows, -1, dtype=np.int64)
+        self._link_comp = np.full(self._nlinks, -1, dtype=np.int64)
+        self._members: Dict[int, np.ndarray] = {}
+        self._next_label = 0
+        self._thr = np.zeros(self._nlinks)
+        self.rates = np.zeros(self._nflows)
+        self.peak = np.zeros(self._nlinks)
+
+    def _rows_of(self, flows: np.ndarray) -> np.ndarray:
+        """Row indices of ``flows`` (ascending flow ids -> ascending rows)."""
+        counts = self._hops[flows]
+        total = int(counts.sum())
+        if total == 0:
+            return np.empty(0, dtype=np.int64)
+        starts = np.repeat(self._row_ptr[flows], counts)
+        ends = np.cumsum(counts)
+        offsets = np.arange(total, dtype=np.int64) - np.repeat(
+            ends - counts, counts
+        )
+        return starts + offsets
+
+    def update(
+        self, active: np.ndarray, added: np.ndarray, removed: np.ndarray
+    ) -> None:
+        dirty: List[int] = []
+        if removed.size:
+            dirty.extend(
+                int(c) for c in np.unique(self._comp_of_flow[removed])
+            )
+            self._comp_of_flow[removed] = -1
+            self.rates[removed] = 0.0
+        if added.size:
+            added = np.unique(added)  # sorted, for the ragged row gather
+            touched = self._link_comp[self._mem_l[self._rows_of(added)]]
+            touched = np.unique(touched[touched >= 0])
+            dirty.extend(int(c) for c in touched if int(c) not in dirty)
+        stale_members = [self._members.pop(c) for c in dirty if c in self._members]
+        parts = stale_members + ([added] if added.size else [])
+        if not parts:
+            return
+        cand = np.unique(np.concatenate(parts))
+        if removed.size:
+            affected = cand[~np.isin(cand, removed)]
+        else:
+            affected = cand
+        # links whose active-flow sets changed: everything on the paths of
+        # the re-solved + departed flows.  Reset, then repatch below.
+        reset = affected if not removed.size else np.unique(
+            np.concatenate([affected, np.asarray(removed, dtype=np.int64)])
+        )
+        old_links = np.unique(self._mem_l[self._rows_of(reset)])
+        self._link_comp[old_links] = -1
+        self._thr[old_links] = 0.0
+        if affected.size:
+            rows = self._rows_of(affected)
+            rf, rl = self._mem_f[rows], self._mem_l[rows]
+            comp_f, ncomp = _label_components(
+                rf, rl, self._nflows, self._nlinks
+            )
+            rates = _multi_max_min_rates(
+                rf, rl, self._caps, self._nflows, self._nlinks, comp_f, ncomp,
+                self._weights,
+            )
+            self.rates[affected] = rates[affected]
+            self._comp_of_flow[affected] = comp_f[affected] + self._next_label
+            order = np.argsort(comp_f[affected], kind="stable")
+            grouped = affected[order]
+            labels = comp_f[affected][order]
+            bounds = np.nonzero(np.diff(labels))[0] + 1
+            for cid, grp in zip(
+                labels[np.concatenate([[0], bounds])] if labels.size else (),
+                np.split(grouped, bounds),
+            ):
+                self._members[int(cid) + self._next_label] = grp
+            self._next_label += ncomp
+            self._link_comp[rl] = self._comp_of_flow[rf]
+            thr = np.bincount(rl, weights=self.rates[rf], minlength=self._nlinks)
+            self._thr[old_links] = thr[old_links]
+        self.peak[old_links] = np.maximum(
+            self.peak[old_links], self._thr[old_links]
+        )
 
 
 def _propagation_ms(matrix: LinkLoadMatrix) -> np.ndarray:
@@ -390,6 +727,20 @@ def congestion_report(
 
     ``weights`` (e.g. :func:`ecmp_flow_weights`) selects the weighted
     allocation; ``None`` is the classic unweighted model.
+
+    This is the repo's *static* allocator: one allocation epoch, every
+    live flow present from t=0 to its own completion, solved by the
+    single-level :func:`_max_min_rates_arrays` water-filling.  It is the
+    exact model behind ``sync_cost``-style single-collective pricing and
+    the single-phase fast path of :func:`simulate_schedule` — those
+    numbers are pinned bit-for-bit across PRs, which is why this function
+    deliberately does NOT share the event loop's component-decomposed
+    solver (:func:`_multi_max_min_rates`): the two reach the same
+    weighted max-min fixed point but partition their float summations
+    differently (one global level accumulator vs one per component), and
+    repartitioning would move the pinned values by ulps.  Anything that
+    needs rates *changing over time* — phases arriving, flows draining —
+    belongs in :func:`simulate_schedule` instead.
     """
     nb = np.asarray(list(nbytes), dtype=np.float64)
     if nb.size != matrix.num_flows:
@@ -463,6 +814,23 @@ def route_and_analyze(
 #: single event (merges the +/-1-byte stragglers of exact ``split_bytes``
 #: chunking, which would otherwise each trigger a nanosecond-apart re-solve).
 _DRAIN_GROUP_RTOL = 1e-8
+
+#: Default allocator for :func:`simulate_schedule`'s event loop.  ``True``
+#: selects the warm-started :class:`_IncrementalAllocator`; ``False`` the
+#: from-scratch :class:`_FullEpochAllocator` oracle.  Flip it (or pass
+#: ``simulate_schedule(..., incremental=...)``) to A/B the two — they are
+#: gated byte-identical, so everything downstream must be unchanged.
+INCREMENTAL_EVENT_LOOP = True
+
+
+def _event_budget(nflows: int, nphases: int) -> int:
+    """Max events :func:`_simulate_events` may process before declaring the
+    simulator stuck.  Every flow contributes at most one arrival and one
+    drain, every phase one start and one completion; the 4x headroom covers
+    drain-group fragmentation.  Separate (and monkeypatchable) so the guard
+    itself can be regression-tested without building a pathological
+    schedule."""
+    return 4 * (nflows + nphases) + 64
 
 
 @dataclass(frozen=True)
@@ -592,6 +960,7 @@ def simulate_schedule(
     check_reachability=None,
     reset_counters: bool = True,
     ecmp_weighted: bool = False,
+    incremental: Optional[bool] = None,
 ) -> ScheduleReport:
     """Event-driven time-varying max-min simulation of a phased schedule.
 
@@ -624,14 +993,17 @@ def simulate_schedule(
     collision only between phases the DAG allows in flight together —
     serialized phases re-using the same slots are not down-weighted
     against each other.
+
+    ``incremental`` selects the multi-phase epoch allocator:
+    ``True`` -> :class:`_IncrementalAllocator` (warm-started, the default),
+    ``False`` -> :class:`_FullEpochAllocator` (from-scratch oracle),
+    ``None`` -> the module flag :data:`INCREMENTAL_EVENT_LOOP`.  The two are
+    byte-identical by construction (see :func:`_multi_max_min_rates`), so
+    this knob only trades wall-clock, never results.
     """
     phases = schedule.phases
     flows = schedule.all_flows()
-    slices: List[Tuple[int, int]] = []
-    lo = 0
-    for p in phases:
-        slices.append((lo, lo + len(p.flows)))
-        lo += len(p.flows)
+    slices = schedule.flow_slices()
     if reset_counters:
         fabric.reset_counters()
     _, paths = fabric.route_flows_with_paths(
@@ -686,7 +1058,12 @@ def simulate_schedule(
             max_slot_occ=rep.max_slot_occ,
         )
 
-    return _simulate_events(schedule, matrix, nb, slices, link_total, weights)
+    if incremental is None:
+        incremental = INCREMENTAL_EVENT_LOOP
+    return _simulate_events(
+        schedule, matrix, nb, slices, link_total, weights,
+        incremental=incremental,
+    )
 
 
 def _simulate_events(
@@ -696,14 +1073,13 @@ def _simulate_events(
     slices: List[Tuple[int, int]],
     link_total: np.ndarray,
     weights: Optional[np.ndarray] = None,
+    incremental: bool = True,
 ) -> ScheduleReport:
     import heapq
 
     phases = schedule.phases
     nphases = len(phases)
     nflows = int(nb.size)
-    nlinks = len(matrix.links)
-    mem_f, mem_l = matrix.mem_flow, matrix.mem_link
     prop_ms = _propagation_ms(matrix)
     name_to_idx = {p.name: i for i, p in enumerate(phases)}
     dependents: List[List[int]] = [[] for _ in range(nphases)]
@@ -724,8 +1100,14 @@ def _simulate_events(
     flow_complete = np.zeros(nflows)
     phase_start = np.zeros(nphases)
     phase_end = np.zeros(nphases)
-    peak_thr = np.zeros(nlinks)
-    rates = np.zeros(nflows)
+    alloc_cls = _IncrementalAllocator if incremental else _FullEpochAllocator
+    alloc = alloc_cls(matrix, weights)
+    rates = alloc.rates
+    # flows that joined/left the active set since the last allocation epoch —
+    # handed to the allocator as one batch at the next stale re-solve
+    pend_add: List[np.ndarray] = []
+    pend_rm: List[np.ndarray] = []
+    _empty = np.empty(0, dtype=np.int64)
 
     _START, _COMPLETE = 0, 1
     heap: List[Tuple[float, int, int, int]] = []
@@ -746,7 +1128,7 @@ def _simulate_events(
     t = 0.0
     stale = True
     guard = 0
-    max_events = 4 * (nflows + nphases) + 64
+    max_events = _event_budget(nflows, nphases)
     while heap or bool(active.any()):
         guard += 1
         if guard > max_events:
@@ -756,15 +1138,12 @@ def _simulate_events(
             )
         act_idx = np.nonzero(active)[0]
         if stale and act_idx.size:
-            rows = active[mem_f]
-            rates = _max_min_rates_arrays(
-                mem_f[rows], mem_l[rows], matrix.capacity_gbps, nflows, nlinks,
-                weights,
-            )
-            thr = np.bincount(
-                mem_l[rows], weights=rates[mem_f[rows]], minlength=nlinks
-            )
-            np.maximum(peak_thr, thr, out=peak_thr)
+            added = np.concatenate(pend_add) if pend_add else _empty
+            removed = np.concatenate(pend_rm) if pend_rm else _empty
+            pend_add.clear()
+            pend_rm.clear()
+            alloc.update(active, added, removed)
+            rates = alloc.rates
             stale = False
         if act_idx.size:
             with np.errstate(divide="ignore", invalid="ignore"):
@@ -799,6 +1178,7 @@ def _simulate_events(
                     live = plo + np.nonzero(nb[plo:phi] > 0)[0]
                     if live.size:
                         active[live] = True
+                        pend_add.append(live)
                         stale = True
                     if undrained[i] == 0:
                         heapq.heappush(
@@ -825,6 +1205,7 @@ def _simulate_events(
         active[group] = False
         flow_drain[group] = t
         flow_complete[group] = t + prop_ms[group] / 1e3
+        pend_rm.append(group)
         stale = True
         undrained -= np.bincount(flow_phase[group], minlength=nphases)
         for i in np.unique(flow_phase[group]).tolist():
@@ -855,7 +1236,7 @@ def _simulate_events(
         links=matrix.links,
         capacity_gbps=matrix.capacity_gbps,
         link_total_bytes=link_total,
-        peak_throughput_gbps=peak_thr,
+        peak_throughput_gbps=alloc.peak,
         is_wan=matrix.is_wan,
         weights=weights,
         max_slot_occ=(

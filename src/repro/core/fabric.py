@@ -1009,9 +1009,11 @@ class Fabric:
     # -- data plane ---------------------------------------------------------
 
     def vtep_ip(self, leaf: str) -> str:
-        # loopback VTEP addressing mirrors the paper (1.1.10.1 style)
-        dc = int(leaf[1])
-        idx = int(leaf[3:])
+        # loopback VTEP addressing mirrors the paper (1.1.10.1 style);
+        # split on the 'l' separator of d{dc}l{idx} rather than slicing at
+        # fixed offsets so multi-digit DC ids (SCALED64) parse too
+        dc_s, idx_s = leaf[1:].split("l", 1)
+        dc, idx = int(dc_s), int(idx_s)
         return f"{dc}.{dc}.10.{idx}"
 
     def send(

@@ -150,6 +150,24 @@ class CollectiveSchedule:
         """Every flow of every phase, in topological phase order."""
         return [f for p in self.phases for f in p.flows]
 
+    def flow_slices(self) -> List[Tuple[int, int]]:
+        """Per-phase ``(lo, hi)`` index ranges into :meth:`all_flows`.
+
+        The epoch bookkeeping contract with the event-driven simulator
+        (:func:`repro.core.congestion.simulate_schedule`): phase ``i``'s
+        flows occupy the contiguous global-flow-id block
+        ``flow_slices()[i]``, in the schedule's topological phase order.
+        The simulator's per-flow report arrays, its allocator's CSR row
+        blocks, and :class:`~repro.core.congestion.PhaseTiming`'s
+        ``flow_lo:flow_hi`` all index by this layout.
+        """
+        slices: List[Tuple[int, int]] = []
+        lo = 0
+        for p in self.phases:
+            slices.append((lo, lo + len(p.flows)))
+            lo += len(p.flows)
+        return slices
+
     def concurrency_matrix(self) -> "np.ndarray":
         """(P, P) bool: may phases i and j ever be in flight together?
 

@@ -438,6 +438,7 @@ class WanTimingModel:
         check_reachability=None,
         reset_counters: bool = True,
         ecmp_weighted: bool = False,
+        incremental=None,
     ):
         """Contended timing for a phased :class:`CollectiveSchedule`.
 
@@ -451,6 +452,10 @@ class WanTimingModel:
         and per-flow timelines (``.seconds`` is the makespan).  For a
         single-phase schedule this is exactly
         :meth:`contended_transfer_time` on its flow set.
+
+        ``incremental`` passes through to the simulator's epoch-allocator
+        choice (warm-started vs from-scratch oracle — byte-identical, see
+        ``simulate_schedule``); ``None`` defers to the module default.
         """
         from .congestion import simulate_schedule  # congestion imports wan
 
@@ -461,4 +466,5 @@ class WanTimingModel:
             check_reachability=check_reachability,
             reset_counters=reset_counters,
             ecmp_weighted=ecmp_weighted,
+            incremental=incremental,
         )

@@ -2,7 +2,8 @@
 
 The test suite uses a small slice of hypothesis: ``@given`` over
 ``st.integers`` / ``st.floats`` / ``st.lists`` / ``st.sampled_from`` /
-``st.booleans`` / ``st.tuples`` / ``st.composite`` plus
+``st.booleans`` / ``st.tuples`` / ``st.just`` / ``st.one_of`` /
+``st.composite`` plus
 ``@settings(max_examples=..., deadline=...)``.  When the real package is
 not installed, :func:`install` registers this module under
 ``sys.modules["hypothesis"]`` so the test modules import and *run* instead
@@ -117,6 +118,31 @@ class _Tuples(SearchStrategy):
         return tuple(s.example(rng, index) for s in self.strategies)
 
 
+class _Just(SearchStrategy):
+    def __init__(self, value: Any):
+        self.value = value
+
+    def example(self, rng: random.Random, index: int) -> Any:
+        return self.value
+
+
+class _OneOf(SearchStrategy):
+    """Uniform choice between branch strategies; boundary indices pin the
+    first/last branch (where hypothesis's shrinker tends to land)."""
+
+    def __init__(self, *strategies: SearchStrategy):
+        self.strategies = strategies
+
+    def example(self, rng: random.Random, index: int) -> Any:
+        if index == 0:
+            branch = self.strategies[0]
+        elif index == 1:
+            branch = self.strategies[-1]
+        else:
+            branch = rng.choice(self.strategies)
+        return branch.example(rng, index)
+
+
 def integers(min_value: Optional[int] = None, max_value: Optional[int] = None) -> _Integers:
     return _Integers(min_value, max_value)
 
@@ -139,6 +165,14 @@ def booleans() -> _Booleans:
 
 def tuples(*strategies: SearchStrategy) -> _Tuples:
     return _Tuples(*strategies)
+
+
+def just(value: Any) -> _Just:
+    return _Just(value)
+
+
+def one_of(*strategies: SearchStrategy) -> _OneOf:
+    return _OneOf(*strategies)
 
 
 class _CompositeStrategy(SearchStrategy):
@@ -236,6 +270,8 @@ def install() -> None:
         "lists",
         "booleans",
         "tuples",
+        "just",
+        "one_of",
         "composite",
     ):
         setattr(strat, name, globals()[name])

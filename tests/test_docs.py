@@ -1,0 +1,99 @@
+"""Docs tree + link-checker tests (ISSUE 9 satellites).
+
+The CI docs job runs ``tools/check_links.py`` over the README and
+``docs/``; these tests pin the same contract in tier-1 (the docs exist,
+are linked from the README, and contain no dead intra-repo links) and
+unit-test the checker's slug/anchor logic so a checker regression cannot
+silently let dead links through.
+"""
+
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO / "tools"))
+
+import check_links  # noqa: E402
+
+
+class TestDocsTree:
+    def test_docs_exist(self):
+        assert (REPO / "docs" / "ARCHITECTURE.md").is_file()
+        assert (REPO / "docs" / "PERFORMANCE.md").is_file()
+
+    def test_readme_links_both_docs(self):
+        readme = (REPO / "README.md").read_text()
+        assert "docs/ARCHITECTURE.md" in readme
+        assert "docs/PERFORMANCE.md" in readme
+
+    def test_no_dead_links_in_readme_and_docs(self):
+        """Exactly what the CI docs job runs."""
+        proc = subprocess.run(
+            [sys.executable, "tools/check_links.py", "README.md", "docs"],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+
+class TestSlugLogic:
+    @pytest.mark.parametrize(
+        "heading,slug",
+        [
+            ("Performance", "performance"),
+            ("The byte-identity-gate convention", "the-byte-identity-gate-convention"),
+            ("Reading and refreshing bench baselines", "reading-and-refreshing-bench-baselines"),
+            ("`compare.py` metric-suffix direction rules", "comparepy-metric-suffix-direction-rules"),
+            ("Allocator complexity, before and after", "allocator-complexity-before-and-after"),
+        ],
+    )
+    def test_github_slug(self, heading, slug):
+        assert check_links.github_slug(heading) == slug
+
+    def test_duplicate_headings_get_suffixes(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("# A\n\n## Same\n\n## Same\n")
+        assert check_links.heading_anchors(md) == {"a", "same", "same-1"}
+
+    def test_fenced_code_is_ignored(self, tmp_path):
+        md = tmp_path / "x.md"
+        md.write_text("# Real\n\n```\n# not a heading\n[x](nope.md)\n```\n")
+        assert check_links.heading_anchors(md) == {"real"}
+        assert list(check_links.iter_links(md)) == []
+
+
+class TestChecker:
+    def test_dead_path_reported(self, tmp_path):
+        md = tmp_path / "a.md"
+        md.write_text("[x](missing.md)\n")
+        errors = check_links.check_file(md, tmp_path)
+        assert len(errors) == 1 and "no such file" in errors[0]
+
+    def test_dead_anchor_reported(self, tmp_path):
+        (tmp_path / "b.md").write_text("# Only Heading\n")
+        md = tmp_path / "a.md"
+        md.write_text("[x](b.md#wrong-anchor)\n")
+        errors = check_links.check_file(md, tmp_path)
+        assert len(errors) == 1 and "wrong-anchor" in errors[0]
+
+    def test_good_links_pass(self, tmp_path):
+        (tmp_path / "b.md").write_text("# Target Heading\n")
+        md = tmp_path / "a.md"
+        md.write_text(
+            "[ok](b.md)\n[ok2](b.md#target-heading)\n"
+            "[self](#local)\n\n# Local\n"
+            "[ext](https://example.com/404)\n"
+        )
+        assert check_links.check_file(md, tmp_path) == []
+
+    def test_escaping_repo_root_reported(self, tmp_path):
+        sub = tmp_path / "docs"
+        sub.mkdir()
+        md = sub / "a.md"
+        md.write_text("[x](../../etc/passwd)\n")
+        errors = check_links.check_file(md, sub)
+        assert len(errors) == 1 and "escapes" in errors[0]

@@ -1,0 +1,355 @@
+"""Incremental event-loop allocator tests (ISSUE 9 tentpole).
+
+Four contracts:
+
+* **Component labeling** — :func:`_label_components` partitions the
+  flow x link membership rows into the transitive shared-link closure
+  (the "affected frontier" unit of the incremental re-solve).
+* **Component locality** — :func:`_multi_max_min_rates` solves every
+  component independently: solving any union of whole components is
+  bitwise the same as solving each alone, and the per-component fixed
+  point matches the single-level :func:`_max_min_rates_arrays` reference
+  within float tolerance (same water level, different summation order).
+* **Byte-identity** — the property test the ISSUE names: random
+  multi-phase DAGs (zero-byte flows included, ``ecmp_weighted`` on and
+  off) simulated with the warm-started :class:`_IncrementalAllocator`
+  produce *exactly* the timelines, rates history, and per-link peaks of
+  the from-scratch :class:`_FullEpochAllocator` oracle.
+* **Event-budget guard** — the stuck-simulator guard still trips: with a
+  monkeypatched :func:`_event_budget` a legitimate multi-phase schedule
+  must raise the ``event budget exceeded`` RuntimeError.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import congestion as cg
+from repro.core.congestion import (
+    _FullEpochAllocator,
+    _IncrementalAllocator,
+    _label_components,
+    _max_min_rates_arrays,
+    _multi_max_min_rates,
+    simulate_schedule,
+)
+from repro.core.fabric import Fabric, FabricConfig
+from repro.core.flows import Flow
+from repro.core.ports import QueuePair
+from repro.core.schedule import CollectiveSchedule, Phase
+from repro.core.wan import Netem
+
+
+def _flow(src, dst, nbytes=1_000_000, qpn=0x11, port=50_000):
+    return Flow(src, dst, nbytes, QueuePair(0, qpn), port)
+
+
+# -- component labeling ------------------------------------------------------
+
+
+class TestLabelComponents:
+    def test_disjoint_links_disjoint_components(self):
+        # flows 0,1 share link 0; flow 2 alone on link 1
+        mem_f = np.array([0, 1, 2])
+        mem_l = np.array([0, 0, 1])
+        comp, ncomp = _label_components(mem_f, mem_l, 3, 2)
+        assert ncomp == 2
+        assert comp[0] == comp[1] != comp[2]
+
+    def test_transitive_merge_through_shared_link(self):
+        # 0-1 share link 0, 1-2 share link 1 -> all one component
+        mem_f = np.array([0, 1, 1, 2])
+        mem_l = np.array([0, 0, 1, 1])
+        comp, ncomp = _label_components(mem_f, mem_l, 3, 2)
+        assert ncomp == 1
+        assert len(set(comp.tolist())) == 1
+
+    def test_absent_flows_get_minus_one(self):
+        mem_f = np.array([1])
+        mem_l = np.array([0])
+        comp, ncomp = _label_components(mem_f, mem_l, 3, 1)
+        assert ncomp == 1
+        assert comp[0] == -1 and comp[2] == -1 and comp[1] == 0
+
+    def test_empty_rows(self):
+        comp, ncomp = _label_components(
+            np.empty(0, dtype=np.int64), np.empty(0, dtype=np.int64), 4, 3
+        )
+        assert ncomp == 0
+        assert (comp == -1).all()
+
+    def test_long_chain_converges(self):
+        # flow i shares link i with flow i+1: one chain component whose
+        # label needs O(chain length) propagation passes
+        n = 40
+        mem_f = np.repeat(np.arange(n), 2)[1:-1]
+        mem_l = np.repeat(np.arange(n - 1), 2)
+        comp, ncomp = _label_components(mem_f, mem_l, n, n - 1)
+        assert ncomp == 1
+        assert len(set(comp.tolist())) == 1
+
+
+# -- component locality of the multi solver ----------------------------------
+
+
+@st.composite
+def _random_matrix(draw):
+    nflows = draw(st.integers(min_value=1, max_value=12))
+    nlinks = draw(st.integers(min_value=1, max_value=8))
+    rows = draw(
+        st.lists(
+            st.tuples(
+                st.integers(min_value=0, max_value=nflows - 1),
+                st.integers(min_value=0, max_value=nlinks - 1),
+            ),
+            min_size=1,
+            max_size=40,
+        )
+    )
+    caps = draw(
+        st.lists(
+            st.floats(min_value=0.1, max_value=100.0),
+            min_size=nlinks,
+            max_size=nlinks,
+        )
+    )
+    # flow-major ascending rows, deduplicated — the CSR layout invariant
+    uniq = sorted(set(rows))
+    mem_f = np.array([r[0] for r in uniq], dtype=np.int64)
+    mem_l = np.array([r[1] for r in uniq], dtype=np.int64)
+    weighted = draw(st.booleans())
+    weights = None
+    if weighted:
+        weights = np.array(
+            draw(
+                st.lists(
+                    st.floats(min_value=0.1, max_value=1.0),
+                    min_size=nflows,
+                    max_size=nflows,
+                )
+            )
+        )
+    return mem_f, mem_l, np.array(caps), nflows, nlinks, weights
+
+
+class TestMultiSolverLocality:
+    @settings(max_examples=80, deadline=None)
+    @given(_random_matrix())
+    def test_union_of_components_equals_solo_solves(self, m):
+        """The frontier re-freeze argument, as executable property: a
+        component's rates are a pure function of its own rows."""
+        mem_f, mem_l, caps, nflows, nlinks, weights = m
+        comp, ncomp = _label_components(mem_f, mem_l, nflows, nlinks)
+        joint = _multi_max_min_rates(
+            mem_f, mem_l, caps, nflows, nlinks, comp, ncomp, weights
+        )
+        for c in range(ncomp):
+            sel = comp[mem_f] == c
+            c2, n2 = _label_components(mem_f[sel], mem_l[sel], nflows, nlinks)
+            solo = _multi_max_min_rates(
+                mem_f[sel], mem_l[sel], caps, nflows, nlinks, c2, n2, weights
+            )
+            members = np.nonzero(comp == c)[0]
+            assert np.array_equal(solo[members], joint[members])
+
+    @settings(max_examples=80, deadline=None)
+    @given(_random_matrix())
+    def test_same_fixed_point_as_single_level_reference(self, m):
+        """Component-decomposed and global water-filling reach the same
+        max-min fixed point (they differ only in summation partitions)."""
+        mem_f, mem_l, caps, nflows, nlinks, weights = m
+        comp, ncomp = _label_components(mem_f, mem_l, nflows, nlinks)
+        multi = _multi_max_min_rates(
+            mem_f, mem_l, caps, nflows, nlinks, comp, ncomp, weights
+        )
+        ref = _max_min_rates_arrays(
+            mem_f.copy(), mem_l.copy(), caps, nflows, nlinks, weights
+        )
+        np.testing.assert_allclose(multi, ref, rtol=1e-9, atol=1e-12)
+
+    def test_single_component_is_bitwise_the_reference(self):
+        """With one component the multi solver IS the reference solver."""
+        rng = np.random.default_rng(7)
+        nflows, nlinks = 20, 1  # everything shares the one link
+        mem_f = np.arange(nflows, dtype=np.int64)
+        mem_l = np.zeros(nflows, dtype=np.int64)
+        caps = rng.uniform(0.5, 2.0, size=nlinks)
+        w = rng.uniform(0.1, 1.0, size=nflows)
+        comp, ncomp = _label_components(mem_f, mem_l, nflows, nlinks)
+        assert ncomp == 1
+        multi = _multi_max_min_rates(
+            mem_f, mem_l, caps, nflows, nlinks, comp, ncomp, w
+        )
+        ref = _max_min_rates_arrays(
+            mem_f.copy(), mem_l.copy(), caps, nflows, nlinks, w
+        )
+        assert np.array_equal(multi, ref)
+
+
+# -- incremental == full on random multi-phase DAGs --------------------------
+
+
+def _fabric():
+    return Fabric(
+        FabricConfig(
+            num_dcs=3,
+            spines_per_dc=2,
+            leaves_per_dc=2,
+            hosts_per_leaf=((2, 2), (2, 1), (2, 2)),
+        )
+    )
+
+
+#: host names are a pure function of FabricConfig — safe as a strategy const
+_HOSTS = tuple(_fabric().hosts)
+
+
+@st.composite
+def _random_dag_schedule(draw, hosts=_HOSTS):
+    """A random multi-phase DAG: random flows (zero-byte ones included),
+    random dependencies on earlier phases, offsets, compute times."""
+    nphases = draw(st.integers(min_value=2, max_value=5))
+    phases = []
+    qpn = 0x11
+    for i in range(nphases):
+        nflows = draw(st.integers(min_value=0, max_value=6))
+        flows = []
+        for _ in range(nflows):
+            src = draw(st.sampled_from(hosts))
+            dst = draw(st.sampled_from([h for h in hosts if h != src]))
+            nbytes = draw(
+                st.one_of(
+                    st.just(0),  # zero-byte flows drain instantly
+                    st.integers(min_value=1, max_value=50_000_000),
+                )
+            )
+            flows.append(_flow(src, dst, nbytes, qpn=qpn))
+            qpn += 1
+        deps = ()
+        if i > 0:
+            deps = tuple(
+                f"p{j}"
+                for j in range(i)
+                if draw(st.booleans())
+            )
+        phases.append(
+            Phase(
+                name=f"p{i}",
+                flows=tuple(flows),
+                deps=deps,
+                start_offset_s=draw(
+                    st.sampled_from([0.0, 0.05, 0.5])
+                ),
+                compute_seconds=draw(st.sampled_from([0.0, 0.2])),
+            )
+        )
+    return CollectiveSchedule(name="dag", phases=tuple(phases))
+
+
+class TestIncrementalByteIdentity:
+    @settings(max_examples=40, deadline=None)
+    @given(_random_dag_schedule())
+    def test_random_dag_incremental_equals_full(self, sched):
+        fabric = _fabric()
+        netem = Netem(fabric)
+        for ecmp_weighted in (False, True):
+            inc = simulate_schedule(
+                fabric, netem, sched,
+                ecmp_weighted=ecmp_weighted, incremental=True,
+            )
+            full = simulate_schedule(
+                fabric, netem, sched,
+                ecmp_weighted=ecmp_weighted, incremental=False,
+            )
+            assert np.array_equal(inc.flow_start_s, full.flow_start_s)
+            assert np.array_equal(inc.flow_drain_s, full.flow_drain_s)
+            assert np.array_equal(inc.completion_s, full.completion_s)
+            assert np.array_equal(
+                inc.peak_throughput_gbps, full.peak_throughput_gbps
+            )
+            for a, b in zip(inc.phase_timings, full.phase_timings):
+                assert (a.name, a.start_s, a.end_s) == (
+                    b.name, b.start_s, b.end_s,
+                )
+
+    def test_module_flag_selects_allocator(self, monkeypatch):
+        """``incremental=None`` defers to ``INCREMENTAL_EVENT_LOOP``."""
+        fabric = _fabric()
+        netem = Netem(fabric)
+        hosts = list(fabric.hosts)
+        sched = CollectiveSchedule(
+            name="two",
+            phases=(
+                Phase(name="a", flows=(_flow(hosts[0], hosts[-1], 10_000_000),)),
+                Phase(
+                    name="b",
+                    flows=(_flow(hosts[1], hosts[-2], 20_000_000, qpn=0x22),),
+                ),
+            ),
+        )
+        seen = []
+
+        class SpyInc(_IncrementalAllocator):
+            def __init__(self, *a, **kw):
+                seen.append("inc")
+                super().__init__(*a, **kw)
+
+        class SpyFull(_FullEpochAllocator):
+            def __init__(self, *a, **kw):
+                seen.append("full")
+                super().__init__(*a, **kw)
+
+        monkeypatch.setattr(cg, "_IncrementalAllocator", SpyInc)
+        monkeypatch.setattr(cg, "_FullEpochAllocator", SpyFull)
+        simulate_schedule(fabric, netem, sched)
+        monkeypatch.setattr(cg, "INCREMENTAL_EVENT_LOOP", False)
+        simulate_schedule(fabric, netem, sched)
+        assert seen == ["inc", "full"]
+
+    def test_single_phase_fast_path_ignores_allocators(self):
+        """Single-phase schedules bypass the event loop entirely — the
+        static ``congestion_report`` fast path stays bit-exact regardless
+        of the ``incremental`` knob."""
+        fabric = _fabric()
+        netem = Netem(fabric)
+        hosts = list(fabric.hosts)
+        sched = CollectiveSchedule.single(
+            "one", (_flow(hosts[0], hosts[-1], 10_000_000),)
+        )
+        a = simulate_schedule(fabric, netem, sched, incremental=True)
+        b = simulate_schedule(fabric, netem, sched, incremental=False)
+        assert np.array_equal(a.flow_drain_s, b.flow_drain_s)
+        assert np.array_equal(a.completion_s, b.completion_s)
+        assert np.array_equal(a.peak_throughput_gbps, b.peak_throughput_gbps)
+
+
+# -- event-budget guard ------------------------------------------------------
+
+
+class TestEventBudgetGuard:
+    @pytest.mark.parametrize("incremental", [True, False])
+    def test_guard_trips_when_budget_shrunk(self, monkeypatch, incremental):
+        """The regression the ISSUE pins: the stuck-simulator guard must
+        still trip.  A legitimate schedule with the budget monkeypatched
+        to one event raises rather than spinning."""
+        fabric = _fabric()
+        netem = Netem(fabric)
+        hosts = list(fabric.hosts)
+        sched = CollectiveSchedule(
+            name="stuck",
+            phases=(
+                Phase(name="a", flows=(_flow(hosts[0], hosts[-1], 10_000_000),)),
+                Phase(
+                    name="b",
+                    flows=(_flow(hosts[1], hosts[-2], 20_000_000, qpn=0x22),),
+                    deps=("a",),
+                ),
+            ),
+        )
+        monkeypatch.setattr(cg, "_event_budget", lambda nflows, nphases: 1)
+        with pytest.raises(RuntimeError, match="event budget exceeded"):
+            simulate_schedule(fabric, netem, sched, incremental=incremental)
+
+    def test_budget_formula(self):
+        assert cg._event_budget(10, 3) == 4 * 13 + 64

@@ -1,0 +1,147 @@
+"""Markdown intra-repo link checker (ISSUE 9 docs CI job).
+
+Scans markdown files for ``[text](target)`` links and ``#`` heading
+anchors and fails on dead *intra-repo* references:
+
+* a relative path target that does not exist on disk;
+* a ``path#anchor`` (or same-file ``#anchor``) whose anchor matches no
+  heading in the target file (GitHub-style slugs);
+* external targets (``http://``, ``https://``, ``mailto:``) are ignored
+  — CI must not depend on the network.
+
+Stdlib only.  Usage::
+
+    python tools/check_links.py README.md docs/
+    python tools/check_links.py            # defaults to README.md + docs/
+
+Exit status 0 when every link resolves, 1 otherwise (one line per dead
+link: ``file:line: dead link -> target (reason)``).
+"""
+
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+from typing import Iterable, List, Set, Tuple
+
+# [text](target) — target up to the first unescaped ')'; images too
+_LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_HEADING_RE = re.compile(r"^(#{1,6})\s+(.*?)\s*#*\s*$")
+_CODE_FENCE_RE = re.compile(r"^(```|~~~)")
+_EXTERNAL = ("http://", "https://", "mailto:", "ftp://")
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: lowercase, drop non-word/space/hyphen chars
+    (backticks, punctuation), spaces to hyphens."""
+    text = re.sub(r"[`*_~]", "", heading.strip())
+    text = re.sub(r"[^\w\- ]", "", text.lower())
+    return text.replace(" ", "-")
+
+
+def heading_anchors(md_path: pathlib.Path) -> Set[str]:
+    """All GitHub-style anchors a markdown file defines (duplicate
+    headings get ``-1``, ``-2``, ... suffixes, like GitHub)."""
+    seen: dict = {}
+    anchors: Set[str] = set()
+    in_fence = False
+    for line in md_path.read_text(encoding="utf-8").splitlines():
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        m = _HEADING_RE.match(line)
+        if not m:
+            continue
+        slug = github_slug(m.group(2))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        anchors.add(slug if n == 0 else f"{slug}-{n}")
+    return anchors
+
+
+def iter_links(md_path: pathlib.Path) -> Iterable[Tuple[int, str]]:
+    """(line_number, target) for every markdown link, skipping fenced
+    code blocks and inline code spans."""
+    in_fence = False
+    for lineno, line in enumerate(
+        md_path.read_text(encoding="utf-8").splitlines(), start=1
+    ):
+        if _CODE_FENCE_RE.match(line):
+            in_fence = not in_fence
+            continue
+        if in_fence:
+            continue
+        stripped = re.sub(r"`[^`]*`", "", line)  # inline code spans
+        for m in _LINK_RE.finditer(stripped):
+            yield lineno, m.group(1)
+
+
+def check_file(md_path: pathlib.Path, repo_root: pathlib.Path) -> List[str]:
+    errors: List[str] = []
+    for lineno, target in iter_links(md_path):
+        if target.startswith(_EXTERNAL):
+            continue
+        path_part, _, anchor = target.partition("#")
+        if path_part:
+            dest = (md_path.parent / path_part).resolve()
+            try:
+                dest.relative_to(repo_root)
+            except ValueError:
+                errors.append(
+                    f"{md_path}:{lineno}: dead link -> {target} "
+                    "(escapes the repository)"
+                )
+                continue
+            if not dest.exists():
+                errors.append(
+                    f"{md_path}:{lineno}: dead link -> {target} (no such file)"
+                )
+                continue
+        else:
+            dest = md_path
+        if anchor:
+            if dest.is_dir() or dest.suffix.lower() not in (".md", ".markdown"):
+                continue  # anchors into non-markdown: nothing to verify
+            if github_slug(anchor) not in heading_anchors(dest):
+                errors.append(
+                    f"{md_path}:{lineno}: dead link -> {target} "
+                    f"(no heading for #{anchor})"
+                )
+    return errors
+
+
+def collect(paths: List[str]) -> List[pathlib.Path]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            files.extend(sorted(path.rglob("*.md")))
+        else:
+            files.append(path)
+    return files
+
+
+def main(argv: List[str]) -> int:
+    targets = argv or ["README.md", "docs"]
+    repo_root = pathlib.Path.cwd().resolve()
+    errors: List[str] = []
+    files = collect(targets)
+    for md in files:
+        if not md.exists():
+            errors.append(f"{md}: no such file")
+            continue
+        errors.extend(check_file(md, repo_root))
+    for e in errors:
+        print(e)
+    print(
+        f"checked {len(files)} file(s): "
+        + ("OK" if not errors else f"{len(errors)} dead link(s)")
+    )
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
