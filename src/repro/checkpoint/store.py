@@ -25,7 +25,7 @@ import threading
 import time
 import zlib
 from pathlib import Path
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -49,10 +49,22 @@ class CheckpointInfo:
 
 
 class CheckpointStore:
-    def __init__(self, root: str | Path, *, keep: int = 3):
+    """``clock`` is the store's only wall-clock seam: it stamps
+    ``written_at`` in the manifest and the commit-marker content.
+    Recovery drills pin it (``clock=lambda: t``) so checkpoint metadata
+    is reproducible; the default is real time."""
+
+    def __init__(
+        self,
+        root: str | Path,
+        *,
+        keep: int = 3,
+        clock: Callable[[], float] = time.time,
+    ):
         self.root = Path(root)
         self.root.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        self.clock = clock
 
     # -- paths ---------------------------------------------------------------
 
@@ -87,7 +99,7 @@ class CheckpointStore:
             "step": step,
             "metadata": metadata or {},
             "leaves": [],
-            "written_at": time.time(),
+            "written_at": self.clock(),
         }
         for i, (key, arr) in enumerate(named):
             fname = f"arr_{i:05d}.npy"
@@ -106,7 +118,7 @@ class CheckpointStore:
         if final.exists():
             shutil.rmtree(final)
         tmp.rename(final)
-        self._marker(step).write_text(str(time.time()))
+        self._marker(step).write_text(str(self.clock()))
         self.gc()
         return CheckpointInfo(step=step, path=final, metadata=manifest["metadata"])
 

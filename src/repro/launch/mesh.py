@@ -72,6 +72,6 @@ def num_pods(mesh: Mesh) -> int:
 
 def chips_per_pod(mesh: Mesh) -> int:
     total = 1
-    for name, size in mesh.shape.items():
+    for size in mesh.shape.values():
         total *= size
     return total // num_pods(mesh)

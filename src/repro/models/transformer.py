@@ -85,7 +85,7 @@ def init_params(key, cfg: ModelConfig) -> Params:
         slot_keys = jax.random.split(keys[4], len(cfg.pattern))
         for s, kind in enumerate(cfg.pattern):
             gkeys = jax.random.split(slot_keys[s], cfg.num_groups)
-            slots[f"slot{s}"] = jax.vmap(lambda k: _init_layer(k, kind, cfg))(gkeys)
+            slots[f"slot{s}"] = jax.vmap(lambda k, kind=kind: _init_layer(k, kind, cfg))(gkeys)
         params["groups"] = slots
     # unrolled remainder layers
     if cfg.remainder:
@@ -285,7 +285,7 @@ def forward(params: Params, batch, cfg: ModelConfig) -> Tuple[jnp.ndarray, jnp.n
             (x, aux), _ = jax.lax.scan(body, (x, aux), params["groups"])
         else:  # unrolled: used by the dry-run cost probes
             for i in range(cfg.num_groups):
-                slot_i = jax.tree.map(lambda a: a[i], params["groups"])
+                slot_i = jax.tree.map(lambda a, i=i: a[i], params["groups"])
                 (x, aux), _ = body((x, aux), slot_i)
     for i, kind in enumerate(cfg.remainder):
         x, a = _block_train(params["remainder"][i], x, kind, cfg, positions)
@@ -340,7 +340,7 @@ def prefill(params: Params, batch, cfg: ModelConfig, *, max_len: Optional[int] =
         else:
             caches = []
             for i in range(cfg.num_groups):
-                slot_i = jax.tree.map(lambda a: a[i], params["groups"])
+                slot_i = jax.tree.map(lambda a, i=i: a[i], params["groups"])
                 x, c = group_body(x, slot_i)
                 caches.append(c)
             cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
@@ -412,7 +412,7 @@ def decode_step(params: Params, tokens_t, cache, cfg: ModelConfig, position):
         else:
             caches = []
             for i in range(cfg.num_groups):
-                take_i = lambda a: jax.tree.map(lambda v: v[i], a)
+                take_i = lambda a, i=i: jax.tree.map(lambda v: v[i], a)
                 x_t, c = group_body(x_t, (take_i(params["groups"]), take_i(cache["groups"])))
                 caches.append(c)
             new_cache["groups"] = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)

@@ -210,7 +210,7 @@ def settings(**config: Any):
     """Decorator recording execution knobs for a later ``@given``."""
 
     def decorate(fn):
-        setattr(fn, "_fallback_settings", config)
+        fn._fallback_settings = config
         return fn
 
     return decorate

@@ -1,0 +1,603 @@
+"""reprolint tests (ISSUE 10): every rule gets a fixture pair (one
+snippet proving it fires, one proving it stays quiet), the engine's
+suppression/baseline/ratchet mechanics are unit-tested, and — mirroring
+``tests/test_docs.py``'s contract for ``check_links.py`` — a tier-1 test
+asserts the repo itself is clean under the committed baseline via the
+exact command CI runs.
+
+The acceptance demonstrations are here too: seeding an upward import
+into ``repro.core.fabric`` or deleting ``_FullEpochAllocator`` from
+``repro.core.congestion`` must produce a finding.
+"""
+
+import json
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from tools.reprolint import baseline as baseline_mod  # noqa: E402
+from tools.reprolint import lint_source, rule_ids  # noqa: E402
+from tools.reprolint import reporters  # noqa: E402
+from tools.reprolint.core import Finding, module_name_for  # noqa: E402
+
+SIM = "src/repro/core/example.py"  # a simulator-layer path for fixtures
+
+
+def findings(source, relpath=SIM, rule=None):
+    out = lint_source(source, relpath)
+    return [f for f in out if rule is None or f.rule == rule]
+
+
+# -- engine ------------------------------------------------------------------
+
+
+class TestEngine:
+    @pytest.mark.parametrize(
+        "relpath,module",
+        [
+            ("src/repro/core/fabric.py", "repro.core.fabric"),
+            ("src/repro/core/__init__.py", "repro.core"),
+            ("src/repro/__init__.py", "repro"),
+            ("benchmarks/bench_sweeps.py", "benchmarks.bench_sweeps"),
+            ("tests/test_docs.py", "tests.test_docs"),
+            ("examples/quickstart.py", "examples.quickstart"),
+        ],
+    )
+    def test_module_name_for(self, relpath, module):
+        assert module_name_for(relpath) == module
+
+    def test_rule_registry_is_the_documented_set(self):
+        assert set(rule_ids()) == {
+            "layer-dag",
+            "sibling-stack",
+            "wall-clock",
+            "rng-discipline",
+            "set-iteration",
+            "spec-frozen",
+            "spec-from-dict",
+            "from-dict-strict",
+            "oracle-retention",
+            "unused-suppression",
+        }
+
+    def test_suppression_same_line_and_line_above(self):
+        base = "import numpy as np\nrng = np.random.default_rng()"
+        assert findings(base, rule="rng-discipline")
+        same = base + "  # reprolint: allow[rng-discipline]"
+        assert not findings(same, rule="rng-discipline")
+        above = (
+            "import numpy as np\n"
+            "# reprolint: allow[rng-discipline]\n"
+            "rng = np.random.default_rng()"
+        )
+        assert not findings(above, rule="rng-discipline")
+
+    def test_suppression_is_per_rule(self):
+        src = (
+            "import numpy as np\n"
+            "rng = np.random.default_rng()  # reprolint: allow[wall-clock]\n"
+        )
+        # wrong rule id: the finding survives AND the comment is unused
+        assert findings(src, rule="rng-discipline")
+        assert findings(src, rule="unused-suppression")
+
+    def test_unused_suppression_reported(self):
+        src = "x = 1  # reprolint: allow[rng-discipline]\n"
+        (f,) = findings(src, rule="unused-suppression")
+        assert "suppresses nothing" in f.message
+
+    def test_unknown_rule_id_reported(self):
+        src = "x = 1  # reprolint: allow[no-such-rule]\n"
+        (f,) = findings(src, rule="unused-suppression")
+        assert "unknown rule id" in f.message
+
+    def test_multi_rule_allow_comment(self):
+        src = (
+            "import numpy as np\n"
+            "import time\n"
+            "# reprolint: allow[rng-discipline, wall-clock]\n"
+            "x = np.random.default_rng(), time.time()\n"
+        )
+        assert not findings(src, rule="rng-discipline")
+        assert not findings(src, rule="wall-clock")
+        assert not findings(src, rule="unused-suppression")
+
+
+# -- layering ----------------------------------------------------------------
+
+
+class TestLayerDag:
+    def test_upward_import_fires(self):
+        src = "from repro.scenario.spec import Scenario\n"
+        (f,) = findings(src, "src/repro/core/fabric.py", "layer-dag")
+        assert "upward import" in f.message and "repro.scenario.spec" in f.message
+
+    def test_scenario_into_sweep_fires(self):
+        src = "from repro.scenario.sweep import run_sweep\n"
+        assert findings(src, "src/repro/scenario/runner.py", "layer-dag")
+
+    def test_downward_and_same_layer_quiet(self):
+        src = (
+            "from repro.core.geo import GeoFabric\n"
+            "from repro.core.fabric import Fabric\n"
+            "from repro.scenario.spec import Scenario\n"
+        )
+        assert not findings(src, "src/repro/scenario/runner.py", "layer-dag")
+
+    def test_lazy_upward_import_quiet(self):
+        src = "def f():\n    from repro.serving.engine import ServingEngine\n"
+        assert not findings(src, "src/repro/scenario/runner.py", "layer-dag")
+
+    def test_type_checking_guard_quiet(self):
+        src = (
+            "from typing import TYPE_CHECKING\n"
+            "if TYPE_CHECKING:\n"
+            "    from repro.scenario.spec import Scenario\n"
+        )
+        assert not findings(src, "src/repro/core/fabric.py", "layer-dag")
+
+    def test_unlayered_module_quiet(self):
+        src = "from repro.scenario.sweep import run_sweep\n"
+        assert not findings(src, "benchmarks/bench_x.py", "layer-dag")
+
+    def test_from_package_import_submodule_attributed(self):
+        # `from repro.scenario import sweep` pulls a layer-3 module into
+        # layer 2 even though the package surface itself is layer 3
+        src = "from repro.scenario import sweep\n"
+        (f,) = findings(src, "src/repro/scenario/library.py", "layer-dag")
+        assert "repro.scenario.sweep" in f.message
+
+
+class TestSiblingStack:
+    def test_eager_jax_in_simulator_fires(self):
+        (f,) = findings("import jax\n", SIM, "sibling-stack")
+        assert "sibling" in f.message
+
+    def test_eager_runtime_import_fires(self):
+        src = "from repro.runtime.failure import plan_recovery\n"
+        assert findings(src, "src/repro/scenario/runner.py", "sibling-stack")
+
+    def test_lazy_import_quiet(self):
+        src = (
+            "def plan():\n"
+            "    import jax\n"
+            "    from repro.runtime.failure import plan_recovery\n"
+        )
+        assert not findings(src, "src/repro/scenario/runner.py", "sibling-stack")
+
+    def test_executable_stack_module_quiet(self):
+        # repro.launch is unlayered: it may import jax eagerly
+        assert not findings("import jax\n", "src/repro/launch/mesh.py", "sibling-stack")
+
+
+# -- determinism -------------------------------------------------------------
+
+
+class TestWallClock:
+    def test_time_time_call_fires(self):
+        src = "import time\nt0 = time.time()\n"
+        (f,) = findings(src, SIM, "wall-clock")
+        assert "time.time()" in f.message
+
+    def test_from_import_alias_fires(self):
+        src = "from time import perf_counter as pc\nt = pc()\n"
+        assert findings(src, SIM, "wall-clock")
+
+    def test_datetime_now_fires(self):
+        src = "from datetime import datetime\nd = datetime.now()\n"
+        assert findings(src, SIM, "wall-clock")
+
+    def test_reference_seam_quiet(self):
+        # the CheckpointStore pattern: a default-parameter *reference*
+        # is the sanctioned injection seam — only calls are flagged
+        src = (
+            "import time\n"
+            "def __init__(self, clock=time.time):\n"
+            "    self.clock = clock\n"
+        )
+        assert not findings(src, "src/repro/checkpoint/store.py", "wall-clock")
+
+    def test_time_sleep_quiet(self):
+        assert not findings("import time\ntime.sleep(1)\n", SIM, "wall-clock")
+
+    def test_runtime_allowlisted(self):
+        src = "import time\nt0 = time.time()\n"
+        assert not findings(src, "src/repro/runtime/trainer.py", "wall-clock")
+
+
+class TestRngDiscipline:
+    def test_unseeded_default_rng_fires(self):
+        src = "import numpy as np\nrng = np.random.default_rng()\n"
+        (f,) = findings(src, SIM, "rng-discipline")
+        assert "unseeded" in f.message
+
+    def test_none_seed_fires(self):
+        src = "import numpy as np\nrng = np.random.default_rng(None)\n"
+        assert findings(src, SIM, "rng-discipline")
+
+    def test_seeded_default_rng_quiet(self):
+        src = "import numpy as np\nrng = np.random.default_rng(seed)\n"
+        assert not findings(src, SIM, "rng-discipline")
+
+    def test_ambient_np_random_fires(self):
+        src = "import numpy as np\nx = np.random.rand(3)\n"
+        (f,) = findings(src, SIM, "rng-discipline")
+        assert "ambient" in f.message
+
+    def test_from_import_ambient_fires(self):
+        src = "from numpy.random import shuffle\nshuffle(xs)\n"
+        assert findings(src, SIM, "rng-discipline")
+
+    def test_stdlib_random_fires(self):
+        src = "import random\nx = random.random()\n"
+        assert findings(src, SIM, "rng-discipline")
+
+    def test_seeded_random_instance_quiet(self):
+        src = "import random\nrng = random.Random(7)\nx = rng.random()\n"
+        assert not findings(src, SIM, "rng-discipline")
+
+    def test_generator_methods_quiet(self):
+        src = (
+            "import numpy as np\n"
+            "rng = np.random.default_rng(0)\n"
+            "x = rng.normal(size=3)\n"
+        )
+        assert not findings(src, SIM, "rng-discipline")
+
+    def test_checkpoint_allowlisted(self):
+        src = "import numpy as np\nx = np.random.rand(3)\n"
+        assert not findings(src, "src/repro/checkpoint/store.py", "rng-discipline")
+
+
+class TestSetIteration:
+    def test_for_over_set_call_fires(self):
+        src = "for x in set(xs):\n    pass\n"
+        (f,) = findings(src, SIM, "set-iteration")
+        assert "sorted" in f.message
+
+    def test_comprehension_over_set_literal_fires(self):
+        src = "ys = [f(x) for x in {a, b, c}]\n"
+        assert findings(src, SIM, "set-iteration")
+
+    def test_list_wrapped_set_fires(self):
+        src = "for x in list(set(xs)):\n    pass\n"
+        assert findings(src, SIM, "set-iteration")
+
+    def test_sorted_set_quiet(self):
+        src = "for x in sorted(set(xs)):\n    pass\n"
+        assert not findings(src, SIM, "set-iteration")
+
+    def test_plain_iterable_quiet(self):
+        src = "for x in xs:\n    pass\n"
+        assert not findings(src, SIM, "set-iteration")
+
+    def test_out_of_scope_quiet(self):
+        src = "for x in set(xs):\n    pass\n"
+        assert not findings(src, "benchmarks/bench_x.py", "set-iteration")
+
+
+# -- spec contracts ----------------------------------------------------------
+
+
+SPEC = "src/repro/scenario/example.py"
+
+
+class TestSpecContracts:
+    def test_unfrozen_spec_fires(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass\n"
+            "class FooSpec:\n    x: int = 0\n"
+        )
+        (f,) = findings(src, SPEC, "spec-frozen")
+        assert "frozen=True" in f.message
+
+    def test_frozen_without_true_fires(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass(order=True)\n"
+            "class FooOptions:\n    x: int = 0\n"
+        )
+        assert findings(src, SPEC, "spec-frozen")
+
+    def test_frozen_spec_quiet(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass(frozen=True)\n"
+            "class FooSpec:\n    x: int = 0\n"
+        )
+        assert not findings(src, SPEC, "spec-frozen")
+
+    def test_non_dataclass_and_private_quiet(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "class BarSpec:\n    pass\n"
+            "@dataclass\n"
+            "class _HiddenSpec:\n    x: int = 0\n"
+        )
+        assert not findings(src, SPEC, "spec-frozen")
+
+    def test_missing_from_dict_fires(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass(frozen=True)\n"
+            "class FooSpec:\n    x: int = 0\n"
+        )
+        (f,) = findings(src, SPEC, "spec-from-dict")
+        assert "from_dict" in f.message
+
+    def test_classmethod_from_dict_quiet(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass(frozen=True)\n"
+            "class FooSpec:\n"
+            "    x: int = 0\n"
+            "    @classmethod\n"
+            "    def from_dict(cls, d):\n"
+            "        _reject_unknown_keys(cls, d)\n"
+            "        return cls(**d)\n"
+        )
+        assert not findings(src, SPEC, "spec-from-dict")
+        assert not findings(src, SPEC, "from-dict-strict")
+
+    def test_module_level_from_dict_quiet(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass(frozen=True)\n"
+            "class FooSpec:\n    x: int = 0\n"
+            "def from_dict(d):\n"
+            "    _reject_unknown_keys(FooSpec, d)\n"
+            "    return FooSpec(**d)\n"
+        )
+        assert not findings(src, SPEC, "spec-from-dict")
+
+    def test_lenient_from_dict_fires(self):
+        src = (
+            "class Foo:\n"
+            "    @classmethod\n"
+            "    def from_dict(cls, d):\n"
+            "        return cls(**d)\n"
+        )
+        (f,) = findings(src, SPEC, "from-dict-strict")
+        assert "unknown keys" in f.message
+
+    def test_explicit_raise_is_strict(self):
+        src = (
+            "import dataclasses\n"
+            "class Foo:\n"
+            "    @classmethod\n"
+            "    def from_dict(cls, d):\n"
+            "        unknown = set(d) - {f.name for f in dataclasses.fields(cls)}\n"
+            "        if unknown:\n"
+            "            raise ValueError(f'unknown {unknown}')\n"
+            "        return cls(**d)\n"
+        )
+        assert not findings(src, SPEC, "from-dict-strict")
+
+    def test_out_of_scope_quiet(self):
+        src = (
+            "from dataclasses import dataclass\n"
+            "@dataclass\n"
+            "class FooSpec:\n    x: int = 0\n"
+        )
+        assert not findings(src, "benchmarks/bench_x.py", "spec-frozen")
+
+
+# -- oracle retention --------------------------------------------------------
+
+
+class TestOracleRetention:
+    def test_missing_oracle_fires(self):
+        src = "class _IncrementalAllocator:\n    pass\n"
+        out = findings(src, "src/repro/core/congestion.py", "oracle-retention")
+        assert any("_FullEpochAllocator" in f.message for f in out)
+
+    def test_declared_pair_quiet(self):
+        src = (
+            "INCREMENTAL_EVENT_LOOP = True\n"
+            "class _FullEpochAllocator:\n    pass\n"
+            "class _IncrementalAllocator:\n    pass\n"
+        )
+        assert not findings(src, "src/repro/core/congestion.py", "oracle-retention")
+
+    def test_undeclared_fast_path_fires(self):
+        src = "def resolve_batched(x):\n    return x\n"
+        (f,) = findings(src, "src/repro/core/newmod.py", "oracle-retention")
+        assert "no oracle declared" in f.message
+
+    def test_method_fast_path_detected(self):
+        src = (
+            "class Fabric:\n"
+            "    def route_flows_batched(self, flows):\n"
+            "        return flows\n"
+        )
+        out = findings(src, "src/repro/core/fabric.py", "oracle-retention")
+        assert any("route_flow" in f.message for f in out)
+
+    def test_stale_map_entry_fires(self):
+        # module lost both the fast path and the oracle: the map entry
+        # itself is now stale and must be pruned
+        src = "x = 1\n"
+        out = findings(src, "src/repro/core/congestion.py", "oracle-retention")
+        assert any("prune the entry" in f.message for f in out)
+
+    def test_out_of_scope_quiet(self):
+        src = "def resolve_batched(x):\n    return x\n"
+        assert not findings(src, "benchmarks/bench_x.py", "oracle-retention")
+
+
+# -- acceptance demonstrations ----------------------------------------------
+
+
+class TestSeededDemonstrations:
+    """The CI lint job must catch exactly these regressions."""
+
+    def test_upward_import_into_fabric_fails(self):
+        src = (REPO / "src/repro/core/fabric.py").read_text()
+        seeded = src.replace(
+            "import zlib", "import zlib\nfrom repro.scenario.spec import Scenario", 1
+        )
+        assert seeded != src
+        out = [
+            f
+            for f in lint_source(seeded, "src/repro/core/fabric.py")
+            if f.rule == "layer-dag"
+        ]
+        assert out and "upward import" in out[0].message
+
+    def test_deleting_full_epoch_allocator_fails(self):
+        src = (REPO / "src/repro/core/congestion.py").read_text()
+        seeded = src.replace("class _FullEpochAllocator", "class _Gone", 1)
+        assert seeded != src
+        out = [
+            f
+            for f in lint_source(seeded, "src/repro/core/congestion.py")
+            if f.rule == "oracle-retention"
+        ]
+        assert any("_FullEpochAllocator" in f.message for f in out)
+
+    def test_real_fabric_and_congestion_are_clean(self):
+        for rel in ("src/repro/core/fabric.py", "src/repro/core/congestion.py"):
+            assert lint_source((REPO / rel).read_text(), rel) == []
+
+
+# -- baseline + ratchet ------------------------------------------------------
+
+
+def _finding(rule="spec-from-dict", path="src/repro/x.py", context="class XSpec:"):
+    return Finding(rule=rule, path=path, line=10, message="m", context=context)
+
+
+class TestBaseline:
+    def test_split_grandfathers_matches(self):
+        f = _finding()
+        entries = [{"rule": f.rule, "path": f.path, "context": f.context}]
+        new, grand, stale = baseline_mod.split([f], entries)
+        assert (new, grand, stale) == ([], [f], [])
+
+    def test_split_flags_new_and_stale(self):
+        f = _finding()
+        entries = [{"rule": f.rule, "path": "src/repro/gone.py", "context": "c"}]
+        new, grand, stale = baseline_mod.split([f], entries)
+        assert new == [f] and grand == []
+        assert stale == [(f.rule, "src/repro/gone.py", "c")]
+
+    def test_multiset_semantics(self):
+        # two identical findings, one baseline entry: one is new
+        f = _finding()
+        entries = [{"rule": f.rule, "path": f.path, "context": f.context}]
+        new, grand, _ = baseline_mod.split([f, f], entries)
+        assert len(new) == 1 and len(grand) == 1
+
+    def test_line_drift_does_not_invalidate(self):
+        f = _finding()
+        drifted = Finding(f.rule, f.path, line=99, message="m", context=f.context)
+        entries = [{"rule": f.rule, "path": f.path, "context": f.context}]
+        new, grand, stale = baseline_mod.split([drifted], entries)
+        assert not new and not stale
+
+    def test_dump_load_round_trip(self, tmp_path):
+        f = _finding()
+        p = tmp_path / "baseline.json"
+        baseline_mod.dump([f], p)
+        entries = baseline_mod.load(p)
+        assert entries == [
+            {"rule": f.rule, "path": f.path, "context": f.context}
+        ]
+
+    def test_ratchet_only_shrinks(self):
+        old = [{"rule": "r", "path": "a.py", "context": "c"}]
+        assert baseline_mod.ratchet_errors(old, old) == []
+        assert baseline_mod.ratchet_errors([], old) == []  # shrink: fine
+        grown = old + [{"rule": "r2", "path": "b.py", "context": "c2"}]
+        errors = baseline_mod.ratchet_errors(grown, old)
+        assert len(errors) == 1 and "baseline grew" in errors[0]
+
+    def test_at_git_ref_missing_file_is_none(self):
+        # A ref from before the baseline existed must yield None (skip the
+        # ratchet), not an empty baseline the current one "grew" from.
+        first = subprocess.run(
+            ["git", "rev-list", "--max-parents=0", "HEAD"],
+            cwd=REPO, capture_output=True, text=True, check=True,
+        ).stdout.split()[0]
+        assert baseline_mod.at_git_ref(first, REPO) is None
+
+    def test_at_git_ref_reads_committed_baseline(self):
+        entries = baseline_mod.at_git_ref("HEAD", REPO)
+        if entries is None:
+            pytest.skip("baseline not committed at HEAD yet")
+        assert entries == baseline_mod.load(REPO / "tools/reprolint/baseline.json")
+
+
+class TestReporters:
+    def test_text(self):
+        f = _finding()
+        assert reporters.text([f]) == "src/repro/x.py:10: [spec-from-dict] m"
+
+    def test_json_round_trips(self):
+        f = _finding()
+        (row,) = json.loads(reporters.as_json([f]))
+        assert row == {
+            "rule": f.rule,
+            "path": f.path,
+            "line": 10,
+            "message": "m",
+            "context": f.context,
+        }
+
+    def test_github_annotation_shape(self):
+        f = Finding("r", "a.py", 3, "bad % thing\nline2", "ctx")
+        out = reporters.github([f])
+        assert out.startswith("::error file=a.py,line=3,title=reprolint[r]::")
+        assert "\n" not in out and "%0A" in out and "%25" in out
+
+
+# -- the repo itself is clean (tier-1 mirror of the CI lint step) ------------
+
+
+class TestRepoIsClean:
+    def test_repo_clean_under_committed_baseline(self):
+        """Exactly what the CI lint job runs."""
+        proc = subprocess.run(
+            [
+                sys.executable,
+                "-m",
+                "tools.reprolint",
+                "src",
+                "benchmarks",
+                "tests",
+                "examples",
+            ],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+        )
+        assert proc.returncode == 0, proc.stdout + proc.stderr
+
+    def test_committed_baseline_is_the_grandfathered_set(self):
+        entries = baseline_mod.load(REPO / baseline_mod.DEFAULT_BASELINE)
+        # the one grandfathered finding: ShapeSpec (executable stack,
+        # never JSON round-tripped) has no from_dict.  Shrink-only.
+        assert entries == [
+            {
+                "rule": "spec-from-dict",
+                "path": "src/repro/launch/shapes.py",
+                "context": "class ShapeSpec:",
+            }
+        ]
+
+    def test_list_rules_cli(self):
+        proc = subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", "--list-rules"],
+            cwd=REPO,
+            capture_output=True,
+            text=True,
+        )
+        assert proc.returncode == 0
+        for rid in rule_ids():
+            assert rid in proc.stdout

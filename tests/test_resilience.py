@@ -286,7 +286,11 @@ class TestFailureRecoveryLoop:
 
         cfg = DataConfig(vocab_size=128, seq_len=16, global_batch=4, seed=13)
         loader = ShardedLoader(cfg)
-        store = CheckpointStore(tmp_path)
+        # pin the store's wall-clock seam to the drill's simulated time:
+        # checkpoint metadata becomes a pure function of the script, so
+        # the whole drill (timestamps included) replays byte-identically
+        sim = {"now": 0.0}
+        store = CheckpointStore(tmp_path, clock=lambda: sim["now"])
         tree = {"w": jax.numpy.arange(8, dtype=jax.numpy.float32)}
         mon = HeartbeatMonitor(["pod1", "pod2"], interval_ms=100.0, detect_mult=3)
 
@@ -294,9 +298,9 @@ class TestFailureRecoveryLoop:
         detected_step = None
         for step in range(10):
             batches.append(loader.next_batch())
+            now = sim["now"] = step * 100.0
             if step % checkpoint_every == 0:
                 store.save(step, tree, metadata={"data_step": step})
-            now = step * 100.0
             mon.heartbeat("pod1", now)
             if step < fail_at:
                 mon.heartbeat("pod2", now)
@@ -316,6 +320,16 @@ class TestFailureRecoveryLoop:
         assert anchor == 4 and anchor in store.steps()
         restored, meta = store.restore(anchor, tree)
         np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+
+        # the injected clock pinned every timestamp the store wrote: the
+        # manifest's written_at and the commit-marker content are the
+        # drill's simulated times, not wall time
+        manifest = json.loads((store._dir(anchor) / "manifest.json").read_text())
+        assert manifest["written_at"] == anchor * 100.0
+        assert store._marker(anchor).read_text() == str(anchor * 100.0)
+        assert json.loads(
+            (store._dir(8) / "manifest.json").read_text()
+        )["written_at"] == 800.0
 
         plan = plan_recovery(
             step=detected_step,

@@ -1,0 +1,2 @@
+"""Repo tooling: ``check_links.py`` (docs link check) and the
+``tools.reprolint`` invariant linter (``python -m tools.reprolint``)."""

@@ -1,0 +1,28 @@
+"""reprolint — the repo's AST-based invariant linter.
+
+Turns the conventions documented in ``docs/ARCHITECTURE.md`` (layer
+DAG, determinism discipline, spec contracts, oracle retention) into
+machine-checked rules that fail CI *before* a bench gate ever runs.
+
+Usage::
+
+    python -m tools.reprolint src benchmarks tests examples
+    python -m tools.reprolint --list-rules
+    python -m tools.reprolint --format github          # CI annotations
+    python -m tools.reprolint --write-baseline         # shrink the ratchet
+
+Stdlib only.  See ``tools/reprolint/config.py`` for the declared layer
+map / oracle map and ``README.md`` ("Static invariant lint") for the
+suppression + ratchet workflow.
+"""
+
+from . import rules as _rules  # noqa: F401  (populates the registry)
+from .core import (  # noqa: F401
+    Finding,
+    ModuleInfo,
+    RULES,
+    lint_module,
+    lint_paths,
+    lint_source,
+    rule_ids,
+)

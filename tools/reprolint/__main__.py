@@ -1,0 +1,125 @@
+"""CLI driver: ``python -m tools.reprolint [paths...]``.
+
+Exit status 0 when the tree is clean under the committed ratchet
+baseline; 1 on new findings, stale baseline entries, or a grown
+baseline (``--ratchet REF``).
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+from typing import List
+
+from . import baseline as baseline_mod
+from .core import RULES, UNUSED_SUPPRESSION, lint_paths
+from .reporters import REPORTERS
+
+DEFAULT_PATHS = ["src", "benchmarks", "tests", "examples"]
+
+
+def main(argv: List[str]) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description="AST-based invariant linter (layer DAG, determinism, "
+        "spec contracts, oracle retention).",
+    )
+    ap.add_argument(
+        "paths",
+        nargs="*",
+        default=DEFAULT_PATHS,
+        help=f"files/directories to lint (default: {' '.join(DEFAULT_PATHS)})",
+    )
+    ap.add_argument(
+        "--format",
+        choices=sorted(REPORTERS),
+        default="text",
+        help="finding output format (default: text)",
+    )
+    ap.add_argument(
+        "--baseline",
+        default=baseline_mod.DEFAULT_BASELINE,
+        help="ratchet baseline JSON (default: %(default)s)",
+    )
+    ap.add_argument(
+        "--no-baseline",
+        action="store_true",
+        help="report every finding, grandfathered or not",
+    )
+    ap.add_argument(
+        "--write-baseline",
+        action="store_true",
+        help="rewrite the baseline from current findings and exit 0 "
+        "(the only sanctioned way to edit it)",
+    )
+    ap.add_argument(
+        "--ratchet",
+        metavar="REF",
+        help="also fail if the committed baseline contains entries absent "
+        "at git REF (the baseline may only shrink)",
+    )
+    ap.add_argument(
+        "--list-rules", action="store_true", help="print the rule registry"
+    )
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        width = max(len(r.id) for r in RULES)
+        for r in RULES:
+            print(f"{r.id:<{width}}  {' '.join(r.description.split())}")
+        print(
+            f"{UNUSED_SUPPRESSION:<{width}}  An allow-comment that "
+            "suppresses nothing is itself a finding."
+        )
+        return 0
+
+    root = pathlib.Path.cwd()
+    findings = lint_paths(args.paths, root=root)
+    baseline_path = root / args.baseline
+
+    if args.write_baseline:
+        baseline_mod.dump(findings, baseline_path)
+        print(f"wrote {len(findings)} finding(s) to {args.baseline}")
+        return 0
+
+    entries: List[dict] = []
+    if not args.no_baseline and baseline_path.exists():
+        entries = baseline_mod.load(baseline_path)
+    new, grandfathered, stale = baseline_mod.split(findings, entries)
+
+    report = REPORTERS[args.format](new)
+    if report:
+        print(report)
+    errors = len(new)
+    for rule, path, context in stale:
+        errors += 1
+        print(
+            f"{args.baseline}: stale entry [{rule}] {path} ({context!r}) "
+            "matches no current finding — shrink the baseline with "
+            "--write-baseline",
+            file=sys.stderr,
+        )
+    if args.ratchet:
+        old = baseline_mod.at_git_ref(args.ratchet, root)
+        if old is None:
+            print(
+                f"reprolint: no baseline at {args.ratchet} — ratchet "
+                "skipped (first baseline commit)",
+                file=sys.stderr,
+            )
+        else:
+            for msg in baseline_mod.ratchet_errors(entries, old):
+                errors += 1
+                print(msg, file=sys.stderr)
+    summary = (
+        f"reprolint: {len(findings)} finding(s) "
+        f"({len(new)} new, {len(grandfathered)} grandfathered, "
+        f"{len(stale)} stale baseline entr{'y' if len(stale) == 1 else 'ies'})"
+    )
+    print(summary, file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,0 +1,101 @@
+"""Ratchet baseline: grandfathered findings that may only shrink.
+
+The committed ``tools/reprolint/baseline.json`` lists findings that
+predate a rule (fingerprinted line-number-independently as
+``(rule, path, context)``).  Semantics:
+
+* a current finding matching a baseline entry is *grandfathered* (does
+  not fail the run);
+* a current finding with no entry is **new** — the run fails;
+* a baseline entry matching no current finding is **stale** — the run
+  also fails, with instructions to shrink the baseline
+  (``--write-baseline``), so the ratchet only ever tightens;
+* ``--ratchet REF`` additionally proves the committed baseline is a
+  subset of the one at a git ref (CI runs it against the PR base), so
+  entries can be removed but never added back.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+import subprocess
+from collections import Counter
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .core import Finding
+
+DEFAULT_BASELINE = "tools/reprolint/baseline.json"
+
+Key = Tuple[str, str, str]
+
+
+def _keys(entries: Sequence[Dict[str, str]]) -> Counter:
+    return Counter(
+        (e["rule"], e["path"], e.get("context", "")) for e in entries
+    )
+
+
+def load(path: pathlib.Path) -> List[Dict[str, str]]:
+    data = json.loads(path.read_text(encoding="utf-8"))
+    if not isinstance(data, dict) or "findings" not in data:
+        raise ValueError(f"{path}: not a reprolint baseline (no 'findings')")
+    return data["findings"]
+
+
+def dump(findings: Sequence[Finding], path: pathlib.Path) -> None:
+    entries = [
+        {"rule": f.rule, "path": f.path, "context": f.context}
+        for f in sorted(findings, key=lambda f: f.key)
+    ]
+    path.write_text(
+        json.dumps({"version": 1, "findings": entries}, indent=1) + "\n",
+        encoding="utf-8",
+    )
+
+
+def split(
+    findings: Sequence[Finding], entries: Sequence[Dict[str, str]]
+) -> Tuple[List[Finding], List[Finding], List[Key]]:
+    """(new, grandfathered, stale_keys) under multiset matching."""
+    budget = _keys(entries)
+    new: List[Finding] = []
+    grandfathered: List[Finding] = []
+    for f in findings:
+        if budget.get(f.key, 0) > 0:
+            budget[f.key] -= 1
+            grandfathered.append(f)
+        else:
+            new.append(f)
+    stale = sorted(budget.elements())
+    return new, grandfathered, stale
+
+
+def at_git_ref(ref: str, repo_root: pathlib.Path) -> Optional[List[Dict[str, str]]]:
+    """Baseline entries at ``REF:tools/reprolint/baseline.json``, or
+    ``None`` when the file does not exist there — the PR that introduces
+    the baseline has nothing to ratchet against, so the check is skipped
+    rather than treating "no baseline yet" as an empty one it grew from."""
+    proc = subprocess.run(
+        ["git", "show", f"{ref}:{DEFAULT_BASELINE}"],
+        cwd=repo_root,
+        capture_output=True,
+        text=True,
+    )
+    if proc.returncode != 0:
+        return None
+    return json.loads(proc.stdout)["findings"]
+
+
+def ratchet_errors(
+    current: Sequence[Dict[str, str]], old: Sequence[Dict[str, str]]
+) -> List[str]:
+    """Entries present now but absent at the ref — the ratchet only
+    shrinks, so each is an error."""
+    grown = _keys(current) - _keys(old)
+    return [
+        f"baseline grew: {rule} at {path} ({context!r}) is not in the base "
+        "ref's baseline — fix the finding instead of grandfathering it"
+        for (rule, path, context), n in sorted(grown.items())
+        for _ in range(n)
+    ]

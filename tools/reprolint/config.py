@@ -1,0 +1,244 @@
+"""Declarative configuration for the reprolint rules.
+
+Everything the rules enforce is *declared here*, in one place, so the
+invariants documented in ``docs/ARCHITECTURE.md`` (layer map,
+determinism discipline, spec contracts, oracle retention) have exactly
+one machine-readable source of truth.  Changing an invariant means
+editing this file — a reviewable, greppable diff — not weakening a rule.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence, Tuple
+
+# --------------------------------------------------------------------------
+# Layer DAG (docs/ARCHITECTURE.md#layer-map)
+#
+# Dotted module names (longest prefix wins) -> layer index.  Dependencies
+# must point downward: a module may import same-or-lower layers only.
+# Modules without an assignment (benchmarks, tests, examples, the
+# executable JAX stack) are not layered — the DAG rule ignores their own
+# imports, but `sibling-stack` still guards the boundary *into* them.
+# --------------------------------------------------------------------------
+
+LAYER_NAMES: Dict[int, str] = {
+    0: "fabric",
+    1: "congestion/schedule",
+    2: "scenario",
+    3: "sweep/resilience/serving",
+}
+
+LAYER_OF: Dict[str, int] = {
+    # fabric: the emulated EVPN-VXLAN spine-leaf WAN
+    "repro.core.fabric": 0,
+    "repro.core.evpn": 0,
+    "repro.core.bfd": 0,
+    "repro.core.flows": 0,
+    "repro.core.ports": 0,
+    "repro.core.collision": 0,
+    "repro.core.metrics": 0,
+    "repro.core.tenancy": 0,
+    # congestion / schedule: allocators, phase DAGs, netem resolution,
+    # detection primitives, and the GeoFabric facade over them
+    "repro.core.congestion": 1,
+    "repro.core.schedule": 1,
+    "repro.core.wan": 1,
+    "repro.core.slaprobe": 1,  # leaf detection primitive; the resilience *loop* is layer 3
+    "repro.core.geo": 1,
+    # the package surface re-exports everything in core (layers 0-1)
+    "repro.core": 1,
+    # scenario: declarative spec + runner + named library
+    "repro.scenario.spec": 2,
+    "repro.scenario.runner": 2,
+    "repro.scenario.library": 2,
+    # sweep / resilience / serving: subsystems that drive scenarios
+    "repro.scenario.sweep": 3,
+    "repro.scenario": 3,  # package surface re-exports sweep
+    "repro.serving": 3,
+}
+
+
+def layer_of(module: str) -> Optional[int]:
+    """Longest-dotted-prefix layer lookup; ``None`` when unlayered."""
+    parts = module.split(".")
+    for i in range(len(parts), 0, -1):
+        layer = LAYER_OF.get(".".join(parts[:i]))
+        if layer is not None:
+            return layer
+    return None
+
+
+# --------------------------------------------------------------------------
+# Sibling stack (docs/ARCHITECTURE.md#layer-map, closing paragraph)
+#
+# The executable JAX training stack sits *beside* the simulator layers,
+# not below them: simulator modules must stay importable (and sweep
+# workers spawnable) without jax.  Layered modules may only reach these
+# packages through function-level (lazy) imports.
+# --------------------------------------------------------------------------
+
+SIBLING_STACK: Tuple[str, ...] = (
+    "repro.models",
+    "repro.kernels",
+    "repro.runtime",
+    "repro.distributed",
+    "repro.optim",
+    "repro.launch",
+    "repro.checkpoint",
+    "repro.configs",
+    "repro.data",
+    "repro.testing",
+)
+
+#: Heavyweight external packages the simulator layers must not import at
+#: module level (same lazy-import discipline as the sibling stack).
+HEAVY_EXTERNAL: Tuple[str, ...] = ("jax", "flax", "jaxlib")
+
+
+# --------------------------------------------------------------------------
+# Determinism discipline (docs/ARCHITECTURE.md — byte-identity gates)
+#
+# Simulator layers must be a pure function of their inputs: no wall
+# clock, no ambient RNG state, no unseeded generators, no iteration over
+# unordered sets.  The executable stack measures real wall time and
+# draws real randomness — that is its job — so it is allowlisted.
+# --------------------------------------------------------------------------
+
+#: Modules the wall-clock rule scans (prefix match).
+WALL_CLOCK_SCOPE: Tuple[str, ...] = ("repro",)
+
+#: Allowlisted prefixes: the executable stack legitimately reads the
+#: clock (step timing, CLI progress).  ``repro.checkpoint`` is *not*
+#: allowlisted — its wall-clock dependence is injected through the
+#: ``clock=time.time`` seam, which the rule permits because only *calls*
+#: are flagged, never references (a default-parameter value is the seam).
+WALL_CLOCK_ALLOW: Tuple[str, ...] = ("repro.launch", "repro.runtime")
+
+#: Wall-clock callables (post alias-resolution dotted names) that must
+#: not be *called* in scope.
+WALL_CLOCK_BANNED: Tuple[str, ...] = (
+    "time.time",
+    "time.time_ns",
+    "time.monotonic",
+    "time.monotonic_ns",
+    "time.perf_counter",
+    "time.perf_counter_ns",
+    "datetime.datetime.now",
+    "datetime.datetime.utcnow",
+    "datetime.datetime.today",
+    "datetime.date.today",
+)
+
+#: Simulator layers scanned by the RNG and set-iteration rules.
+DETERMINISM_SCOPE: Tuple[str, ...] = (
+    "repro.core",
+    "repro.scenario",
+    "repro.serving",
+)
+
+#: Per-rule allowlist (issue contract): the launch/runtime/checkpoint
+#: modules may use ambient randomness (e.g. jitter in real retries).
+DETERMINISM_ALLOW: Tuple[str, ...] = (
+    "repro.launch",
+    "repro.runtime",
+    "repro.checkpoint",
+)
+
+#: ``numpy.random`` module-level functions that mutate/read the *global*
+#: legacy RNG state — banned in simulator layers (use a seeded
+#: ``default_rng(seed)`` Generator instead).
+AMBIENT_NP_RANDOM: Tuple[str, ...] = (
+    "seed",
+    "random",
+    "rand",
+    "randn",
+    "randint",
+    "random_integers",
+    "random_sample",
+    "ranf",
+    "sample",
+    "choice",
+    "bytes",
+    "shuffle",
+    "permutation",
+    "uniform",
+    "normal",
+    "standard_normal",
+    "poisson",
+    "exponential",
+    "binomial",
+    "lognormal",
+    "pareto",
+    "get_state",
+    "set_state",
+)
+
+#: stdlib ``random`` module-level functions (global ``Random`` instance).
+#: ``random.Random(seed)`` / ``random.SystemRandom`` constructions are
+#: fine — only the ambient module-level state is banned.
+AMBIENT_PY_RANDOM: Tuple[str, ...] = (
+    "seed",
+    "random",
+    "randint",
+    "randrange",
+    "randbytes",
+    "getrandbits",
+    "choice",
+    "choices",
+    "shuffle",
+    "sample",
+    "uniform",
+    "triangular",
+    "gauss",
+    "normalvariate",
+    "lognormvariate",
+    "expovariate",
+    "betavariate",
+    "paretovariate",
+)
+
+
+# --------------------------------------------------------------------------
+# Spec contracts (scenario JSON round-trip discipline)
+# --------------------------------------------------------------------------
+
+#: Class-name suffixes that mark a declarative spec dataclass.
+SPEC_SUFFIXES: Tuple[str, ...] = ("Spec", "Options")
+
+#: Modules scanned by the spec-contract rules (prefix match).
+SPEC_SCOPE: Tuple[str, ...] = ("repro",)
+
+
+# --------------------------------------------------------------------------
+# Oracle retention (docs/ARCHITECTURE.md#the-byte-identity-gate-convention)
+#
+# Every fast path keeps its from-scratch oracle selectable forever.  A
+# def/class whose name contains "incremental" or ends in "_batched" is a
+# declared fast path; it must have an entry here, and every symbol the
+# entry names must still be defined in the same module.  Deleting
+# ``_FullEpochAllocator`` (or the sequential walk) is a lint error, not
+# an archaeology exercise.
+# --------------------------------------------------------------------------
+
+ORACLE_MAP: Dict[str, Dict[str, Sequence[str]]] = {
+    "repro.core.congestion": {
+        # warm-started event-loop allocator vs the from-scratch oracle,
+        # selectable via simulate_schedule(..., incremental=False)
+        "_IncrementalAllocator": ("_FullEpochAllocator", "INCREMENTAL_EVENT_LOOP"),
+    },
+    "repro.core.fabric": {
+        # vectorized CRC router vs the sequential per-flow walk
+        "route_flows_batched": ("route_flow",),
+    },
+    "repro.core.flows": {
+        # batched module-level wrapper vs the sequential route_flows loop
+        "route_flows_batched": ("route_flows",),
+    },
+    "repro.core.evpn": {
+        # incremental EVPN resync vs the full-resync oracle
+        "resync_incremental": ("resync",),
+    },
+}
+
+#: Modules scanned by the oracle-retention rule (prefix match).
+ORACLE_SCOPE: Tuple[str, ...] = ("repro",)

@@ -1,0 +1,366 @@
+"""reprolint framework: module model, rule registry, suppression
+accounting, and the lint engine.
+
+Stdlib only (``ast`` + ``tokenize``), in the spirit of
+``tools/check_links.py``.  Rules live in :mod:`tools.reprolint.rules`,
+their configuration in :mod:`tools.reprolint.config`, reporters in
+:mod:`tools.reprolint.reporters`, and the ratchet baseline in
+:mod:`tools.reprolint.baseline`.
+
+A finding is suppressed by an inline comment on its own line or the
+line above::
+
+    rng = np.random.default_rng()  # reprolint: allow[rng-discipline]
+
+Suppressions are *accounted*: an allow-comment that suppresses nothing
+is itself a finding (``unused-suppression``), so stale exemptions are
+garbage-collected by CI instead of accreting.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import io
+import pathlib
+import re
+import tokenize
+from typing import Dict, Iterable, List, Optional, Sequence, Set, Tuple
+
+_ALLOW_RE = re.compile(r"#\s*reprolint:\s*allow\[([A-Za-z0-9_\-, ]+)\]")
+
+#: Rule id of the suppression-accounting pseudo-rule (not suppressible).
+UNUSED_SUPPRESSION = "unused-suppression"
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    """One rule violation at one source location."""
+
+    rule: str
+    path: str  # repo-relative posix path
+    line: int
+    message: str
+    context: str = ""  # stripped source line (baseline fingerprint)
+
+    @property
+    def key(self) -> Tuple[str, str, str]:
+        """Baseline fingerprint: line-number independent so pure line
+        drift never invalidates a grandfathered entry."""
+        return (self.rule, self.path, self.context)
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}: [{self.rule}] {self.message}"
+
+
+def module_name_for(relpath: str) -> str:
+    """Dotted module name for a repo-relative path.
+
+    ``src/`` is the import root (``src/repro/core/fabric.py`` ->
+    ``repro.core.fabric``); everything else is rooted at the repo
+    (``benchmarks/bench_sweeps.py`` -> ``benchmarks.bench_sweeps``).
+    Package ``__init__.py`` files get the package's own name.
+    """
+    parts = list(pathlib.PurePosixPath(relpath).parts)
+    if parts and parts[0] == "src":
+        parts = parts[1:]
+    if parts[-1] == "__init__.py":
+        parts = parts[:-1]
+    else:
+        parts[-1] = parts[-1][: -len(".py")]
+    return ".".join(parts)
+
+
+def in_scope(module: str, prefixes: Sequence[str]) -> bool:
+    """Dotted-prefix membership: ``repro.core.wan`` is in ``repro.core``."""
+    return any(module == p or module.startswith(p + ".") for p in prefixes)
+
+
+class ModuleInfo:
+    """A parsed source file plus everything rules need to inspect it."""
+
+    def __init__(self, relpath: str, source: str, module: Optional[str] = None):
+        self.relpath = relpath
+        self.source = source
+        self.module = module if module is not None else module_name_for(relpath)
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=relpath)
+        self.suppressions = self._parse_suppressions(source)
+        # (line, rule) pairs consumed by a finding — for unused accounting
+        self.used_suppressions: Set[Tuple[int, str]] = set()
+        self._eager_imports: Optional[List[Tuple[ast.AST, str, int]]] = None
+        self._aliases: Optional[Dict[str, str]] = None
+
+    # -- suppressions --------------------------------------------------------
+
+    @staticmethod
+    def _parse_suppressions(source: str) -> Dict[int, Set[str]]:
+        out: Dict[int, Set[str]] = {}
+        try:
+            tokens = tokenize.generate_tokens(io.StringIO(source).readline)
+            for tok in tokens:
+                if tok.type != tokenize.COMMENT:
+                    continue
+                m = _ALLOW_RE.search(tok.string)
+                if m:
+                    ids = {r.strip() for r in m.group(1).split(",") if r.strip()}
+                    out.setdefault(tok.start[0], set()).update(ids)
+        except tokenize.TokenizeError:  # pragma: no cover - ast.parse raised first
+            pass
+        return out
+
+    def is_suppressed(self, line: int, rule: str) -> bool:
+        """True (and mark the suppression used) if an allow-comment for
+        ``rule`` sits on ``line`` or the line directly above."""
+        if rule == UNUSED_SUPPRESSION:
+            return False
+        for ln in (line, line - 1):
+            if rule in self.suppressions.get(ln, ()):
+                self.used_suppressions.add((ln, rule))
+                return True
+        return False
+
+    # -- source context ------------------------------------------------------
+
+    def context(self, line: int) -> str:
+        if 1 <= line <= len(self.lines):
+            return self.lines[line - 1].strip()
+        return ""
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = getattr(node_or_line, "lineno", node_or_line)
+        return Finding(
+            rule=rule,
+            path=self.relpath,
+            line=line,
+            message=message,
+            context=self.context(line),
+        )
+
+    # -- imports -------------------------------------------------------------
+
+    def eager_imports(self) -> List[Tuple[ast.AST, str, int]]:
+        """Module-execution-time imports as ``(node, target, level)``.
+
+        Imports nested in a function/lambda are *lazy* (the repo's
+        sanctioned escape hatch: the scenario runner reaches
+        ``repro.runtime`` lazily so sweep workers stay jax-free), and
+        imports under an ``if TYPE_CHECKING:`` guard never execute —
+        both are excluded.  Class-body imports run at module import and
+        are included.
+        """
+        if self._eager_imports is None:
+            self._eager_imports = _collect_eager_imports(self.tree)
+        return self._eager_imports
+
+    def resolve_relative(self, target: str, level: int) -> str:
+        """Absolute dotted name for a ``from . import ...`` target."""
+        if level == 0:
+            return target
+        pkg = self.module.split(".")
+        if not self.relpath.endswith("__init__.py"):
+            pkg = pkg[:-1]
+        base = pkg[: len(pkg) - (level - 1)]
+        return ".".join(base + ([target] if target else [])).strip(".")
+
+    def aliases(self) -> Dict[str, str]:
+        """Local name -> absolute dotted origin, from *every* import in
+        the module (lazy ones included: a call through a lazily-imported
+        alias is still a call)."""
+        if self._aliases is None:
+            out: Dict[str, str] = {}
+            for node in ast.walk(self.tree):
+                if isinstance(node, ast.Import):
+                    for a in node.names:
+                        out[a.asname or a.name.split(".")[0]] = (
+                            a.name if a.asname else a.name.split(".")[0]
+                        )
+                elif isinstance(node, ast.ImportFrom):
+                    base = self.resolve_relative(node.module or "", node.level)
+                    for a in node.names:
+                        if a.name == "*":
+                            continue
+                        origin = f"{base}.{a.name}" if base else a.name
+                        out[a.asname or a.name] = origin
+            self._aliases = out
+        return self._aliases
+
+    def call_target(self, call: ast.Call) -> Optional[str]:
+        """Alias-resolved dotted name of a call's callee (``np.random.rand``
+        with ``import numpy as np`` -> ``numpy.random.rand``)."""
+        dotted = dotted_name(call.func)
+        if dotted is None:
+            return None
+        head, _, rest = dotted.partition(".")
+        origin = self.aliases().get(head)
+        if origin is None:
+            return dotted
+        return f"{origin}.{rest}" if rest else origin
+
+
+def dotted_name(node: ast.AST) -> Optional[str]:
+    """``a.b.c`` for a Name/Attribute chain, else ``None``."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def _collect_eager_imports(tree: ast.Module) -> List[Tuple[ast.AST, str, int]]:
+    out: List[Tuple[ast.AST, str, int]] = []
+
+    def is_type_checking_guard(test: ast.AST) -> bool:
+        d = dotted_name(test)
+        return d in ("TYPE_CHECKING", "typing.TYPE_CHECKING")
+
+    def visit(node: ast.AST) -> None:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            return  # lazy territory
+        if isinstance(node, ast.If) and is_type_checking_guard(node.test):
+            for child in node.orelse:
+                visit(child)
+            return
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out.append((node, a.name, 0))
+            return
+        if isinstance(node, ast.ImportFrom):
+            out.append((node, node.module or "", node.level))
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(tree)
+    return out
+
+
+# -- rule registry -----------------------------------------------------------
+
+
+class Rule:
+    """Base class: subclass, set ``id``/``description``, implement
+    ``check(module) -> iterable of Finding``, decorate with
+    :func:`register`."""
+
+    id: str = ""
+    description: str = ""
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+RULES: List[Rule] = []
+
+
+def register(cls):
+    """Class decorator adding a rule (singleton instance) to the registry."""
+    if not cls.id:
+        raise ValueError(f"rule {cls.__name__} has no id")
+    if any(r.id == cls.id for r in RULES):
+        raise ValueError(f"duplicate rule id {cls.id!r}")
+    RULES.append(cls())
+    return cls
+
+
+def rule_ids() -> List[str]:
+    return [r.id for r in RULES] + [UNUSED_SUPPRESSION]
+
+
+# -- engine ------------------------------------------------------------------
+
+
+def lint_module(
+    module: ModuleInfo, only: Optional[Sequence[str]] = None
+) -> List[Finding]:
+    """Run (optionally a subset of) the registry over one module, apply
+    suppression accounting, and append unused-suppression findings."""
+    findings: List[Finding] = []
+    for rule in RULES:
+        if only is not None and rule.id not in only:
+            continue
+        for f in rule.check(module):
+            if not module.is_suppressed(f.line, f.rule):
+                findings.append(f)
+    if only is None or UNUSED_SUPPRESSION in only:
+        known = set(rule_ids())
+        for ln in sorted(module.suppressions):
+            for rid in sorted(module.suppressions[ln]):
+                if (ln, rid) in module.used_suppressions:
+                    continue
+                reason = (
+                    "suppresses nothing"
+                    if rid in known
+                    else f"unknown rule id {rid!r}"
+                )
+                findings.append(
+                    module.finding(
+                        UNUSED_SUPPRESSION,
+                        ln,
+                        f"allow[{rid}] {reason} — remove the comment",
+                    )
+                )
+    return findings
+
+
+def lint_source(
+    source: str,
+    relpath: str = "src/repro/example.py",
+    module: Optional[str] = None,
+    only: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Lint a source string under a synthetic path/module name (the
+    fixture-test entry point)."""
+    return lint_module(ModuleInfo(relpath, source, module), only=only)
+
+
+def collect_files(paths: Sequence[str], root: pathlib.Path) -> List[pathlib.Path]:
+    files: List[pathlib.Path] = []
+    for p in paths:
+        path = root / p
+        if path.is_dir():
+            files.extend(
+                f
+                for f in sorted(path.rglob("*.py"))
+                if "__pycache__" not in f.parts
+            )
+        elif path.suffix == ".py":
+            files.append(path)
+    return files
+
+
+def lint_paths(
+    paths: Sequence[str],
+    root: Optional[pathlib.Path] = None,
+    only: Optional[Sequence[str]] = None,
+) -> List[Finding]:
+    """Lint every ``*.py`` under ``paths`` (files or directories),
+    returning findings sorted by location."""
+    root = root or pathlib.Path.cwd()
+    findings: List[Finding] = []
+    for f in collect_files(paths, root):
+        try:
+            relpath = f.relative_to(root).as_posix()
+        except ValueError:
+            # Outside the repo root (ad-hoc invocation on a scratch tree):
+            # relativize from the nearest src/ marker so module-name
+            # derivation still works, else fall back to the full path.
+            parts = f.as_posix().split("/")
+            relpath = (
+                "/".join(parts[parts.index("src"):])
+                if "src" in parts
+                else f.as_posix().lstrip("/")
+            )
+        source = f.read_text(encoding="utf-8")
+        try:
+            mod = ModuleInfo(relpath, source)
+        except SyntaxError as e:
+            findings.append(
+                Finding("parse-error", relpath, e.lineno or 1, str(e))
+            )
+            continue
+        findings.extend(lint_module(mod, only=only))
+    return sorted(findings, key=lambda f: (f.path, f.line, f.rule))

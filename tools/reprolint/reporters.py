@@ -1,0 +1,45 @@
+"""Finding reporters: human text, machine JSON, GitHub annotations."""
+
+from __future__ import annotations
+
+import json
+from typing import List, Sequence
+
+from .core import Finding
+
+
+def text(findings: Sequence[Finding]) -> str:
+    return "\n".join(str(f) for f in findings)
+
+
+def as_json(findings: Sequence[Finding]) -> str:
+    return json.dumps(
+        [
+            {
+                "rule": f.rule,
+                "path": f.path,
+                "line": f.line,
+                "message": f.message,
+                "context": f.context,
+            }
+            for f in findings
+        ],
+        indent=1,
+    )
+
+
+def github(findings: Sequence[Finding]) -> str:
+    """``::error`` workflow commands — GitHub renders them as inline PR
+    annotations.  Messages must be single-line; newlines are escaped per
+    the workflow-command spec."""
+    lines: List[str] = []
+    for f in findings:
+        msg = f.message.replace("%", "%25").replace("\n", "%0A")
+        lines.append(
+            f"::error file={f.path},line={f.line},"
+            f"title=reprolint[{f.rule}]::{msg}"
+        )
+    return "\n".join(lines)
+
+
+REPORTERS = {"text": text, "json": as_json, "github": github}

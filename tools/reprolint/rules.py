@@ -1,0 +1,453 @@
+"""The reprolint rule set — the machine-checked form of
+``docs/ARCHITECTURE.md``'s invariants.
+
+Each rule is module-scoped (sees one parsed file at a time) and
+declaratively configured in :mod:`tools.reprolint.config`:
+
+========================  ====================================================
+``layer-dag``             upward import in the simulator layer DAG
+``sibling-stack``         simulator module imports the JAX stack eagerly
+``wall-clock``            wall-clock *call* in a deterministic module
+``rng-discipline``        unseeded ``default_rng()`` / ambient RNG state
+``set-iteration``         loop or comprehension iterates a bare set
+``spec-frozen``           ``*Spec``/``*Options`` dataclass not frozen
+``spec-from-dict``        spec dataclass without a ``from_dict``
+``from-dict-strict``      ``from_dict`` body cannot reject unknown keys
+``oracle-retention``      fast path whose documented oracle is gone
+========================  ====================================================
+
+(Plus the engine-level ``unused-suppression`` accounting rule.)
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterable, List, Optional, Set
+
+from . import config
+from .core import Finding, ModuleInfo, Rule, dotted_name, in_scope, register
+
+
+# -- layering ----------------------------------------------------------------
+
+
+def _import_targets(module: ModuleInfo) -> Iterable[tuple]:
+    """(node, absolute dotted target) for every eager import."""
+    for node, target, level in module.eager_imports():
+        base = module.resolve_relative(target, level)
+        if isinstance(node, ast.ImportFrom):
+            # `from X import a` may pull a submodule: attribute the
+            # import to X.a when that has its own layer assignment
+            # (e.g. `from repro.scenario import sweep`), else to X.
+            for a in node.names:
+                if a.name == "*":
+                    yield node, base
+                    continue
+                sub = f"{base}.{a.name}" if base else a.name
+                yield node, (sub if sub in config.LAYER_OF else base)
+        else:
+            yield node, base
+
+
+@register
+class LayerDagRule(Rule):
+    id = "layer-dag"
+    description = (
+        "Dependencies in the simulator stack point downward only: "
+        "fabric <- congestion/schedule <- scenario <- "
+        "sweep/resilience/serving (docs/ARCHITECTURE.md#layer-map)."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        my_layer = config.layer_of(module.module)
+        if my_layer is None:
+            return
+        for node, target in _import_targets(module):
+            target_layer = config.layer_of(target)
+            if target_layer is None or target_layer <= my_layer:
+                continue
+            yield module.finding(
+                self.id,
+                node,
+                f"upward import: {module.module} "
+                f"(layer {my_layer}, {config.LAYER_NAMES[my_layer]!r}) imports "
+                f"{target} (layer {target_layer}, "
+                f"{config.LAYER_NAMES[target_layer]!r}); dependencies must "
+                "point downward — move the import below the consumer or "
+                "make it lazy (function-level)",
+            )
+
+
+@register
+class SiblingStackRule(Rule):
+    id = "sibling-stack"
+    description = (
+        "Simulator layers never import the executable JAX stack "
+        "(repro.models/kernels/runtime/... or jax itself) at module "
+        "level; sweep workers must stay importable without jax."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if config.layer_of(module.module) is None:
+            return
+        banned = config.SIBLING_STACK + config.HEAVY_EXTERNAL
+        for node, target in _import_targets(module):
+            if not in_scope(target, banned):
+                continue
+            yield module.finding(
+                self.id,
+                node,
+                f"simulator module {module.module} imports {target} at module "
+                "level; the JAX stack is a sibling, not a lower layer — "
+                "import it inside the function that needs it",
+            )
+
+
+# -- determinism -------------------------------------------------------------
+
+
+@register
+class WallClockRule(Rule):
+    id = "wall-clock"
+    description = (
+        "No wall-clock reads in deterministic modules: time.time() & co. "
+        "make replays diverge.  References are allowed (an injectable "
+        "`clock=time.time` default parameter is the sanctioned seam); "
+        "only calls are flagged."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.WALL_CLOCK_SCOPE):
+            return
+        if in_scope(module.module, config.WALL_CLOCK_ALLOW):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = module.call_target(node)
+            if target in config.WALL_CLOCK_BANNED:
+                yield module.finding(
+                    self.id,
+                    node,
+                    f"wall-clock call {target}() in deterministic module "
+                    f"{module.module}; inject a clock (default-parameter "
+                    "reference is fine) or take the timestamp as an argument",
+                )
+
+
+@register
+class RngDisciplineRule(Rule):
+    id = "rng-discipline"
+    description = (
+        "Simulator randomness flows through seeded Generators: no "
+        "unseeded np.random.default_rng(), no ambient random.* / "
+        "np.random.* global-state calls."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.DETERMINISM_SCOPE):
+            return
+        if in_scope(module.module, config.DETERMINISM_ALLOW):
+            return
+        for node in ast.walk(module.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            target = module.call_target(node)
+            if target is None:
+                continue
+            msg = self._classify(target, node)
+            if msg:
+                yield module.finding(self.id, node, msg)
+
+    @staticmethod
+    def _classify(target: str, call: ast.Call) -> Optional[str]:
+        if target in ("numpy.random.default_rng", "numpy.random.RandomState"):
+            unseeded = not call.args and not call.keywords
+            if not unseeded and call.args:
+                unseeded = isinstance(call.args[0], ast.Constant) and (
+                    call.args[0].value is None
+                )
+            if unseeded:
+                return (
+                    f"unseeded {target}(): entropy comes from the OS, "
+                    "every run differs — thread an explicit seed"
+                )
+            return None
+        head, _, fn = target.rpartition(".")
+        if head == "numpy.random" and fn in config.AMBIENT_NP_RANDOM:
+            return (
+                f"ambient global-state RNG call {target}(); use a seeded "
+                "np.random.default_rng(seed) Generator instead"
+            )
+        if head == "random" and fn in config.AMBIENT_PY_RANDOM:
+            return (
+                f"ambient global-state RNG call {target}(); use a seeded "
+                "random.Random(seed) instance instead"
+            )
+        return None
+
+
+@register
+class SetIterationRule(Rule):
+    id = "set-iteration"
+    description = (
+        "Loops and comprehensions must not iterate a bare set: str hashes "
+        "are salted per process, so set order varies across workers and "
+        "breaks worker-count invariance.  Wrap in sorted(...)."
+    )
+
+    #: one-level wrappers that preserve the underlying set order
+    _ORDER_PRESERVING = ("list", "tuple", "enumerate", "reversed", "iter")
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.DETERMINISM_SCOPE):
+            return
+        if in_scope(module.module, config.DETERMINISM_ALLOW):
+            return
+        for node in ast.walk(module.tree):
+            iters: List[ast.AST] = []
+            if isinstance(node, (ast.For, ast.AsyncFor)):
+                iters = [node.iter]
+            elif isinstance(
+                node, (ast.ListComp, ast.SetComp, ast.DictComp, ast.GeneratorExp)
+            ):
+                iters = [g.iter for g in node.generators]
+            for it in iters:
+                if self._is_bare_set(it):
+                    yield module.finding(
+                        self.id,
+                        it,
+                        "iteration over a bare set expression: order is "
+                        "process-dependent for str/object elements — wrap "
+                        "in sorted(...) (or suppress where order provably "
+                        "cannot leak into results)",
+                    )
+
+    @classmethod
+    def _is_bare_set(cls, node: ast.AST) -> bool:
+        if isinstance(node, ast.Call):
+            name = dotted_name(node.func)
+            if name in ("set", "frozenset"):
+                return True
+            if name in cls._ORDER_PRESERVING and node.args:
+                return cls._is_bare_set(node.args[0])
+            return False
+        return isinstance(node, (ast.Set, ast.SetComp))
+
+
+# -- spec contracts ----------------------------------------------------------
+
+
+def _dataclass_decorator(cls: ast.ClassDef) -> Optional[ast.AST]:
+    for dec in cls.decorator_list:
+        name = dotted_name(dec.func if isinstance(dec, ast.Call) else dec)
+        if name in ("dataclass", "dataclasses.dataclass"):
+            return dec
+    return None
+
+
+def _is_spec_class(cls: ast.ClassDef) -> bool:
+    return cls.name.endswith(config.SPEC_SUFFIXES) and not cls.name.startswith("_")
+
+
+def _spec_dataclasses(module: ModuleInfo):
+    for node in module.tree.body:
+        if isinstance(node, ast.ClassDef) and _is_spec_class(node):
+            dec = _dataclass_decorator(node)
+            if dec is not None:
+                yield node, dec
+
+
+@register
+class SpecFrozenRule(Rule):
+    id = "spec-frozen"
+    description = (
+        "Every *Spec/*Options dataclass is frozen=True: specs are hashed, "
+        "shared across sweep workers, and replaced — never mutated."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.SPEC_SCOPE):
+            return
+        for cls, dec in _spec_dataclasses(module):
+            frozen = isinstance(dec, ast.Call) and any(
+                kw.arg == "frozen"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is True
+                for kw in dec.keywords
+            )
+            if not frozen:
+                yield module.finding(
+                    self.id,
+                    cls,
+                    f"spec dataclass {cls.name} is not frozen=True; declare "
+                    "@dataclass(frozen=True) so instances are immutable "
+                    "and hashable",
+                )
+
+
+@register
+class SpecFromDictRule(Rule):
+    id = "spec-from-dict"
+    description = (
+        "Every *Spec/*Options dataclass round-trips through a strict "
+        "from_dict (on the class or at module level) so sweep overrides "
+        "and JSON replay cannot silently drop fields."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.SPEC_SCOPE):
+            return
+        module_level = {
+            n.name
+            for n in module.tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+        }
+        for cls, _ in _spec_dataclasses(module):
+            has_method = any(
+                isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and n.name == "from_dict"
+                for n in cls.body
+            )
+            if not has_method and "from_dict" not in module_level:
+                yield module.finding(
+                    self.id,
+                    cls,
+                    f"spec dataclass {cls.name} has no from_dict in "
+                    f"{module.module}; define a strict classmethod "
+                    "from_dict(cls, d) that rejects unknown keys",
+                )
+
+
+@register
+class FromDictStrictRule(Rule):
+    id = "from-dict-strict"
+    description = (
+        "from_dict bodies reject unknown keys (call _reject_unknown_keys "
+        "or raise explicitly): a typo'd sweep override must be an error, "
+        "not a silently-ignored field."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.SPEC_SCOPE):
+            return
+        for node in ast.walk(module.tree):
+            if (
+                isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+                and node.name == "from_dict"
+                and not self._is_strict(node)
+            ):
+                yield module.finding(
+                    self.id,
+                    node,
+                    f"from_dict in {module.module} never rejects unknown "
+                    "keys; call _reject_unknown_keys(cls, d) (or compare "
+                    "against dataclasses.fields and raise)",
+                )
+
+    @staticmethod
+    def _is_strict(fn: ast.AST) -> bool:
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Raise):
+                return True
+            if isinstance(node, ast.Call):
+                name = dotted_name(node.func) or ""
+                if "reject_unknown" in name:
+                    return True
+        return False
+
+
+# -- oracle retention --------------------------------------------------------
+
+
+def _defined_symbols(module: ModuleInfo) -> Set[str]:
+    """Top-level and class-body defs/classes/assignments."""
+    out: Set[str] = set()
+
+    def scan(body) -> None:
+        for node in body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.add(node.name)
+            elif isinstance(node, ast.ClassDef):
+                out.add(node.name)
+                scan(node.body)
+            elif isinstance(node, ast.Assign):
+                for t in node.targets:
+                    if isinstance(t, ast.Name):
+                        out.add(t.id)
+            elif isinstance(node, ast.AnnAssign) and isinstance(
+                node.target, ast.Name
+            ):
+                out.add(node.target.id)
+
+    scan(module.tree.body)
+    return out
+
+
+def _fast_path_defs(module: ModuleInfo):
+    """def/class nodes whose name marks a fast path (contains
+    'incremental' case-insensitively, or ends in '_batched')."""
+
+    def scan(body):
+        for node in body:
+            if isinstance(
+                node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)
+            ):
+                name = node.name
+                if "incremental" in name.lower() or name.endswith("_batched"):
+                    yield node
+                if isinstance(node, ast.ClassDef):
+                    yield from scan(node.body)
+
+    yield from scan(module.tree.body)
+
+
+@register
+class OracleRetentionRule(Rule):
+    id = "oracle-retention"
+    description = (
+        "Fast paths keep their from-scratch oracle selectable forever "
+        "(docs/ARCHITECTURE.md#the-byte-identity-gate-convention): every "
+        "*Incremental*/*_batched def needs an ORACLE_MAP entry, and the "
+        "symbols that entry names must still exist."
+    )
+
+    def check(self, module: ModuleInfo) -> Iterable[Finding]:
+        if not in_scope(module.module, config.ORACLE_SCOPE):
+            return
+        declared = config.ORACLE_MAP.get(module.module, {})
+        defined = _defined_symbols(module)
+        seen_fast: Set[str] = set()
+        for node in _fast_path_defs(module):
+            seen_fast.add(node.name)
+            oracles = declared.get(node.name)
+            if oracles is None:
+                yield module.finding(
+                    self.id,
+                    node,
+                    f"fast path {node.name} has no oracle declared; add an "
+                    "ORACLE_MAP entry in tools/reprolint/config.py naming "
+                    "the retained slow-path symbol(s) it is gated against",
+                )
+                continue
+            for oracle in oracles:
+                if oracle not in defined:
+                    yield module.finding(
+                        self.id,
+                        node,
+                        f"fast path {node.name} declares oracle {oracle!r} "
+                        f"but {module.module} no longer defines it; the "
+                        "slow path must stay selectable (byte-identity "
+                        "gates re-run forever)",
+                    )
+        # a mapped fast path that vanished while its map entry remains is
+        # stale configuration — flag it so the map tracks reality
+        for fast in declared:
+            if fast not in seen_fast and fast not in defined:
+                yield module.finding(
+                    self.id,
+                    1,
+                    f"ORACLE_MAP names fast path {fast!r} but "
+                    f"{module.module} no longer defines it; prune the entry "
+                    "in tools/reprolint/config.py",
+                )
